@@ -1,0 +1,65 @@
+"""Kernel/microbenchmarks: codec throughput, compressed-collective wire
+bytes, and quantizer cost — CPU wall times are NOT TPU projections (the
+Pallas kernels run interpret=True here); the `derived` column carries the
+structural quantities (bytes/ratios) that DO transfer."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.ternary import pack2bit, unpack2bit, packed_nbytes
+from repro.kernels import ops
+from repro.parallel.collectives import compressed_bytes_per_element
+
+
+def codec_roundtrip():
+    rows = []
+    for n in (1 << 16, 1 << 20):
+        it = jnp.asarray(
+            np.random.default_rng(0).integers(-1, 2, size=(n,)), jnp.int8
+        )
+        pack = jax.jit(pack2bit)
+        us = timed(pack, it)
+        rows.append((f"codec_pack_n{n}", round(us, 1),
+                     round(n / packed_nbytes(n), 2)))  # logical compression ×
+        packed = pack(it)
+        unpack = jax.jit(lambda p: unpack2bit(p, n))
+        us = timed(unpack, packed)
+        rows.append((f"codec_unpack_n{n}", round(us, 1), packed_nbytes(n)))
+    return rows
+
+
+def quantizer_cost():
+    rows = []
+    theta = jax.random.normal(jax.random.PRNGKey(0), (1024, 1024))
+    us = timed(lambda t: ops.fttq_apply(t, 0.7, interpret=True)[0], theta)
+    rows.append(("fttq_apply_1Mparam_interpret", round(us, 1), 1024 * 1024))
+    return rows
+
+
+def ternary_matmul_hbm_model():
+    """Structural HBM-traffic advantage of the packed ternary GEMM on TPU:
+    weight bytes read per (K×N) tile at bf16 vs 2-bit packed."""
+    rows = []
+    for (k, n) in ((4096, 4096), (2048, 11008)):
+        bf16 = k * n * 2
+        packed = packed_nbytes(k * n)
+        rows.append((f"ternary_gemm_weight_bytes_k{k}_n{n}", 0.0,
+                     round(bf16 / packed, 2)))
+    return rows
+
+
+def collective_wire_model():
+    """Cross-pod gradient sync: bytes/element, bf16 ring vs ternary gather."""
+    rows = []
+    for pods in (2, 4, 8):
+        ring = 2 * 2 * (pods - 1) / pods          # bf16 all-reduce
+        tern = compressed_bytes_per_element(pods)  # packed all-gather
+        rows.append((f"xpod_sync_bytes_per_elem_P{pods}", 0.0,
+                     round(ring / tern, 2)))       # compression ×
+    return rows

@@ -1,0 +1,84 @@
+"""Shared helpers for the benchmark suite.
+
+The container is offline and CPU-only: MNIST/CIFAR10 are replaced by
+learnable synthetic stand-ins with matching shapes/class counts (see
+data/synthetic.py). Absolute accuracies are dataset-specific; the
+FedAvg-vs-T-FedAvg comparisons and the measured communication volumes are
+the reproduction targets. Scale knobs keep each benchmark in CPU budget;
+EXPERIMENTS.md records them."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import synthetic_classification, partition_iid
+from repro.models.paper_models import init_mlp_mnist, mlp_mnist
+
+
+def timed(fn, *args, repeats: int = 3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6  # µs
+
+
+def mlp_task(seed: int = 0, n_train: int = 2000, n_test: int = 500):
+    x, y, xt, yt = synthetic_classification(
+        jax.random.PRNGKey(seed), n_train, 10, 784, noise=3.0, n_test=n_test
+    )
+    params = init_mlp_mnist(jax.random.PRNGKey(seed + 1))
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+
+    def eval_fn(p):
+        logits = mlp_mnist(p, xt_j)
+        acc = jnp.mean(jnp.argmax(logits, -1) == yt_j)
+        logp = jax.nn.log_softmax(logits, -1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, yt_j[:, None], -1))
+        return float(acc), float(loss)
+
+    return x, y, params, eval_fn
+
+
+def centralized_train(apply_fn, params, x, y, optimizer, steps=150, batch=64,
+                      qat=False, fttq_cfg=None):
+    """Baseline / TTQ rows of Table II (centralized)."""
+    from repro.core import fttq as F
+    from repro.optim import apply_updates
+
+    x = jnp.asarray(x); y = jnp.asarray(y)
+    opt_state = optimizer.init(params)
+    wq = F.init_wq_tree(params, fttq_cfg) if qat else None
+
+    def ce(p, xb, yb):
+        logits = apply_fn(p, xb)
+        logp = jax.nn.log_softmax(logits, -1)
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], -1))
+
+    @jax.jit
+    def step(p, w, s, xb, yb):
+        if qat:
+            def lf(p_, w_):
+                return ce(F.quantize_tree(p_, w_, fttq_cfg), xb, yb)
+            loss, (gp, gw) = jax.value_and_grad(lf, (0, 1))(p, w)
+            w = jax.tree_util.tree_map(
+                lambda a, g, pp: None if a is None else a - 0.05 * g / float(pp.size),
+                w, gw, p, is_leaf=lambda z: z is None)
+        else:
+            loss, gp = jax.value_and_grad(lambda p_: ce(p_, xb, yb))(p)
+        upd, s = optimizer.update(gp, s, p)
+        p = apply_updates(p, upd)
+        return p, w, s, loss
+
+    n = len(y)
+    for i in range(steps):
+        lo = (i * batch) % max(n - batch, 1)
+        params, wq, opt_state, _ = step(params, wq, opt_state,
+                                        x[lo:lo + batch], y[lo:lo + batch])
+    if qat:
+        params = F.quantize_tree(params, wq, fttq_cfg)
+    return params

@@ -1,0 +1,125 @@
+"""Roofline report (deliverable g): reads artifacts/dryrun/*.json and emits
+the per-(arch × shape × mesh) three-term table + bottleneck + useful-flops
+ratio, in markdown (for EXPERIMENTS.md) or CSV.
+
+    PYTHONPATH=src python -m benchmarks.roofline            # markdown table
+    PYTHONPATH=src python -m benchmarks.roofline --csv
+    PYTHONPATH=src python -m benchmarks.roofline --compare baseline pod_compressed
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(variant_filter=None):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        d = json.load(open(p))
+        if d.get("status") != "ok":
+            rows.append(d)
+            continue
+        if variant_filter and d.get("variant", "baseline") not in variant_filter:
+            continue
+        rows.append(d)
+    return rows
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}µs"
+
+
+def markdown(rows):
+    out = [
+        "| arch | shape | mesh | variant | compute | memory | collective "
+        "| bottleneck | peakGB | useful | MFU≤ |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in rows:
+        if d.get("status") != "ok":
+            out.append(
+                f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                f"{d.get('variant','-')} | ERROR: {d.get('error','')[:40]} "
+                "| | | | | | |"
+            )
+            continue
+        r = d["roofline"]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['variant']} "
+            f"| {fmt_s(r['compute_term_s'])} | {fmt_s(r['memory_term_s'])} "
+            f"| {fmt_s(r['collective_term_s'])} | **{r['bottleneck']}** "
+            f"| {d['memory']['peak_estimate_gb']} "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {r['mfu_upper_bound']:.4f} |"
+        )
+    return "\n".join(out)
+
+
+def csv(rows):
+    out = ["arch,shape,mesh,variant,compute_s,memory_s,collective_s,"
+           "bottleneck,peak_gb,useful_ratio,mfu_upper_bound"]
+    for d in rows:
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        out.append(
+            f"{d['arch']},{d['shape']},{d['mesh']},{d['variant']},"
+            f"{r['compute_term_s']:.6g},{r['memory_term_s']:.6g},"
+            f"{r['collective_term_s']:.6g},{r['bottleneck']},"
+            f"{d['memory']['peak_estimate_gb']},{r['useful_flops_ratio']:.4f},"
+            f"{r['mfu_upper_bound']:.5f}"
+        )
+    return "\n".join(out)
+
+
+def compare(variants):
+    """Side-by-side of the same cells across variants (§Perf evidence)."""
+    by_cell = {}
+    for d in load():
+        if d.get("status") != "ok":
+            continue
+        key = (d["arch"], d["shape"], d["mesh"])
+        by_cell.setdefault(key, {})[d["variant"]] = d
+    lines = ["| cell | variant | compute | memory | collective | bound | Δbound |",
+             "|---|---|---|---|---|---|---|"]
+    for key, vs in sorted(by_cell.items()):
+        if not all(v in vs for v in variants):
+            continue
+        base = vs[variants[0]]["roofline"]["step_time_lower_bound_s"]
+        for v in variants:
+            r = vs[v]["roofline"]
+            delta = (r["step_time_lower_bound_s"] - base) / base * 100
+            lines.append(
+                f"| {'×'.join(key)} | {v} | {fmt_s(r['compute_term_s'])} "
+                f"| {fmt_s(r['memory_term_s'])} | {fmt_s(r['collective_term_s'])} "
+                f"| {fmt_s(r['step_time_lower_bound_s'])} | {delta:+.1f}% |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--compare", nargs="+")
+    args = ap.parse_args()
+    if args.compare:
+        print(compare(args.compare))
+    elif args.csv:
+        print(csv(load(("baseline",))))
+    else:
+        print(markdown(load(("baseline",))))
+
+
+if __name__ == "__main__":
+    main()

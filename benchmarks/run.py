@@ -1,0 +1,59 @@
+"""Benchmark harness — one section per paper table/figure. Prints
+``name,us_per_call,derived`` CSV (derived = accuracy / ratio / bytes as
+appropriate per row; see each bench's docstring).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only table4,codec
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import bench_kernels, bench_tables
+
+SECTIONS = {
+    "table2": bench_tables.table2_iid_accuracy,
+    "table3": bench_tables.table3_noniid,
+    "table4": bench_tables.table4_comm_costs,
+    "fig7": bench_tables.fig7_batch_sizes,
+    "fig10": bench_tables.fig10_participation,
+    "fig11": bench_tables.fig11_unbalanced,
+    "sparsity": bench_tables.sparsity_report,
+    "codec": bench_kernels.codec_roundtrip,
+    "quantizer": bench_kernels.quantizer_cost,
+    "gemm_model": bench_kernels.ternary_matmul_hbm_model,
+    "xpod_model": bench_kernels.collective_wire_model,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in SECTIONS.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for row in fn():
+                print(",".join(str(v) for v in row), flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name}_ERROR,0,{type(e).__name__}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# section {name} took {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr, flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

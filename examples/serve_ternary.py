@@ -1,0 +1,26 @@
+"""Serve a ternary-deployed LM with batched requests (prefill + decode) —
+the paper's edge-inference story (2-bit weights, §III.B) as a serving stack.
+
+    PYTHONPATH=src python examples/serve_ternary.py [--arch yi-9b]
+"""
+
+import argparse
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="olmo-1b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--gen", type=int, default=16)
+args = ap.parse_args()
+
+cmd = [sys.executable, "-m", "repro.launch.serve",
+       "--arch", args.arch, "--reduced", "--ternary",
+       "--batch", str(args.batch), "--gen", str(args.gen)]
+env = dict(os.environ)
+env["PYTHONPATH"] = os.path.join(REPO, "src")
+print("running:", " ".join(cmd))
+sys.exit(subprocess.call(cmd, env=env))

@@ -1,0 +1,13 @@
+"""repro — production-grade JAX framework reproducing and extending
+"Ternary Compression for Communication-Efficient Federated Learning"
+(Xu, Du, Cheng, He, Jin — IEEE TNNLS 2020).
+
+Public surface:
+    repro.core      — FTTQ quantizer, ternary codec, T-FedAvg protocol
+    repro.models    — architecture zoo (dense / MoE / SSM / hybrid / VLM / audio)
+    repro.configs   — named architecture configs + input-shape suites
+    repro.parallel  — sharding rules + ternary-compressed collectives
+    repro.launch    — production mesh, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

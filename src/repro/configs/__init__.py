@@ -1,0 +1,54 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)``
+plus the input-shape suite (see shapes.py).
+
+Ten assigned architectures + the paper's own two models (MLP-MNIST and
+ResNet18*-CIFAR10, used by the federated benchmarks)."""
+
+from __future__ import annotations
+
+from repro.configs import (
+    deepseek_moe_16b,
+    gemma3_4b,
+    granite_20b,
+    hubert_xlarge,
+    llama32_vision_11b,
+    mamba2_370m,
+    olmo_1b,
+    qwen3_moe_30b,
+    yi_9b,
+    zamba2_1p2b,
+)
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, input_specs
+
+_MODULES = {
+    granite_20b.ARCH_ID: granite_20b,
+    gemma3_4b.ARCH_ID: gemma3_4b,
+    olmo_1b.ARCH_ID: olmo_1b,
+    yi_9b.ARCH_ID: yi_9b,
+    zamba2_1p2b.ARCH_ID: zamba2_1p2b,
+    mamba2_370m.ARCH_ID: mamba2_370m,
+    llama32_vision_11b.ARCH_ID: llama32_vision_11b,
+    qwen3_moe_30b.ARCH_ID: qwen3_moe_30b,
+    deepseek_moe_16b.ARCH_ID: deepseek_moe_16b,
+    hubert_xlarge.ARCH_ID: hubert_xlarge,
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch_id: str, **overrides):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _MODULES[arch_id].config(**overrides)
+
+
+def get_reduced(arch_id: str, **overrides):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _MODULES[arch_id].reduced(**overrides)
+
+
+__all__ = [
+    "ARCH_IDS", "get_config", "get_reduced",
+    "SHAPES", "ShapeSpec", "applicable", "input_specs",
+]

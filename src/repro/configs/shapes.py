@@ -1,0 +1,94 @@
+"""Assigned input-shape suite and (arch × shape) applicability rules.
+
+LM transformer shapes are seq_len × global_batch. ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len), NOT
+``train_step``. Skips (recorded in DESIGN.md §Arch-applicability):
+  - long_500k needs sub-quadratic attention → runs only for SSM / hybrid /
+    sliding-window archs;
+  - encoder-only archs (hubert) have no decode step → decode shapes skipped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runnable?, reason-if-skipped) for an (arch × shape) cell."""
+    spec = SHAPES[shape_name]
+    if spec.kind == "decode" and not cfg.causal:
+        return False, "encoder-only arch has no decode step"
+    if spec.kind == "prefill" and not cfg.causal:
+        return True, ""  # encoder forward
+    if shape_name == "long_500k":
+        sub_quadratic = cfg.family in ("ssm", "hybrid") or cfg.sliding_window > 0
+        if not sub_quadratic:
+            return False, "pure full-attention arch: 500k context needs sub-quadratic attention"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    No device allocation — suitable for .lower()/.compile() dry-runs.
+    Token dtype int32; embedding stand-ins use cfg.compute_dtype.
+    """
+    spec = SHAPES[shape_name]
+    b, s = spec.global_batch, spec.seq_len
+    cdt = cfg.cdtype()
+    i32 = jnp.int32
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    specs: dict = {}
+    if spec.kind == "train":
+        if cfg.family == "audio":
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt)
+        else:
+            specs["tokens"] = tok((b, s))
+        specs["labels"] = tok((b, s))
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), cdt
+            )
+    elif spec.kind == "prefill":
+        if cfg.family == "audio":
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt)
+        else:
+            specs["tokens"] = tok((b, s))
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), cdt
+            )
+    else:  # decode
+        specs["tokens"] = tok((b, 1))
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, b, s, cdt))
+        specs["cache"] = cache_shapes
+        specs["pos"] = jax.ShapeDtypeStruct((), i32)
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), cdt
+            )
+    return specs

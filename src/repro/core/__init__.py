@@ -1,0 +1,39 @@
+"""Core contribution of the paper: FTTQ quantization + T-FedAvg protocol."""
+
+from repro.core.fttq import (
+    FTTQConfig,
+    fttq_quantize,
+    scale_layer,
+    fttq_threshold,
+    ternarize,
+    init_wq,
+    quantize_tree,
+    is_quantizable,
+)
+from repro.core.ternary import (
+    pack2bit,
+    unpack2bit,
+    packed_nbytes,
+    encode_ternary,
+    decode_ternary,
+    TernaryTensor,
+)
+from repro.core.tfedavg import (
+    TernaryUpdate,
+    client_update_payload,
+    server_aggregate,
+    server_requantize,
+    tfedavg_round_bytes,
+    fedavg_round_bytes,
+)
+from repro.core.compression import CompressionSpec, compress_pytree, decompress_pytree
+
+__all__ = [
+    "FTTQConfig", "fttq_quantize", "scale_layer", "fttq_threshold", "ternarize",
+    "init_wq", "quantize_tree", "is_quantizable",
+    "pack2bit", "unpack2bit", "packed_nbytes", "encode_ternary", "decode_ternary",
+    "TernaryTensor",
+    "TernaryUpdate", "client_update_payload", "server_aggregate",
+    "server_requantize", "tfedavg_round_bytes", "fedavg_round_bytes",
+    "CompressionSpec", "compress_pytree", "decompress_pytree",
+]

@@ -1,0 +1,113 @@
+"""Compression API shared by checkpoints, collectives, and the fed protocol.
+
+``CompressionSpec`` selects the codec; ``compress_pytree`` /
+``decompress_pytree`` apply it leaf-wise. Two codecs:
+
+  - "none":    identity (fp32/bf16 wire) — the FedAvg baseline.
+  - "ternary": FTTQ wire format (TernaryTensor: 2-bit codes + scale) — the
+    paper's codec. Optional error feedback keeps the quantization residual
+    locally so repeated compression of a drifting signal is unbiased in the
+    long run (beyond-paper; used by the gradient-compression path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fttq
+from repro.core.ternary import TernaryTensor, encode_ternary
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    kind: str = "ternary"  # "none" | "ternary"
+    fttq: fttq.FTTQConfig = dataclasses.field(default_factory=fttq.FTTQConfig)
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("none", "ternary"):
+            raise ValueError(f"unknown compression kind {self.kind!r}")
+
+
+def compress_pytree(
+    tree: Pytree, spec: CompressionSpec, residual: Pytree | None = None
+) -> tuple[Pytree, Pytree | None]:
+    """Compress each quantizable leaf; returns (wire_tree, new_residual).
+
+    With error feedback, the input is first corrected by the carried residual
+    and the new residual is (corrected − dequant(wire)).
+    """
+    if spec.kind == "none":
+        return tree, residual
+
+    cfg = spec.fttq
+
+    def one(path, leaf, res):
+        if not fttq.is_quantizable(path, leaf, cfg):
+            return leaf, jnp.zeros_like(leaf) if spec.error_feedback else None
+        x = leaf + res if (spec.error_feedback and res is not None) else leaf
+        ts = fttq.scale_layer(x)
+        d = fttq.fttq_threshold(ts, cfg.t_k, cfg.threshold_rule)
+        i_t = fttq.ternarize(ts, d)
+        absw = jnp.abs(ts)
+        sel = absw > d
+        wq = jnp.sum(jnp.where(sel, absw, 0.0)) / (jnp.sum(sel) + 1e-8)
+        wq = wq * (jnp.max(jnp.abs(x)) + 1e-8)  # undo layer scaling on the wire
+        wire = encode_ternary(i_t, wq.astype(x.dtype), dtype=str(x.dtype))
+        new_res = (x - wire.dequantize()) if spec.error_feedback else None
+        return wire, new_res
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    treedef = jax.tree_util.tree_structure(tree)
+    res_leaves = (
+        jax.tree_util.tree_leaves(residual)
+        if residual is not None
+        else [None] * len(paths_leaves)
+    )
+    out_wire, out_res = [], []
+    for (path, leaf), res in zip(paths_leaves, res_leaves):
+        w, r = one(path, leaf, res)
+        out_wire.append(w)
+        out_res.append(r)
+    wire_tree = jax.tree_util.tree_unflatten(treedef, out_wire)
+    res_tree = (
+        jax.tree_util.tree_unflatten(treedef, out_res)
+        if spec.error_feedback
+        else None
+    )
+    return wire_tree, res_tree
+
+
+def decompress_pytree(wire_tree: Pytree, spec: CompressionSpec) -> Pytree:
+    if spec.kind == "none":
+        return wire_tree
+
+    def one(leaf):
+        if isinstance(leaf, TernaryTensor):
+            return leaf.dequantize()
+        return leaf
+
+    return jax.tree_util.tree_map(
+        one, wire_tree, is_leaf=lambda x: isinstance(x, TernaryTensor)
+    )
+
+
+def wire_nbytes(wire_tree: Pytree) -> int:
+    """Actual bytes of a compressed pytree on the wire."""
+    import numpy as np
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+        wire_tree, is_leaf=lambda x: isinstance(x, TernaryTensor)
+    ):
+        if isinstance(leaf, TernaryTensor):
+            total += leaf.nbytes_wire()
+        else:
+            total += leaf.size * np.dtype(leaf.dtype).itemsize
+    return total

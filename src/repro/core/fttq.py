@@ -1,0 +1,250 @@
+"""Federated Trained Ternary Quantization (FTTQ) — paper §III.A, Algorithm 1.
+
+The quantizer pipeline per layer (eqs. 6-12 of the paper):
+
+    θ_s  = g(θ)                    layer-wise scale to [-1, 1]          (eq. 6)
+    Δ    = T_k / m · Σ_i |θ_s_i|   sparsity-aware threshold             (eq. 8)
+    mask = ε(|θ_s| − Δ)            step function                        (eq. 10)
+    I_t  = sign(mask ⊙ θ_s)        ternary codes in {-1, 0, +1}         (eq. 11)
+    θ_t  = w_q · I_t               single TRAINED scale factor          (eq. 12)
+
+Backward pass (Algorithm 1 + the TTQ rules the paper adopts from Zhu et al.):
+
+    ∂J/∂w_q = Σ_i ∂J/∂θ_t_i · I_t_i      (generalizes the paper's Σ_{i∈I_p}
+                                          rule to the single-factor case: the
+                                          factor multiplies BOTH signs)
+    ∂J/∂θ_i = ∂J/∂θ_t_i · (w_q  if I_t_i ≠ 0 else 1)   straight-through,
+              scaled by the factor on quantized positions (TTQ latent rule).
+
+All functions are pure and jit/vmap/pjit-compatible. ``quantize_tree`` applies
+the quantizer across a parameter pytree, quantizing only "weight-like" leaves
+(ndim ≥ 2) and leaving biases / norms / scalars full precision — matching the
+paper's practice (and TTQ/TWN practice of keeping sensitive layers FP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class FTTQConfig:
+    """Hyper-parameters of the FTTQ quantizer.
+
+    Attributes:
+      t_k: threshold hyper-parameter T_k of eq. (8). The paper notes the
+        mean-rule threshold "will turn into the optimal solution proposed in
+        [TWN] if we set the value of T_k to 0.7" — so 0.7 is the default.
+      threshold_rule: "mean" → eq. (8) (default, sparsity-aware);
+        "max" → eq. (7) (TTQ heuristic Δ = t·max|θ_s|).
+      server_delta: fixed re-quantization threshold used by the server on the
+        aggregated global model (paper §III.B: default 0.05).
+      quantize_embed: also ternarize embedding / unembedding tables. Off by
+        default (TTQ keeps first/last layers FP).
+      exclude_patterns: regexes over the pytree key-path; matching leaves stay
+        full precision even if weight-like.
+      min_ndim: leaves with fewer dims are never quantized (biases, norms).
+    """
+
+    t_k: float = 0.7
+    threshold_rule: str = "mean"
+    server_delta: float = 0.05
+    quantize_embed: bool = False
+    exclude_patterns: tuple[str, ...] = ()
+    min_ndim: int = 2
+
+
+def scale_layer(theta: jax.Array) -> jax.Array:
+    """g(θ): scale one layer's weights into [-1, 1] (eq. 6), layer-wise.
+
+    Layer-wise (not global) scaling avoids the magnitude-imbalance problem the
+    paper points out (§III.A): scaling the whole network pushes most weights
+    of small-magnitude layers to zero.
+    """
+    denom = jnp.max(jnp.abs(theta)) + _EPS
+    return theta / denom
+
+
+def fttq_threshold(theta_s: jax.Array, t_k: float, rule: str = "mean") -> jax.Array:
+    """Δ for one layer. rule="mean" is eq. (8); rule="max" is eq. (7)."""
+    if rule == "mean":
+        return t_k * jnp.mean(jnp.abs(theta_s))
+    if rule == "max":
+        return t_k * jnp.max(jnp.abs(theta_s))
+    raise ValueError(f"unknown threshold rule: {rule!r}")
+
+
+def ternarize(theta_s: jax.Array, delta: jax.Array) -> jax.Array:
+    """I_t = sign(ε(|θ_s| − Δ) ⊙ θ_s) ∈ {-1, 0, +1} (eqs. 10-11)."""
+    mask = (jnp.abs(theta_s) > delta).astype(theta_s.dtype)
+    return jnp.sign(theta_s) * mask
+
+
+def init_wq(theta: jax.Array, cfg: FTTQConfig) -> jax.Array:
+    """Initialize the trained factor w_q at its Prop-4.1 optimum.
+
+    w* = mean(|θ_i| : i ∈ I_p ∪ I_n) — the converged value of both TTQ
+    factors (eq. 20) expressed in ORIGINAL (unscaled) units, because the
+    forward pass uses θ_t = w_q · I_t directly: training starts at the
+    analytic L2-optimal reconstruction instead of an arbitrary constant.
+    """
+    theta_s = scale_layer(theta)
+    delta = fttq_threshold(theta_s, cfg.t_k, cfg.threshold_rule)
+    sel = jnp.abs(theta_s) > delta
+    absw = jnp.abs(theta)
+    num = jnp.sum(jnp.where(sel, absw, 0.0))
+    den = jnp.sum(sel) + _EPS
+    return (num / den).astype(theta.dtype)
+
+
+# --------------------------------------------------------------------------
+# The quantizer with straight-through-estimator backward (Algorithm 1).
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def fttq_quantize(theta: jax.Array, w_q: jax.Array, t_k: float) -> jax.Array:
+    """θ_t = w_q · ternarize(g(θ), Δ(g(θ))).  Differentiable via STE."""
+    theta_s = scale_layer(theta)
+    delta = fttq_threshold(theta_s, t_k)
+    i_t = ternarize(theta_s, delta)
+    return w_q * i_t
+
+
+def _fttq_fwd(theta, w_q, t_k):
+    theta_s = scale_layer(theta)
+    delta = fttq_threshold(theta_s, t_k)
+    i_t = ternarize(theta_s, delta)
+    return w_q * i_t, (i_t, w_q)
+
+
+def _fttq_bwd(res, g):
+    i_t, w_q = res
+    # ∂J/∂w_q = Σ g · I_t  (paper Alg. 1 generalized to one factor).
+    g_wq = jnp.sum(g * i_t).astype(w_q.dtype)
+    # Latent full-precision gradient: STE scaled by w_q on quantized positions
+    # (TTQ rule [Zhu et al. 2016] that the paper adopts), identity elsewhere.
+    scale = jnp.where(i_t != 0, w_q, jnp.ones_like(w_q))
+    g_theta = g * scale
+    return g_theta, g_wq, None
+
+
+fttq_quantize.defvjp(_fttq_fwd, _fttq_bwd)
+
+
+# --------------------------------------------------------------------------
+# Pytree application.
+# --------------------------------------------------------------------------
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def is_quantizable(path, leaf: jax.Array, cfg: FTTQConfig) -> bool:
+    """Policy: quantize weight-like leaves only.
+
+    - ndim ≥ cfg.min_ndim (matrices / conv kernels / stacked scan weights),
+    - not an excluded path (norm/bias/embedding unless quantize_embed),
+    - floating point.
+    """
+    if not hasattr(leaf, "ndim") or leaf.ndim < cfg.min_ndim:
+        return False
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    name = _path_str(path).lower()
+    builtin_excludes = ["norm", "bias", "scale", "ln_", "layernorm", "a_log", "dt_"]
+    if not cfg.quantize_embed:
+        builtin_excludes += ["embed", "lm_head", "unembed", "patch_proj", "frontend"]
+    for pat in builtin_excludes:
+        if pat in name:
+            return False
+    for pat in cfg.exclude_patterns:
+        if re.search(pat, name):
+            return False
+    return True
+
+
+def init_wq_tree(params: Pytree, cfg: FTTQConfig) -> Pytree:
+    """One w_q scalar per quantizable leaf; None (pruned) elsewhere.
+
+    For STACKED scan layers (leading dim = layer index, ndim ≥ 3) the factor is
+    per-layer: shape (num_layers, 1, 1, ...) broadcastable — each scanned layer
+    gets its own trained factor, exactly as the paper trains one per layer.
+    """
+
+    def make(path, leaf):
+        if not is_quantizable(path, leaf, cfg):
+            return None
+        if leaf.ndim >= 3:
+            # stacked layers: per-leading-index factor.
+            per_layer = jax.vmap(lambda t: init_wq(t, cfg))(leaf)
+            return per_layer.reshape(leaf.shape[0], *([1] * (leaf.ndim - 1)))
+        return init_wq(leaf, cfg)
+
+    return jax.tree_util.tree_map_with_path(make, params)
+
+
+def quantize_tree(params: Pytree, wq_tree: Pytree, cfg: FTTQConfig) -> Pytree:
+    """Apply FTTQ to every quantizable leaf (QAT forward); rest pass through.
+
+    ``wq_tree`` must be structure-matched to ``params`` with None at
+    non-quantized leaves (as produced by ``init_wq_tree``).
+    """
+
+    def one(path, leaf, wq):
+        if wq is None:
+            return leaf
+        if leaf.ndim >= 3 and wq.ndim == leaf.ndim:
+            # stacked scan weights: vmap the quantizer over the layer dim.
+            return jax.vmap(lambda t, w: fttq_quantize(t, w, cfg.t_k))(
+                leaf, wq.reshape(leaf.shape[0])
+            )
+        return fttq_quantize(leaf, wq, cfg.t_k)
+
+    return jax.tree_util.tree_map_with_path(
+        one, params, wq_tree, is_leaf=lambda x: x is None
+    )
+
+
+def ternary_stats(params: Pytree, cfg: FTTQConfig) -> dict:
+    """Diagnostics: per-tree sparsity and quantized fraction of parameters."""
+    total = 0
+    quantized = 0
+    zeros = 0
+
+    def visit(path, leaf):
+        nonlocal total, quantized, zeros
+        n = leaf.size
+        total += n
+        if is_quantizable(path, leaf, cfg):
+            quantized += n
+            ts = scale_layer(leaf)
+            d = fttq_threshold(ts, cfg.t_k, cfg.threshold_rule)
+            zeros += int(jnp.sum(jnp.abs(ts) <= d))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return {
+        "total_params": total,
+        "quantized_params": quantized,
+        "quantized_fraction": quantized / max(total, 1),
+        "ternary_sparsity": zeros / max(quantized, 1),
+    }

@@ -1,0 +1,115 @@
+"""Ternary wire format: 2-bit packed codes (4 weights per byte).
+
+TPUs have no 2-bit dtype, so the wire / HBM format is uint8 with 4 ternary
+codes per byte and the compute format is int8 {-1, 0, +1}.
+
+Code mapping: code = I_t + 1 ∈ {0, 1, 2}; value 3 is unused (reserved).
+Packing layout (little-endian within the byte):
+
+    byte = c0 | c1 << 2 | c2 << 4 | c3 << 6
+
+These jnp implementations are the REFERENCE path; ``repro.kernels`` carries
+the Pallas TPU kernels for the same ops (validated against these).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CODES_PER_BYTE = 4
+
+
+def packed_nbytes(n_elements: int) -> int:
+    """Bytes needed to store n ternary values at 2 bits each."""
+    return (n_elements + CODES_PER_BYTE - 1) // CODES_PER_BYTE
+
+
+def pack2bit(i_t: jax.Array) -> jax.Array:
+    """Pack a flat ternary array {-1,0,+1} into uint8, 4 codes per byte.
+
+    Input of any shape is flattened; output is 1-D uint8 of
+    ``packed_nbytes(i_t.size)``.
+    """
+    flat = i_t.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % CODES_PER_BYTE
+    codes = (flat.astype(jnp.int8) + 1).astype(jnp.uint8)
+    if pad:
+        codes = jnp.concatenate([codes, jnp.zeros((pad,), jnp.uint8)])
+    codes = codes.reshape(-1, CODES_PER_BYTE)
+    out = (
+        codes[:, 0]
+        | (codes[:, 1] << 2)
+        | (codes[:, 2] << 4)
+        | (codes[:, 3] << 6)
+    )
+    return out.astype(jnp.uint8)
+
+
+def unpack2bit(packed: jax.Array, n_elements: int, dtype=jnp.int8) -> jax.Array:
+    """Inverse of ``pack2bit``: uint8 bytes → flat ternary array of n values."""
+    shifts = jnp.array([0, 2, 4, 6], jnp.uint8)
+    codes = (packed[:, None] >> shifts) & 0x3
+    vals = codes.astype(jnp.int8) - 1
+    return vals.reshape(-1)[:n_elements].astype(dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TernaryTensor:
+    """A ternary-quantized tensor in wire format.
+
+    Fields:
+      packed: uint8 1-D, 4 codes/byte.
+      w_q:    the trained layer scale (scalar or per-layer broadcast shape).
+      shape:  logical (unpacked) shape — static aux data.
+      dtype:  logical dtype name for dequantization — static aux data.
+    """
+
+    packed: jax.Array
+    w_q: jax.Array
+    shape: tuple
+    dtype: str = "float32"
+
+    def tree_flatten(self):
+        return (self.packed, self.w_q), (tuple(self.shape), self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, w_q = children
+        shape, dtype = aux
+        return cls(packed=packed, w_q=w_q, shape=shape, dtype=dtype)
+
+    @property
+    def n_elements(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    def nbytes_wire(self) -> int:
+        """Bytes on the wire: packed codes + one fp32 scale."""
+        return int(self.packed.size) + 4
+
+    def dequantize(self) -> jax.Array:
+        it = unpack2bit(self.packed, self.n_elements, jnp.int8)
+        out = it.astype(self.dtype).reshape(self.shape)
+        return out * jnp.asarray(self.w_q, self.dtype)
+
+    def ternary(self) -> jax.Array:
+        """Unpacked codes {-1,0,+1} at logical shape (int8)."""
+        return unpack2bit(self.packed, self.n_elements, jnp.int8).reshape(self.shape)
+
+
+def encode_ternary(i_t: jax.Array, w_q: jax.Array, dtype: str = "float32") -> TernaryTensor:
+    """Wrap ternary codes + scale into wire format."""
+    return TernaryTensor(
+        packed=pack2bit(i_t), w_q=w_q, shape=tuple(i_t.shape), dtype=dtype
+    )
+
+
+def decode_ternary(t: TernaryTensor) -> jax.Array:
+    return t.dequantize()

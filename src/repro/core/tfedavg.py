@@ -1,0 +1,208 @@
+"""T-FedAvg — Ternary Federated Averaging protocol (paper §III.B, Algorithm 2).
+
+Round structure:
+  1. UPSTREAM  — each selected client k trains locally with FTTQ (QAT) and
+     uploads the wire payload {I_t packed 2-bit, w_q per layer} — NOT the
+     full-precision update. Non-quantized leaves (biases, norms) ship FP32.
+  2. AGGREGATE — the server rebuilds each client model θ_k^t = w_q·I_t and
+     forms the dataset-size-weighted average
+         θ_{r+1} = Σ_k |D_k| / Σ|D_k| · θ_k^t .
+  3. DOWNSTREAM — the server re-quantizes the aggregated model with a FIXED
+     threshold Δ = server_delta (default 0.05 per the paper) on the layer-wise
+     scaled weights and broadcasts ternary codes + the server scale factor.
+
+Byte accounting mirrors the paper's Table IV: FedAvg ships 32-bit weights both
+ways; T-FedAvg ships 2 bits/weight + one fp32 scale per layer both ways.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fttq
+from repro.core.ternary import TernaryTensor, encode_ternary, packed_nbytes
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class TernaryUpdate:
+    """A client's upstream payload.
+
+    payload: pytree matching the model params; quantized leaves are
+      TernaryTensor, non-quantized leaves are raw arrays (fp32 wire).
+    n_samples: |D_k| — the aggregation weight.
+    client_id: bookkeeping.
+    """
+
+    payload: Pytree
+    n_samples: int
+    client_id: int = -1
+
+    def nbytes_upstream(self) -> int:
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(
+            self.payload, is_leaf=lambda x: isinstance(x, TernaryTensor)
+        ):
+            if isinstance(leaf, TernaryTensor):
+                total += leaf.nbytes_wire()
+            else:
+                total += leaf.size * np.dtype(leaf.dtype).itemsize
+        return total
+
+
+def client_update_payload(
+    params: Pytree, wq_tree: Pytree, cfg: fttq.FTTQConfig
+) -> Pytree:
+    """Build the upstream wire payload from trained latent params + w_q tree.
+
+    Quantizable leaves → TernaryTensor(I_t, w_q); others pass through (fp32).
+    """
+
+    def one(path, leaf, wq):
+        if wq is None:
+            return leaf
+        if leaf.ndim >= 3 and hasattr(wq, "ndim") and wq.ndim == leaf.ndim:
+            # stacked scan layers: ternarize per layer, keep per-layer w_q.
+            def tern(t):
+                ts = fttq.scale_layer(t)
+                d = fttq.fttq_threshold(ts, cfg.t_k, cfg.threshold_rule)
+                return fttq.ternarize(ts, d)
+
+            i_t = jax.vmap(tern)(leaf)
+            return encode_ternary(i_t, wq, dtype=str(leaf.dtype))
+        ts = fttq.scale_layer(leaf)
+        d = fttq.fttq_threshold(ts, cfg.t_k, cfg.threshold_rule)
+        i_t = fttq.ternarize(ts, d)
+        return encode_ternary(i_t, wq, dtype=str(leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(
+        one, params, wq_tree, is_leaf=lambda x: x is None
+    )
+
+
+def _dequant_payload(payload: Pytree) -> Pytree:
+    def one(leaf):
+        if isinstance(leaf, TernaryTensor):
+            return leaf.dequantize()
+        return leaf
+
+    return jax.tree_util.tree_map(
+        one, payload, is_leaf=lambda x: isinstance(x, TernaryTensor)
+    )
+
+
+def server_aggregate(updates: list[TernaryUpdate]) -> Pytree:
+    """θ_{r+1} = Σ_k |D_k|/Σ|D_k| · dequant(payload_k)  (Algorithm 2)."""
+    if not updates:
+        raise ValueError("server_aggregate: no client updates survived the round")
+    total = float(sum(u.n_samples for u in updates))
+    weights = [u.n_samples / total for u in updates]
+    dequant = [_dequant_payload(u.payload) for u in updates]
+
+    def wsum(*leaves):
+        acc = leaves[0] * weights[0]
+        for w, l in zip(weights[1:], leaves[1:]):
+            acc = acc + w * l
+        return acc
+
+    return jax.tree_util.tree_map(wsum, *dequant)
+
+
+def server_requantize(
+    global_params: Pytree, cfg: fttq.FTTQConfig, wq_tree: Pytree | None = None
+) -> Pytree:
+    """Downstream compression: re-quantize the aggregated global model.
+
+    Uses the FIXED server threshold Δ = cfg.server_delta on layer-wise scaled
+    weights (Algorithm 2's server step), with the downstream scale set to the
+    Prop-4.1 optimum mean(|θ_s| over I_p) so the broadcast model is the best
+    L2 ternary approximation — the paper broadcasts sign codes with the
+    clients re-initializing w_q; carrying the optimal scale is equivalent on
+    the wire (one extra fp32/layer) and keeps the global model usable for
+    immediate evaluation.
+    """
+    if wq_tree is None:
+        wq_tree = fttq.init_wq_tree(global_params, cfg)
+
+    def one(path, leaf, wq):
+        if wq is None:
+            return leaf
+
+        def tern_opt(t):
+            ts = fttq.scale_layer(t)
+            d = jnp.asarray(cfg.server_delta, ts.dtype)
+            i_t = fttq.ternarize(ts, d)
+            absw = jnp.abs(ts)
+            sel = absw > d
+            scale = jnp.sum(jnp.where(sel, absw, 0.0)) / (jnp.sum(sel) + 1e-8)
+            # rescale back to the original magnitude range:
+            scale = scale * (jnp.max(jnp.abs(t)) + 1e-8)
+            return i_t, scale
+
+        if leaf.ndim >= 3 and hasattr(wq, "ndim") and wq.ndim == leaf.ndim:
+            i_t, scale = jax.vmap(tern_opt)(leaf)
+            scale = scale.reshape(wq.shape)
+        else:
+            i_t, scale = tern_opt(leaf)
+        return encode_ternary(i_t, scale.astype(leaf.dtype), dtype=str(leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(
+        one, global_params, wq_tree, is_leaf=lambda x: x is None
+    )
+
+
+# --------------------------------------------------------------------------
+# Communication accounting (paper Table IV).
+# --------------------------------------------------------------------------
+
+
+def _tree_nbytes_fp32(params: Pytree) -> int:
+    return sum(l.size * 4 for l in jax.tree_util.tree_leaves(params))
+
+
+def _tree_nbytes_ternary(params: Pytree, cfg: fttq.FTTQConfig) -> int:
+    """2 bits per quantizable weight + 4B scale/layer; fp32 for the rest."""
+    total = 0
+
+    def visit(path, leaf):
+        nonlocal total
+        if fttq.is_quantizable(path, leaf, cfg):
+            if leaf.ndim >= 3:
+                # per-layer scale for stacked weights
+                total += packed_nbytes(leaf.size) + 4 * leaf.shape[0]
+            else:
+                total += packed_nbytes(leaf.size) + 4
+        else:
+            total += leaf.size * 4
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return total
+
+
+def fedavg_round_bytes(params: Pytree, n_participants: int) -> dict:
+    """FP32 FedAvg per-round bytes (upload = download = n·|θ|·4)."""
+    per_client = _tree_nbytes_fp32(params)
+    return {
+        "upload": per_client * n_participants,
+        "download": per_client * n_participants,
+        "per_client": per_client,
+    }
+
+
+def tfedavg_round_bytes(
+    params: Pytree, n_participants: int, cfg: fttq.FTTQConfig
+) -> dict:
+    """T-FedAvg per-round bytes: ternary both directions (paper §III.B)."""
+    per_client = _tree_nbytes_ternary(params, cfg)
+    return {
+        "upload": per_client * n_participants,
+        "download": per_client * n_participants,
+        "per_client": per_client,
+    }

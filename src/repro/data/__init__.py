@@ -1,0 +1,20 @@
+"""Data substrate: synthetic generators + federated partitioners."""
+
+from repro.data.synthetic import (
+    synthetic_classification,
+    synthetic_tokens,
+    token_batches,
+)
+from repro.data.federated import (
+    partition_iid,
+    partition_noniid,
+    partition_unbalanced,
+    ClientDataset,
+    emd_to_global,
+)
+
+__all__ = [
+    "synthetic_classification", "synthetic_tokens", "token_batches",
+    "partition_iid", "partition_noniid", "partition_unbalanced",
+    "ClientDataset", "emd_to_global",
+]

@@ -1,0 +1,71 @@
+"""Synthetic datasets (the container is offline — MNIST/CIFAR10 are replaced
+by learnable synthetic stand-ins with the same shapes/class counts; relative
+comparisons between FedAvg and T-FedAvg carry over, absolute accuracies are
+dataset-specific and noted as such in EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_classification(
+    key,
+    n_samples: int,
+    n_classes: int = 10,
+    dim: int = 784,
+    image_hw: tuple | None = None,
+    noise: float = 2.0,
+    n_test: int = 0,
+):
+    """Mixture-of-Gaussians classification set (learnable but not trivial).
+
+    Returns (x, y) — or (x, y, x_test, y_test) when n_test > 0, with BOTH
+    splits drawn from the same class centers. x is (N, dim) or (N, H, W, C)
+    if image_hw is given.
+    """
+    kc, kx, ky = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (n_classes, dim)) * 1.0
+    total = n_samples + n_test
+    y = jax.random.randint(ky, (total,), 0, n_classes)
+    x = centers[y] + noise * jax.random.normal(kx, (total, dim))
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.int32)
+    if image_hw is not None:
+        h, w, c = image_hw
+        assert h * w * c == dim
+        x = x.reshape(total, h, w, c)
+    if n_test:
+        return x[:n_samples], y[:n_samples], x[n_samples:], y[n_samples:]
+    return x, y
+
+
+def synthetic_tokens(key, n_tokens: int, vocab: int, order: int = 2):
+    """Markov-ish token stream: next token depends on a hash of the previous
+    ``order`` tokens — gives a learnable LM signal (loss ↓ from uniform)."""
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    trans = rng.integers(0, vocab, size=(vocab, 16), dtype=np.int32)
+    toks = np.empty((n_tokens,), np.int32)
+    toks[0] = rng.integers(vocab)
+    state = int(toks[0])
+    for i in range(1, n_tokens):
+        if rng.random() < 0.15:  # noise branch keeps entropy > 0
+            toks[i] = rng.integers(vocab)
+        else:
+            toks[i] = trans[state % vocab, state % 16]
+        state = state * 31 + int(toks[i])
+    return toks
+
+
+def token_batches(tokens: np.ndarray, batch: int, seq: int, *, start: int = 0):
+    """Iterate (tokens, labels) next-token batches; deterministic cursor for
+    checkpoint/resume (the cursor is part of the train checkpoint)."""
+    span = batch * (seq + 1)
+    i = start
+    while True:
+        if (i + 1) * span > len(tokens):
+            i = 0
+        chunk = tokens[i * span : (i + 1) * span].reshape(batch, seq + 1)
+        yield {"tokens": jnp.asarray(chunk[:, :-1]), "labels": jnp.asarray(chunk[:, 1:])}, i + 1
+        i += 1

@@ -1,0 +1,7 @@
+"""Federated learning runtime: the paper's round-based protocol (selection →
+configuration → reporting), FedAvg and T-FedAvg, with straggler mitigation
+and exact communication metering."""
+
+from repro.fed.simulation import FedConfig, FedResult, run_federated
+
+__all__ = ["FedConfig", "FedResult", "run_federated"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  ternary_quantize — fused FTTQ elementwise apply (QAT forward hot loop)
+  pack2bit         — 2-bit wire codec (upload/download path)
+  ternary_matmul   — packed ternary-weight GEMM (16× HBM traffic cut; the
+                     edge-inference hot spot mapped to TPU decode)
+
+``ops`` holds the jit'd dispatching wrappers; ``ref`` the pure-jnp oracles.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

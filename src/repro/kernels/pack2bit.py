@@ -1,0 +1,78 @@
+"""Pallas TPU kernels: 2-bit ternary pack / unpack codec.
+
+Wire format (matches repro.core.ternary and ref.py): codes c = I_t + 1 ∈
+{0,1,2}; four K-consecutive codes per byte, packed along the contraction
+(row) axis:  packed[k4, n] = Σ_j c[4·k4+j, n] << 2j.
+
+Packing along K (not N/lanes) keeps the lane dimension intact — each uint8
+lane holds a K-strip — so pack/unpack are pure VPU shift/or ops with no
+cross-lane shuffles, and the matmul kernel can unpack a (bk//4, bn) byte
+tile into a (bk, bn) int8 tile with a sublane-only reshape. This is the
+TPU-native replacement for the byte-shuffle a CUDA port would use.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(x_ref, o_ref):
+    c = x_ref[...].astype(jnp.int32) + 1
+    k, n = c.shape
+    c4 = c.reshape(k // 4, 4, n)
+    b = c4[:, 0] | (c4[:, 1] << 2) | (c4[:, 2] << 4) | (c4[:, 3] << 6)
+    o_ref[...] = b.astype(jnp.uint8)
+
+
+def _unpack_kernel(p_ref, o_ref):
+    p = p_ref[...].astype(jnp.int32)
+    k4, n = p.shape
+    cols = [((p >> (2 * j)) & 0x3) - 1 for j in range(4)]
+    out = jnp.stack(cols, axis=1).reshape(k4 * 4, n)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def pack2bit(
+    i_t: jax.Array, *, block: tuple[int, int] = (512, 512), interpret: bool = False
+) -> jax.Array:
+    """(K, N) int8 ternary → (K//4, N) uint8. K must be a multiple of 4."""
+    k, n = i_t.shape
+    assert k % 4 == 0, "pack2bit: K must be a multiple of 4"
+    bk, bn = min(block[0], k), min(block[1], n)
+    bk -= bk % 4
+    grid = (pl.cdiv(k, bk), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bk // 4, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k // 4, n), jnp.uint8),
+        interpret=interpret,
+    )(i_t)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "block", "interpret"))
+def unpack2bit(
+    packed: jax.Array,
+    *,
+    dtype=jnp.int8,
+    block: tuple[int, int] = (128, 512),
+    interpret: bool = False,
+) -> jax.Array:
+    """(K//4, N) uint8 → (K, N) ternary in ``dtype``."""
+    k4, n = packed.shape
+    bk4, bn = min(block[0], k4), min(block[1], n)
+    grid = (pl.cdiv(k4, bk4), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bk4, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bk4 * 4, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k4 * 4, n), dtype),
+        interpret=interpret,
+    )(packed)

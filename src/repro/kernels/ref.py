@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (tests sweep
+shapes/dtypes and assert_allclose kernel-vs-ref). They are also the portable
+fallback on backends without Pallas support.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ternary_quantize_ref(
+    theta: jax.Array, inv_scale: jax.Array, delta: jax.Array, w_q: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Elementwise FTTQ apply (the scalars are precomputed layer stats).
+
+    theta_s = theta * inv_scale           (g(θ), eq. 6 — inv_scale = 1/max|θ|)
+    I_t     = sign(θ_s) · [|θ_s| > Δ]     (eqs. 10-11)
+    θ_t     = w_q · I_t                   (eq. 12)
+
+    Returns (I_t int8, θ_t in theta.dtype).
+    """
+    theta_s = theta * inv_scale.astype(theta.dtype)
+    mask = jnp.abs(theta_s) > delta.astype(theta.dtype)
+    i_t = jnp.where(mask, jnp.sign(theta_s), 0.0)
+    theta_t = (w_q.astype(theta.dtype) * i_t).astype(theta.dtype)
+    return i_t.astype(jnp.int8), theta_t
+
+
+def pack2bit_ref(i_t: jax.Array) -> jax.Array:
+    """(K, N) int8 ternary → (K//4, N) uint8, 4 codes packed along axis 0.
+
+    Row-packing along the contraction axis keeps each packed byte's codes
+    contiguous in K, which is what the ternary matmul kernel unpacks.
+    """
+    k, n = i_t.shape
+    assert k % 4 == 0, "pack2bit_ref: K must be a multiple of 4"
+    c = (i_t.astype(jnp.int32) + 1).reshape(k // 4, 4, n)
+    b = c[:, 0] | (c[:, 1] << 2) | (c[:, 2] << 4) | (c[:, 3] << 6)
+    return b.astype(jnp.uint8)
+
+
+def unpack2bit_ref(packed: jax.Array, dtype=jnp.int8) -> jax.Array:
+    """(K//4, N) uint8 → (K, N) ternary in ``dtype``. Inverse of pack2bit_ref."""
+    k4, n = packed.shape
+    p = packed.astype(jnp.int32)
+    rows = [((p >> (2 * j)) & 0x3) - 1 for j in range(4)]
+    out = jnp.stack(rows, axis=1).reshape(k4 * 4, n)
+    return out.astype(dtype)
+
+
+def ternary_matmul_ref(
+    x: jax.Array, packed_w: jax.Array, w_q: jax.Array
+) -> jax.Array:
+    """y = x @ (w_q · unpack(packed_w)).
+
+    x: (M, K) activations; packed_w: (K//4, N) uint8; w_q scalar (or (N,)).
+    Accumulates in fp32, returns x.dtype.
+    """
+    w = unpack2bit_ref(packed_w, x.dtype)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return (y * w_q.astype(jnp.float32)).astype(x.dtype)
+
+
+def ternary_matmul_dense_ref(
+    x: jax.Array, i_t: jax.Array, w_q: jax.Array
+) -> jax.Array:
+    """Same contraction but with unpacked int8 ternary weights (K, N)."""
+    y = jnp.dot(x, i_t.astype(x.dtype), preferred_element_type=jnp.float32)
+    return (y * w_q.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: ternary-weight matmul with in-VMEM 2-bit unpack.
+
+y = x @ (w_q · W_t)  where W_t ∈ {-1,0,+1}^{K×N} is stored PACKED in HBM as
+(K//4, N) uint8 (see pack2bit.py). This is the serving-path hot spot of the
+paper's technique on TPU: weight HBM traffic drops 16× vs fp32 (4× vs int8),
+which is the whole game for memory-bound decode GEMMs.
+
+TPU mapping (the adaptation DESIGN.md §2 describes):
+  - grid (M/bm, N/bn, K/bk); the K loop is innermost so the fp32 accumulator
+    tile lives in VMEM scratch across K steps (revisiting semantics).
+  - each step DMAs a (bk//4, bn) PACKED byte tile HBM→VMEM, unpacks to
+    (bk, bn) int8 with VPU shift/and ops (sublane reshape only — the lane
+    axis N is untouched, so no cross-lane shuffle is generated),
+  - dequantizes to x.dtype and contracts on the MXU with fp32 accumulation,
+  - w_q is applied ONCE to the final accumulator (not per K-tile) — it's a
+    scalar, so scaling commutes with the K-sum.
+  - block defaults (bm=128, bn=256, bk=512): VMEM ≈ x 256 KiB (bf16) +
+    packed 32 KiB + unpacked int8 128 KiB + acc 128 KiB ≈ 0.5 MiB.
+
+The b16 MXU cannot consume 2-bit operands directly; the win is bandwidth,
+not MACs — see DESIGN.md "Hardware adaptation".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(s_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p = w_ref[...].astype(jnp.int32)  # (bk//4, bn) packed bytes
+    k4, bn = p.shape
+    cols = [((p >> (2 * j)) & 0x3) - 1 for j in range(4)]
+    w_t = jnp.stack(cols, axis=1).reshape(k4 * 4, bn)  # (bk, bn) in {-1,0,1}
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(
+        x, w_t.astype(x.dtype), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        w_q = s_ref[0, 0]
+        o_ref[...] = (acc_ref[...] * w_q).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ternary_matmul(
+    x: jax.Array,
+    packed_w: jax.Array,
+    w_q: jax.Array,
+    *,
+    block: tuple[int, int, int] = (128, 256, 512),
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, K) · packed_w: (K//4, N) uint8 · w_q scalar → (M, N) x.dtype."""
+    m, k = x.shape
+    k4, n = packed_w.shape
+    assert k4 * 4 == k, f"packed K mismatch: {k4 * 4} != {k}"
+    bm, bn, bk = block
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    bk -= bk % 4
+    n_k = pl.cdiv(k, bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), n_k)
+    scal = w_q.astype(jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 4, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(scal, x, packed_w)

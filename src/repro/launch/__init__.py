@@ -1,0 +1,2 @@
+"""Launch layer: production mesh builders, step factories, multi-pod dry-run,
+end-to-end train/serve drivers."""

@@ -1,0 +1,69 @@
+"""Step factories for the dry-run and the serve driver.
+
+  train  → TrainState step (QAT + optimizer; see train.trainer)
+  prefill→ forward with a fresh KV cache (serving admission)
+  decode → one-token incremental step against a filled cache
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+
+
+def make_prefill_step(cfg: tfm.ModelConfig, max_seq: int, chunks: int = 1):
+    """f(params, batch) → (next_token_logits, cache).
+
+    chunks > 1 = chunked prefill (vLLM/SARATHI-style): the prompt is run
+    through the cache in sequence chunks, dividing peak activation /
+    MoE-dispatch memory by ``chunks`` at the cost of one extra cache pass
+    per chunk. Top-8 MoE at 1M prompt tokens needs this to fit HBM."""
+
+    def prefill(params, batch):
+        first = batch.get("tokens", batch.get("embeds"))
+        bsz, seq = first.shape[0], first.shape[1]
+        if not cfg.causal:
+            logits, _, _ = tfm.forward(
+                cfg, params, batch.get("tokens"),
+                embeds=batch.get("embeds"),
+                vision_embeds=batch.get("vision_embeds"),
+            )
+            return logits, None
+
+        cache = tfm.init_cache(cfg, bsz, max_seq, cfg.cdtype())
+        n = max(1, min(chunks, seq))
+        clen = seq // n
+        logits = None
+        for i in range(n):
+            sl = slice(i * clen, (i + 1) * clen if i < n - 1 else seq)
+            logits, cache, _ = tfm.forward(
+                cfg,
+                params,
+                batch["tokens"][:, sl] if "tokens" in batch else None,
+                embeds=batch["embeds"][:, sl] if "embeds" in batch else None,
+                vision_embeds=batch.get("vision_embeds"),
+                cache=cache,
+                pos=i * clen,
+            )
+        return logits[:, -1:], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: tfm.ModelConfig):
+    """f(params, batch{tokens, cache, pos[, vision_embeds]}) → (logits, cache)."""
+
+    def decode(params, batch):
+        logits, cache = tfm.decode_step(
+            cfg,
+            params,
+            batch["tokens"],
+            batch["cache"],
+            batch["pos"],
+            vision_embeds=batch.get("vision_embeds"),
+        )
+        return logits, cache
+
+    return decode

@@ -1,0 +1,21 @@
+"""Architecture zoo: dense / MoE / SSM / hybrid / VLM / audio transformers,
+all expressed as scan-over-layers pure functions for O(1)-in-depth compile.
+"""
+
+from repro.models.transformer import (
+    init_params,
+    forward,
+    init_cache,
+    decode_step,
+    loss_fn,
+    param_count,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "init_cache",
+    "decode_step",
+    "loss_fn",
+    "param_count",
+]

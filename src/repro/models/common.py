@@ -1,0 +1,86 @@
+"""Shared model building blocks: norms, RoPE, activations, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm; scale=None gives the non-parametric variant (OLMo §paper)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    """LayerNorm (mean-centred); scale=None → non-parametric (OLMo-style)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def apply_norm(x: jax.Array, scale: jax.Array | None, kind: str) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, scale)
+    if kind == "layernorm":
+        return layer_norm(x, scale)
+    if kind == "nonparam":
+        return layer_norm(x, None)
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings.
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotate (..., S, H, D) by per-token positions (..., S)."""
+    d = x.shape[-1]
+    inv_freq = rope_frequencies(d, theta)
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, D/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Activations & init.
+# --------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def dense_init(key, shape, dtype, in_axis: int = -2) -> jax.Array:
+    """Lecun-normal style init with fan_in from the given axis."""
+    fan_in = shape[in_axis]
+    std = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

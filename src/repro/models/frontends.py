@@ -1,0 +1,30 @@
+"""Modality frontend STUBS (per the assignment: [audio]/[vlm] entries specify
+the transformer BACKBONE only; input_specs() provides precomputed frame/patch
+embeddings).
+
+These helpers only define the SHAPES the backbone consumes and a synthetic
+generator for smoke tests/examples; no real conv feature extractor / ViT is
+run."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frame_embeds_spec(batch: int, frames: int, d_model: int, dtype):
+    """HuBERT-style: 20 ms frames already projected to d_model."""
+    return jax.ShapeDtypeStruct((batch, frames, d_model), dtype)
+
+
+def vision_patch_embeds_spec(batch: int, n_patches: int, d_model: int, dtype):
+    """Llama-3.2-Vision-style: patch embeddings from the (stubbed) ViT."""
+    return jax.ShapeDtypeStruct((batch, n_patches, d_model), dtype)
+
+
+def synth_audio_frames(key, batch: int, frames: int, d_model: int, dtype=jnp.float32):
+    return jax.random.normal(key, (batch, frames, d_model), dtype) * 0.02
+
+
+def synth_vision_patches(key, batch: int, n_patches: int, d_model: int, dtype=jnp.float32):
+    return jax.random.normal(key, (batch, n_patches, d_model), dtype) * 0.02

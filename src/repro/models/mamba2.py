@@ -1,0 +1,169 @@
+"""Mamba2 block — SSD (state-space duality) chunked scan + O(1) decode.
+
+Follows the minimal SSD formulation of Dao & Gu (arXiv:2405.21060):
+
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t        y_t = C_t h_t + D x_t
+
+Training/prefill uses the chunked algorithm (quadratic within a chunk of Q
+tokens, linear across chunks via an inter-chunk state recurrence); decode is
+a single state update. n_groups = 1 (B/C shared across heads).
+
+Block layout (d_inner = expand·d_model, P = d_inner/n_heads, N = d_state):
+    in_proj : D → [z(d_inner), x(d_inner), B(N), C(N), dt(H)]
+    conv1d  : causal depthwise width-W over concat(x, B, C)
+    SSD core, gated RMSNorm(y · silu(z)), out_proj : d_inner → D
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+
+def d_inner_of(d_model: int, expand: int) -> int:
+    return expand * d_model
+
+
+def init_mamba(key, d_model: int, n_heads: int, d_state: int, expand: int,
+               conv_width: int, dtype):
+    d_in = d_inner_of(d_model, expand)
+    conv_ch = d_in + 2 * d_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_in + 2 * d_state + n_heads), dtype),
+        "conv_w": dense_init(ks[1], (conv_width, conv_ch), dtype, in_axis=0),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),       # A = -exp(a_log)
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "gate_norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d_model), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None):
+    """Depthwise causal conv. x: (B,L,C), w: (W,C). state: (B,W-1,C) or None.
+    Returns (y (B,L,C), new_state (B,W-1,C))."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, L+W-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return y, new_state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) → (..., Q, Q) lower-tri cumulative sums Σ_{i=s+1..q} a_i."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., q, s)
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """SSD scan. x:(B,L,H,P) dt:(B,L,H) a:(H,)<0 b,c:(B,L,N) → y:(B,L,H,P),
+    final_state:(B,H,P,N)."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+
+    adt = dtf * a[None, None, None, :]                     # (B,nc,Q,H) ≤ 0
+    adt_h = adt.transpose(0, 3, 1, 2)                      # (B,H,nc,Q)
+    acs = jnp.cumsum(adt_h, axis=-1)                       # within-chunk cumsum
+    xdt = xf * dtf[..., None]                              # Δ_t B_t x_t uses Δx
+
+    # 1) intra-chunk (masked quadratic) term.
+    lmat = jnp.exp(_segsum(adt_h))                         # (B,H,nc,Q,Q)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", cf, bf)         # (B,nc,Q,Q)
+    y_diag = jnp.einsum(
+        "bcqs,bhcqs,bcshp->bcqhp", scores, lmat, xdt
+    )
+
+    # 2) chunk-final states.
+    decay_to_end = jnp.exp(acs[..., -1:] - acs)            # (B,H,nc,Q)
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", bf, decay_to_end, xdt)
+
+    # 3) inter-chunk recurrence (scan over chunks).
+    chunk_decay = jnp.exp(acs[..., -1])                    # (B,H,nc)
+
+    def step(h_prev, xs):
+        s_c, dec_c = xs                                    # (B,H,P,N), (B,H)
+        h_new = h_prev * dec_c[..., None, None] + s_c
+        return h_new, h_prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4)             # (nc,B,H,P,N)
+    decay_t = chunk_decay.transpose(2, 0, 1)               # (nc,B,H)
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(step, h0, (states_t, decay_t))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+
+    # 4) contribution of the carried-in state to each chunk.
+    state_decay = jnp.exp(acs)                             # (B,H,nc,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", cf, h_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, lp, h, p)[:, :l]
+    return y, h_final
+
+
+def ssd_decode(x, dt, a, b, c, state):
+    """One-token state update. x:(B,H,P) dt:(B,H) b,c:(B,N) state:(B,H,P,N)."""
+    da = jnp.exp(dt.astype(jnp.float32) * a[None, :])      # (B,H)
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    state = state * da[..., None, None] + jnp.einsum("bhp,bn->bhpn", xdt, b.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32))
+    return y, state
+
+
+def mamba_block(params, x, *, n_heads: int, d_state: int, expand: int,
+                conv_width: int, chunk: int, cache: dict | None = None):
+    """x: (B, L, D). cache: {"conv": (B,W-1,C), "ssd": (B,H,P,N)} for decode.
+    Returns (out (B,L,D), new_cache)."""
+    bsz, l, d = x.shape
+    d_in = d_inner_of(d, expand)
+    p = d_in // n_heads
+    n = d_state
+
+    zxbcdt = x @ params["in_proj"]
+    z, xin, b, c, dt_raw = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, b, c = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    a = -jnp.exp(params["a_log"])                          # (H,) < 0
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    xh = xin.reshape(bsz, l, n_heads, p)
+    if cache is not None and l == 1:
+        y, new_ssd = ssd_decode(
+            xh[:, 0], dt[:, 0], a, b[:, 0], c[:, 0], cache["ssd"].astype(jnp.float32)
+        )
+        y = y[:, None]
+    else:
+        y, new_ssd = ssd_chunked(xh, dt, a, b, c, chunk)
+
+    y = y + xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["gate_norm"])
+    out = y @ params["out_proj"]
+    new_cache = {"conv": new_conv, "ssd": new_ssd.astype(jnp.float32)}
+    return out, new_cache

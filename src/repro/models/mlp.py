@@ -1,0 +1,29 @@
+"""Dense feed-forward blocks: gated (SwiGLU/GeGLU) and plain (GELU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_out": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, activation: str = "silu") -> jax.Array:
+    act = act_fn(activation)
+    h = x @ params["w_in"]
+    if "w_gate" in params:
+        h = act(x @ params["w_gate"]) * h
+    else:
+        h = act(h)
+    return h @ params["w_out"]

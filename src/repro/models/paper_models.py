@@ -1,0 +1,120 @@
+"""The paper's own experimental models (§V.A):
+
+  - MLP: 784-30-20-10 feed-forward for MNIST (24,330 params — matches the
+    paper's Table I "Parameter amount 24330" exactly: 784·30 + 30·20 + 20·10
+    weight matrices + a 10-unit output bias; hidden layers are bias-free).
+  - ResNet18*: the reduced ResNet18 with all conv channels at 64 (paper:
+    607,050 params; ours matches the architecture definition — 8 basic
+    blocks at 64 channels + linear head).
+
+Implemented pure-JAX (lax.conv); used by the federated benchmarks to
+reproduce Tables II–IV on synthetic stand-ins for MNIST/CIFAR10 (container
+is offline — see benchmarks/README note)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+# --------------------------------------------------------------------------
+# MLP (MNIST).
+# --------------------------------------------------------------------------
+
+
+def init_mlp_mnist(key, in_dim: int = 784, hidden=(30, 20), n_classes: int = 10,
+                   dtype=jnp.float32):
+    dims = (in_dim,) + tuple(hidden) + (n_classes,)
+    ks = jax.random.split(key, len(dims) - 1)
+    params = {
+        f"fc{i}": {"w": dense_init(ks[i], (dims[i], dims[i + 1]), dtype)}
+        for i in range(len(dims) - 1)
+    }
+    params[f"fc{len(dims) - 2}"]["bias"] = jnp.zeros((n_classes,), dtype)
+    return params
+
+
+def mlp_mnist(params, x):
+    """x: (B, 784) → logits (B, 10)."""
+    n = len(params)
+    for i in range(n):
+        p = params[f"fc{i}"]
+        x = x @ p["w"]
+        if "bias" in p:
+            x = x + p["bias"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# --------------------------------------------------------------------------
+# ResNet18* (CIFAR10) — all conv channels reduced to 64 (paper §V.A).
+# --------------------------------------------------------------------------
+
+
+def _conv_init(key, k, cin, cout, dtype):
+    fan_in = k * k * cin
+    std = (2.0 / fan_in) ** 0.5
+    return (jax.random.normal(key, (k, k, cin, cout), jnp.float32) * std).astype(dtype)
+
+
+def init_resnet_cifar(key, n_classes: int = 10, width: int = 64, dtype=jnp.float32):
+    ks = iter(jax.random.split(key, 64))
+    params: dict = {
+        "stem": {"w": _conv_init(next(ks), 3, 3, width, dtype)},
+        "stem_norm": {"scale": jnp.ones((width,), dtype), "bias": jnp.zeros((width,), dtype)},
+    }
+    for b in range(8):  # 4 stages × 2 basic blocks, all at `width` channels
+        params[f"block{b}"] = {
+            "conv1": {"w": _conv_init(next(ks), 3, width, width, dtype)},
+            "norm1": {"scale": jnp.ones((width,), dtype), "bias": jnp.zeros((width,), dtype)},
+            "conv2": {"w": _conv_init(next(ks), 3, width, width, dtype)},
+            "norm2": {"scale": jnp.ones((width,), dtype), "bias": jnp.zeros((width,), dtype)},
+        }
+    params["head"] = {
+        "w": dense_init(next(ks), (width, n_classes), dtype),
+        "bias": jnp.zeros((n_classes,), dtype),
+    }
+    return params
+
+
+def _conv(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _group_norm(x, p, groups: int = 8):
+    """GroupNorm stand-in for BatchNorm (batch-stat-free → federated-friendly;
+    avoids running-stat aggregation questions the paper doesn't address)."""
+    b, h, w, c = x.shape
+    xg = x.reshape(b, h, w, groups, c // groups)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    x = xg.reshape(b, h, w, c)
+    return x * p["scale"] + p["bias"]
+
+
+def resnet_cifar(params, x):
+    """x: (B, 32, 32, 3) → logits (B, 10)."""
+    h = _conv(x, params["stem"]["w"])
+    h = jax.nn.relu(_group_norm(h, params["stem_norm"]))
+    for b in range(8):
+        p = params[f"block{b}"]
+        stride = 2 if b in (2, 4, 6) else 1  # downsample at stage starts
+        y = _conv(h, p["conv1"]["w"], stride)
+        y = jax.nn.relu(_group_norm(y, p["norm1"]))
+        y = _conv(y, p["conv2"]["w"])
+        y = _group_norm(y, p["norm2"])
+        if stride != 1:
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, stride, stride, 1),
+                (1, stride, stride, 1), "SAME",
+            )
+        h = jax.nn.relu(h + y)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["head"]["w"] + params["head"]["bias"]

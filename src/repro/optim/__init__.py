@@ -1,0 +1,24 @@
+"""Pure-JAX optimizers with an optax-like (init, update) interface.
+
+No external deps (optax is not available offline). All states are pytrees
+matching the param tree so they inherit the param sharding rules (ZeRO-style
+sharding falls out of GSPMD — DESIGN.md §4)."""
+
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    apply_updates,
+    global_norm,
+    clip_by_global_norm,
+    cosine_schedule,
+    warmup_cosine_schedule,
+)
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adam", "adamw", "apply_updates",
+    "global_norm", "clip_by_global_norm", "cosine_schedule",
+    "warmup_cosine_schedule",
+]

@@ -1,0 +1,145 @@
+"""SGD / momentum / Adam / AdamW + schedules + gradient clipping."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """(init, update) pair. update returns (updates, new_state); apply with
+    ``apply_updates`` (updates are ADDED to params)."""
+
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree]]
+
+
+def _zeros_like_f32(params: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _resolve_lr(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        lr_t = _resolve_lr(lr, state["step"])
+        updates = jax.tree_util.tree_map(
+            lambda g: (-lr_t * g.astype(jnp.float32)), grads
+        )
+        return updates, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32), "m": _zeros_like_f32(params)}
+
+    def update(grads, state, params=None):
+        lr_t = _resolve_lr(lr, state["step"])
+        m = jax.tree_util.tree_map(
+            lambda m_, g: beta * m_ + g.astype(jnp.float32), state["m"], grads
+        )
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m_, g: -lr_t * (beta * m_ + g.astype(jnp.float32)), m, grads
+            )
+        else:
+            upd = jax.tree_util.tree_map(lambda m_: -lr_t * m_, m)
+        return upd, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam; with weight_decay > 0 it is decoupled (AdamW)."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": _zeros_like_f32(params),
+            "v": _zeros_like_f32(params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _resolve_lr(lr, state["step"])
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+
+        def upd(m_, v_, p):
+            u = -(lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps))
+            if weight_decay > 0.0 and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if weight_decay > 0.0:
+            updates = jax.tree_util.tree_map(upd, m, v, params)
+        else:
+            updates = jax.tree_util.tree_map(lambda m_, v_: upd(m_, v_, None), m, v)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay)
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+    )
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def lr(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+
+    return lr
+
+
+def warmup_cosine_schedule(base_lr: float, warmup: int, total_steps: int,
+                           final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+
+    def lr(step):
+        warm = base_lr * (step.astype(jnp.float32) + 1) / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return lr

@@ -1,0 +1,22 @@
+"""Distribution layer: parameter/activation sharding rules (DP+FSDP+TP+EP+SP)
+and ternary-compressed collectives (the paper's protocol mapped onto the
+cross-pod axis)."""
+
+from repro.parallel.sharding import (
+    param_shardings,
+    param_specs,
+    batch_specs,
+    cache_specs,
+    logical_batch_axes,
+)
+from repro.parallel.collectives import (
+    ternary_allreduce,
+    ternary_allreduce_tree,
+    compressed_bytes_per_element,
+)
+
+__all__ = [
+    "param_shardings", "param_specs", "batch_specs", "cache_specs",
+    "logical_batch_axes",
+    "ternary_allreduce", "ternary_allreduce_tree", "compressed_bytes_per_element",
+]

@@ -1,0 +1,147 @@
+"""Ternary-compressed collectives — the paper's wire protocol applied to the
+cross-pod gradient synchronization (DESIGN.md §2 mapping).
+
+A standard bf16 ring all-reduce moves ≈ 2·2B/element across the slow
+cross-pod links. ``ternary_allreduce`` instead:
+
+  1. FTTQ-quantizes the local tensor (per-tensor trained/optimal scale w_q,
+     eq. 8 threshold) — exactly the client upstream step,
+  2. packs to 2 bits/element (4 codes per uint8 byte),
+  3. all-gathers the packed payload over the pod axis (0.25B·(P-1)/elem),
+  4. locally dequantizes + averages the P pod contributions — exactly the
+     server aggregate step, executed redundantly per pod (the paper's
+     "download the quantized global model" with zero extra wire cost).
+
+For P=2 pods this is 2B → 0.25B per element = 8× less cross-pod traffic
+(16× at P→∞ vs the 2·(P-1)/P·2B ring). Error feedback (beyond-paper,
+Seide et al.-style) carries the quantization residual into the next step so
+the compressed SGD remains convergent.
+
+Must be called inside a shard_map region that is MANUAL over ``axis``
+(see train.trainer: manual over "pod", auto over "data"/"model").
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fttq
+from repro.core.ternary import CODES_PER_BYTE
+
+Pytree = Any
+
+
+def compressed_bytes_per_element(n_pods: int) -> float:
+    """Wire bytes per gradient element of the ternary all-gather."""
+    return 0.25 * (n_pods - 1)
+
+
+def _quantize_lastdim(x: jax.Array, t_k: float):
+    """FTTQ on an arbitrary-shape f32 tensor, packing 4 codes/byte along the
+    LAST axis. SHAPE-PRESERVING on every other axis so existing data/model
+    sharding survives (a flatten here would force each device to materialize
+    the full tensor — measured 482 GB/device on granite-20b, §Perf C)."""
+    absx = jnp.abs(x)
+    mx = jnp.max(absx) + 1e-12
+    delta = t_k * jnp.mean(absx) / mx          # threshold in scaled units
+    xs = x / mx
+    sel = jnp.abs(xs) > delta
+    i_t = jnp.where(sel, jnp.sign(xs), 0.0)
+    w_q = jnp.sum(jnp.where(sel, absx, 0.0)) / (jnp.sum(sel) + 1e-12)
+
+    codes = (i_t.astype(jnp.int8) + 1).astype(jnp.uint8)
+    c4 = codes.reshape(*x.shape[:-1], x.shape[-1] // CODES_PER_BYTE,
+                       CODES_PER_BYTE)
+    packed = (
+        c4[..., 0] | (c4[..., 1] << 2) | (c4[..., 2] << 4) | (c4[..., 3] << 6)
+    ).astype(jnp.uint8)
+    recon = (w_q * i_t).astype(x.dtype)
+    return packed, w_q.astype(jnp.float32), recon
+
+
+def _unpack_lastdim(packed: jax.Array) -> jax.Array:
+    shifts = jnp.array([0, 2, 4, 6], jnp.uint8)
+    codes = (packed[..., None] >> shifts) & 0x3
+    out = codes.astype(jnp.int8) - 1
+    return out.reshape(*packed.shape[:-1],
+                       packed.shape[-1] * CODES_PER_BYTE).astype(jnp.float32)
+
+
+def ternary_allreduce(
+    x: jax.Array,
+    axis: str,
+    *,
+    t_k: float = 0.7,
+    residual: jax.Array | None = None,
+):
+    """Mean over ``axis`` of FTTQ-compressed tensors.
+
+    Returns (mean in x.dtype, new_residual or None). Requires
+    x.shape[-1] % 4 == 0 (callers fall back to exact pmean otherwise).
+    """
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual
+
+    packed, w_q, recon = _quantize_lastdim(xf, t_k)
+    new_residual = (xf - recon) if residual is not None else None
+
+    gathered = jax.lax.all_gather(packed, axis)       # (P, *shape[:-1], D/4)
+    wqs = jax.lax.all_gather(w_q, axis)               # (P,)
+    n_pods = gathered.shape[0]
+
+    def add_one(carry, i):
+        codes = _unpack_lastdim(gathered[i])
+        return carry + wqs[i] * codes, None
+
+    total, _ = jax.lax.scan(
+        add_one, jnp.zeros(x.shape, jnp.float32), jnp.arange(n_pods)
+    )
+    mean = (total / n_pods).astype(x.dtype)
+    return mean, new_residual
+
+
+def ternary_allreduce_tree(
+    grads: Pytree,
+    axis: str,
+    *,
+    cfg: fttq.FTTQConfig | None = None,
+    residuals: Pytree | None = None,
+    error_feedback: bool = True,
+) -> tuple[Pytree, Pytree]:
+    """Apply ternary_allreduce leaf-wise to a gradient pytree.
+
+    Quantizable leaves (ndim ≥ 2, per FTTQ policy) use the compressed path;
+    small leaves (biases/norms/scalars) use an exact psum-mean — their bytes
+    are negligible and exactness helps stability.
+    Returns (synced_grads, new_residuals) — residuals zeros-like on the
+    first call (pass state["residuals"] thereafter).
+    """
+    cfg = cfg or fttq.FTTQConfig()
+    paths = jax.tree_util.tree_flatten_with_path(grads)[0]
+    treedef = jax.tree_util.tree_structure(grads)
+    res_leaves = (
+        jax.tree_util.tree_leaves(residuals)
+        if residuals is not None
+        else [None] * len(paths)
+    )
+
+    out, new_res = [], []
+    for (path, leaf), res in zip(paths, res_leaves):
+        if fttq.is_quantizable(path, leaf, cfg) and leaf.shape[-1] % 4 == 0:
+            r = res if (error_feedback and res is not None) else (
+                jnp.zeros(leaf.shape, jnp.float32) if error_feedback else None
+            )
+            synced, nr = ternary_allreduce(leaf, axis, t_k=cfg.t_k, residual=r)
+            out.append(synced)
+            new_res.append(nr if nr is not None else jnp.zeros(leaf.shape, jnp.float32))
+        else:
+            out.append(jax.lax.pmean(leaf, axis))
+            new_res.append(jnp.zeros(leaf.shape, jnp.float32))
+    return (
+        jax.tree_util.tree_unflatten(treedef, out),
+        jax.tree_util.tree_unflatten(treedef, new_res),
+    )

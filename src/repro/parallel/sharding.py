@@ -1,0 +1,190 @@
+"""Parameter / input sharding rules (DESIGN.md §4).
+
+Layout (single pod): mesh ("data", "model").
+  - TP  over "model": attention QKV out-columns, MLP hidden, vocab, experts.
+  - FSDP over "data": the other matrix axis of every weight + optimizer
+    state (states inherit param specs) — ZeRO-3 via GSPMD.
+  - EP  over "model" for MoE expert stacks.
+  - batch over "data" (and "pod" when present); long-context decode with
+    batch=1 shards the KV-cache/sequence axis over "data" instead (SP).
+
+Multi-pod: mesh ("pod", "data", "model") — parameters are REPLICATED over
+"pod" (each pod = one paper "client"); the cross-pod gradient sync is the
+ternary-compressed collective in collectives.py.
+
+Rules are path-regex → per-dimension logical axes, resolved against actual
+shapes with a divisibility guard (a dim is only sharded if divisible by the
+mesh axis size — e.g. MQA/GQA KV projections with few heads fall back to
+replication automatically).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import ModelConfig, init_params
+from repro.configs.shapes import SHAPES
+
+Pytree = Any
+
+# (path-regex, per-dim logical axes from the LAST dim backwards).
+# "tp" → model axis; "fsdp" → data axis; None → replicated.
+# Leading unlisted dims (e.g. the stacked layer dim) are replicated.
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed/table$",               ("tp", None)),        # vocab-parallel rows
+    (r"lm_head$",                   ("fsdp", "tp")),
+    (r"attn/w[qkv]$",               ("fsdp", "tp")),
+    (r"attn/wo$",                   ("tp", "fsdp")),
+    (r"mlp/w_(in|gate)$",           ("fsdp", "tp")),
+    (r"mlp/w_out$",                 ("tp", "fsdp")),
+    (r"moe/router$",                ("fsdp", None)),
+    (r"moe/w_(in|gate)$",           ("ep", "fsdp", None)),   # (E, D, F)
+    (r"moe/w_out$",                 ("ep", None, "fsdp")),   # (E, F, D)
+    (r"moe/shared/w_(in|gate)$",    ("fsdp", "tp")),
+    (r"moe/shared/w_out$",          ("tp", "fsdp")),
+    (r"mamba/in_proj$",             ("fsdp", "tp")),
+    (r"mamba/out_proj$",            ("tp", "fsdp")),
+    (r"mamba/conv_w$",              (None, "tp")),
+    # everything else (norms, biases, scalars, a_log, …): replicated.
+]
+
+_AXIS_MAP = {"tp": "model", "fsdp": "data", "ep": "model", None: None}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, shape: tuple, mesh_axis_sizes: dict) -> P:
+    for pat, dims in _RULES:
+        if re.search(pat, path):
+            ndim = len(shape)
+            entries: list = [None] * ndim
+            # dims are specified from the last dimension backwards.
+            for i, logical in enumerate(reversed(dims)):
+                d = ndim - 1 - i
+                if d < 0:
+                    break
+                ax = _AXIS_MAP[logical]
+                if ax is None:
+                    continue
+                if shape[d] % mesh_axis_sizes.get(ax, 1) == 0 and shape[d] > 0:
+                    entries[d] = ax
+            return P(*entries)
+    return P()  # replicated
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> Pytree:
+    """PartitionSpec pytree matching init_params(cfg) structure."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+    def one(path, leaf):
+        return _spec_for(_path_str(path), leaf.shape, sizes)
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(cfg, mesh)
+    )
+
+
+def logical_batch_axes(mesh: Mesh) -> tuple:
+    """The mesh axes that jointly carry the batch dimension."""
+    names = [n for n in ("pod", "data") if n in mesh.axis_names]
+    return tuple(names)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh) -> dict:
+    """PartitionSpecs for the input batch of a given shape cell."""
+    spec = SHAPES[shape_name]
+    bax = logical_batch_axes(mesh)
+    bsz = spec.global_batch
+    total = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in bax])) if bax else 1
+    batch_axis = bax if bsz % max(total, 1) == 0 and bsz >= total else None
+    bspec = P(batch_axis) if batch_axis else P()
+
+    out: dict = {}
+    if spec.kind == "train":
+        if cfg.family == "audio":
+            out["embeds"] = P(batch_axis, None, None) if batch_axis else P()
+        else:
+            out["tokens"] = P(batch_axis, None) if batch_axis else P()
+        out["labels"] = P(batch_axis, None) if batch_axis else P()
+        if cfg.family == "vlm":
+            out["vision_embeds"] = P(batch_axis, None, None) if batch_axis else P()
+    elif spec.kind == "prefill":
+        if cfg.family == "audio":
+            out["embeds"] = P(batch_axis, None, None) if batch_axis else P()
+        else:
+            out["tokens"] = P(batch_axis, None) if batch_axis else P()
+        if cfg.family == "vlm":
+            out["vision_embeds"] = P(batch_axis, None, None) if batch_axis else P()
+    else:  # decode
+        out["tokens"] = P(batch_axis, None) if batch_axis else P()
+        out["cache"] = cache_specs(cfg, mesh, batch_sharded=batch_axis is not None)
+        out["pos"] = P()
+        if cfg.family == "vlm":
+            out["vision_embeds"] = P(batch_axis, None, None) if batch_axis else P()
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, *, batch_sharded: bool) -> Pytree:
+    """KV/state cache PartitionSpecs.
+
+    batch_sharded=True: batch over ("pod","data"), kv-heads over "model" when
+    divisible. batch_sharded=False (long-context, batch=1): SEQUENCE axis is
+    sharded over "data" instead (sequence parallelism for flash-decode)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bax = logical_batch_axes(mesh)
+    tp = sizes.get("model", 1)
+    specs: dict = {}
+    kv_cols = cfg.n_kv_heads
+    head_ax = "model" if kv_cols % tp == 0 and kv_cols >= tp else None
+    # GQA/MQA archs with kv_heads < model-axis size can't head-shard the
+    # cache — shard the SEQUENCE dim over "model" instead (flash-decode
+    # combines partial softmax across model; a 32k cache is seq-divisible).
+    seq_ax_model = "model" if head_ax is None else None
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        if batch_sharded:
+            kv = P(None, bax, seq_ax_model, head_ax, None)
+        else:
+            kv = P(None, None, ("data",) if seq_ax_model is None
+                   else ("data", "model"), head_ax, None)  # SP over sequence
+        specs["k"] = kv
+        specs["v"] = kv
+    if cfg.family in ("ssm", "hybrid"):
+        ch_ax = "model"  # conv channels / heads over model when divisible
+        d_in = cfg.ssm_expand * cfg.d_model
+        conv_ch = d_in + 2 * cfg.ssm_state
+        specs["conv"] = P(
+            None, bax if batch_sharded else None, None,
+            ch_ax if conv_ch % tp == 0 else None,
+        )
+        specs["ssd"] = P(
+            None, bax if batch_sharded else None,
+            "model" if cfg.ssm_heads % tp == 0 else None, None, None,
+        )
+    if cfg.family == "hybrid":
+        if batch_sharded:
+            kv = P(None, bax, seq_ax_model, head_ax, None)
+        else:
+            kv = P(None, None, ("data",) if seq_ax_model is None
+                   else ("data", "model"), head_ax, None)
+        specs["attn_k"] = kv
+        specs["attn_v"] = kv
+    return specs

@@ -1,0 +1,12 @@
+"""Training substrate: distributed train-step factory, checkpointing,
+fault tolerance / elasticity helpers."""
+
+from repro.train.trainer import TrainState, TrainerConfig, make_train_step, init_train_state
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.train.fault import retrying, elastic_reshard
+
+__all__ = [
+    "TrainState", "TrainerConfig", "make_train_step", "init_train_state",
+    "save_checkpoint", "restore_checkpoint", "latest_step",
+    "retrying", "elastic_reshard",
+]

@@ -1,0 +1,176 @@
+"""Checkpointing: atomic msgpack pytree snapshots with an optional ternary
+codec (the checkpoint mirrors the T-FedAvg wire format — 2-bit weights +
+per-layer scale ⇒ ~16× smaller; used for cross-site replication where the
+paper's downstream-compression argument applies verbatim).
+
+Layout:  <dir>/step_<N>/state.msgpack  (+ .meta.json), written via tmp+rename
+so a crash mid-write never corrupts the latest checkpoint (restart safety).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.core.compression import CompressionSpec, compress_pytree, decompress_pytree
+from repro.core.ternary import TernaryTensor
+
+Pytree = Any
+
+_SENTINEL_ARRAY = "__nd__"
+_SENTINEL_TERNARY = "__tern__"
+_SENTINEL_NONE = "__none__"
+
+
+def _pack_leaf(leaf):
+    if leaf is None:
+        return {_SENTINEL_NONE: True}
+    if isinstance(leaf, TernaryTensor):
+        return {
+            _SENTINEL_TERNARY: True,
+            "packed": np.asarray(leaf.packed).tobytes(),
+            "packed_len": int(leaf.packed.size),
+            "w_q": np.asarray(leaf.w_q, np.float32).tobytes(),
+            "w_q_shape": list(np.asarray(leaf.w_q).shape),
+            "shape": list(leaf.shape),
+            "dtype": leaf.dtype,
+        }
+    arr = np.asarray(leaf)
+    return {
+        _SENTINEL_ARRAY: True,
+        "data": arr.tobytes(),
+        "dtype": arr.dtype.str,
+        "shape": list(arr.shape),
+    }
+
+
+def _unpack_leaf(obj):
+    if _SENTINEL_NONE in obj:
+        return None
+    if _SENTINEL_TERNARY in obj:
+        wq = np.frombuffer(obj["w_q"], np.float32).reshape(obj["w_q_shape"])
+        return TernaryTensor(
+            packed=jnp.asarray(
+                np.frombuffer(obj["packed"], np.uint8)[: obj["packed_len"]]
+            ),
+            w_q=jnp.asarray(wq),
+            shape=tuple(obj["shape"]),
+            dtype=obj["dtype"],
+        )
+    arr = np.frombuffer(obj["data"], np.dtype(obj["dtype"])).reshape(obj["shape"])
+    return jnp.asarray(arr)
+
+
+def _is_leaf(x):
+    return x is None or isinstance(x, TernaryTensor)
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state: Pytree,
+    *,
+    compression: CompressionSpec | None = None,
+    keep: int = 3,
+    metadata: dict | None = None,
+) -> str:
+    """Atomically persist ``state`` at ``<directory>/step_<step>``.
+
+    compression: ternary-compress quantizable leaves (params) on disk.
+    keep: retain only the newest ``keep`` checkpoints (0 = keep all).
+    """
+    os.makedirs(directory, exist_ok=True)
+    if compression is not None and compression.kind != "none":
+        wire, _ = compress_pytree(state, compression)
+    else:
+        wire = state
+
+    leaves, treedef = jax.tree_util.tree_flatten(wire, is_leaf=_is_leaf)
+    payload = {
+        "leaves": [_pack_leaf(l) for l in leaves],
+        "treedef": str(treedef),
+    }
+    final = os.path.join(directory, f"step_{step:012d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "state.msgpack"), "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    meta = dict(metadata or {})
+    meta.update({"step": step, "compressed": compression is not None
+                 and compression.kind != "none"})
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+
+    if keep:
+        steps = sorted(latest_steps(directory))
+        for s in steps[:-keep]:
+            shutil.rmtree(os.path.join(directory, f"step_{s:012d}"), ignore_errors=True)
+    return final
+
+
+def latest_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = latest_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    step: int | None = None,
+    *,
+    example_state: Pytree | None = None,
+    compression: CompressionSpec | None = None,
+    sharding: Any | None = None,
+) -> tuple[Pytree, dict]:
+    """Load a checkpoint. If ``example_state`` is given its treedef is used
+    (robust across refactors of container types). ``sharding`` (a pytree of
+    NamedSharding or a single sharding) re-places leaves for the current mesh
+    — this is the elastic-rescale entry point."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:012d}")
+    with open(os.path.join(path, "state.msgpack"), "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    leaves = [_unpack_leaf(o) for o in payload["leaves"]]
+    if example_state is not None:
+        treedef = jax.tree_util.tree_structure(example_state, is_leaf=_is_leaf)
+    else:
+        raise ValueError("restore_checkpoint requires example_state for treedef")
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    if compression is not None and compression.kind != "none" or meta.get("compressed"):
+        spec = compression or CompressionSpec(kind="ternary")
+        state = decompress_pytree(state, spec)
+    if sharding is not None:
+        if jax.tree_util.tree_structure(sharding) == jax.tree_util.tree_structure(state):
+            state = jax.tree_util.tree_map(jax.device_put, state, sharding)
+        else:
+            state = jax.tree_util.tree_map(lambda l: jax.device_put(l, sharding), state)
+    return state, meta

@@ -1,0 +1,75 @@
+"""Fault tolerance & elasticity helpers.
+
+Failure model at 1000+-node scale:
+  - CLIENT/POD loss mid-round (fed path): handled inside fed.simulation —
+    aggregation reweights over survivors; no round is lost.
+  - HOST crash (datacenter path): training resumes from the newest atomic
+    checkpoint (train.checkpoint); the data cursor + RNG + step live in the
+    checkpoint so the resumed run is bit-identical modulo the lost steps.
+  - STRAGGLERS: fed rounds enforce a deadline (drop & reweight); datacenter
+    path notes: ternary compression itself shrinks the sync critical path
+    16×, which is the paper's own straggler story for slow links.
+  - ELASTIC RESCALE: ``elastic_reshard`` re-places a checkpointed state onto
+    a smaller/larger mesh (e.g. 2 pods → 1 pod after a pod outage) using the
+    same sharding rules — GSPMD resharding is just device_put with the new
+    NamedShardings.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from typing import Any, Callable
+
+import jax
+
+log = logging.getLogger("repro.fault")
+
+Pytree = Any
+
+
+def retrying(fn: Callable, *, max_attempts: int = 3, backoff_s: float = 0.1,
+             retryable=(RuntimeError, OSError)):
+    """Wrap a step/IO function with bounded retry (transient failures:
+    preempted hosts, flaky interconnect, fs hiccups)."""
+
+    def wrapped(*args, **kwargs):
+        last = None
+        for attempt in range(max_attempts):
+            try:
+                return fn(*args, **kwargs)
+            except retryable as e:  # pragma: no cover - exercised in tests
+                last = e
+                log.warning("attempt %d/%d failed: %s", attempt + 1, max_attempts, e)
+                time.sleep(backoff_s * (2**attempt))
+        raise last
+
+    return wrapped
+
+
+def elastic_reshard(state: Pytree, shardings: Pytree) -> Pytree:
+    """Re-place every leaf of ``state`` onto new shardings (new mesh).
+
+    shardings: pytree of NamedSharding matching state, or a prefix thereof
+    (a single sharding broadcasts to all leaves)."""
+    if jax.tree_util.tree_structure(shardings) == jax.tree_util.tree_structure(state):
+        return jax.tree_util.tree_map(jax.device_put, state, shardings)
+    return jax.tree_util.tree_map(lambda l: jax.device_put(l, shardings), state)
+
+
+class StragglerDeadline:
+    """Wall-clock budget for a unit of work; callers drop work that overruns
+    (used by fed.simulation's round loop and the serving batcher)."""
+
+    def __init__(self, budget_s: float):
+        self.budget_s = budget_s
+        self._start = time.monotonic()
+
+    def reset(self):
+        self._start = time.monotonic()
+
+    def exceeded(self) -> bool:
+        return (time.monotonic() - self._start) > self.budget_s
+
+    def remaining(self) -> float:
+        return max(0.0, self.budget_s - (time.monotonic() - self._start))

@@ -1,0 +1,134 @@
+"""Checkpoint/restore, fault-tolerance, and elasticity tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import CompressionSpec
+from repro.models.transformer import ModelConfig
+from repro.optim import adam
+from repro.train import (
+    TrainerConfig, init_train_state, make_train_step,
+    latest_step, restore_checkpoint, save_checkpoint,
+)
+from repro.train.fault import StragglerDeadline, elastic_reshard, retrying
+
+
+CFG = ModelConfig(name="ckpt-test", family="dense", n_layers=2, d_model=32,
+                  vocab_size=64, n_heads=4, n_kv_heads=2, d_ff=64)
+
+
+def _state_and_step():
+    tcfg = TrainerConfig(qat=True, pod_compression=False)
+    opt = adam(1e-3)
+    state = init_train_state(CFG, tcfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(CFG, tcfg, opt))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 64),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, 64),
+    }
+    return state, step, batch
+
+
+def test_save_restore_roundtrip(tmp_path):
+    state, step, batch = _state_and_step()
+    state, _ = step(state, batch)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, state, metadata={"data_cursor": 17})
+    restored, meta = restore_checkpoint(d, example_state=state)
+    assert meta["data_cursor"] == 17
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_training_bitexact(tmp_path):
+    """Crash/restart: resuming from the checkpoint reproduces the
+    uninterrupted run exactly."""
+    state, step, batch = _state_and_step()
+    s1, _ = step(state, batch)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, s1)
+    s2, _ = step(s1, batch)          # uninterrupted continuation
+
+    restored, _ = restore_checkpoint(d, example_state=s1)
+    s2r, _ = step(restored, batch)   # post-crash continuation
+    for a, b in zip(jax.tree_util.tree_leaves(s2),
+                    jax.tree_util.tree_leaves(s2r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_keep_and_latest(tmp_path):
+    state, _, _ = _state_and_step()
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4):
+        save_checkpoint(d, s, state, keep=2)
+    assert latest_step(d) == 4
+    steps = sorted(int(n[5:]) for n in os.listdir(d) if n.startswith("step_"))
+    assert steps == [3, 4]
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+
+def test_ternary_compressed_checkpoint(tmp_path):
+    """Ternary on-disk codec: ~16× smaller weight payload, restorable."""
+    state, step, batch = _state_and_step()
+    state, _ = step(state, batch)
+    d_fp = str(tmp_path / "fp")
+    d_t = str(tmp_path / "tern")
+    save_checkpoint(d_fp, 1, state.params)
+    save_checkpoint(d_t, 1, state.params, compression=CompressionSpec(kind="ternary"))
+
+    def dir_size(d):
+        return sum(os.path.getsize(os.path.join(r, f))
+                   for r, _, fs in os.walk(d) for f in fs)
+
+    assert dir_size(d_t) < 0.55 * dir_size(d_fp)  # embed stays fp32
+    restored, _ = restore_checkpoint(
+        d_t, example_state=state.params, compression=CompressionSpec(kind="ternary")
+    )
+    # quantized leaves reconstruct approximately
+    a = np.asarray(restored["blocks"]["attn"]["wq"])
+    b = np.asarray(state.params["blocks"]["attn"]["wq"])
+    assert a.shape == b.shape
+    corr = np.corrcoef(a.ravel(), b.ravel())[0, 1]
+    assert corr > 0.6
+
+
+def test_retrying_recovers():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retrying(flaky, max_attempts=5, backoff_s=0.0)() == "ok"
+    assert calls["n"] == 3
+
+    def always_fails():
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RuntimeError):
+        retrying(always_fails, max_attempts=2, backoff_s=0.0)()
+
+
+def test_elastic_reshard_single_device():
+    """Re-placement API works (single device: identity placement)."""
+    state, _, _ = _state_and_step()
+    sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    out = elastic_reshard(state.params, sharding)
+    np.testing.assert_array_equal(
+        np.asarray(out["embed"]["table"]), np.asarray(state.params["embed"]["table"])
+    )
+
+
+def test_straggler_deadline():
+    d = StragglerDeadline(1000.0)
+    assert not d.exceeded()
+    assert d.remaining() > 0
+    d2 = StragglerDeadline(0.0)
+    assert d2.exceeded()

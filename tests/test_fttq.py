@@ -1,0 +1,123 @@
+"""Unit tests for the FTTQ quantizer (paper §III.A, Algorithm 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fttq as F
+
+CFG = F.FTTQConfig()
+
+
+def test_scale_layer_range():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 7.3
+    s = F.scale_layer(x)
+    assert float(jnp.max(jnp.abs(s))) <= 1.0 + 1e-6
+
+
+def test_threshold_rules():
+    x = jnp.array([[0.1, -0.5, 0.9, -0.2]])
+    assert float(F.fttq_threshold(x, 0.7, "mean")) == pytest.approx(
+        0.7 * 0.425, rel=1e-5
+    )
+    assert float(F.fttq_threshold(x, 0.05, "max")) == pytest.approx(
+        0.05 * 0.9, rel=1e-5
+    )
+    with pytest.raises(ValueError):
+        F.fttq_threshold(x, 0.7, "nope")
+
+
+def test_threshold_bound_eq9():
+    """Paper eq. (9): the mean-rule Δ is bounded by T_k (on scaled weights)."""
+    for seed in range(5):
+        x = F.scale_layer(jax.random.normal(jax.random.PRNGKey(seed), (128, 64)))
+        d = F.fttq_threshold(x, 0.7, "mean")
+        assert float(d) <= 0.7 + 1e-6
+
+
+def test_ternarize_values():
+    x = jnp.array([0.9, -0.9, 0.01, -0.01, 0.0])
+    t = F.ternarize(x, jnp.asarray(0.5))
+    np.testing.assert_array_equal(np.asarray(t), [1, -1, 0, 0, 0])
+
+
+def test_quantize_output_is_ternary_times_scale():
+    theta = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    wq = F.init_wq(theta, CFG)
+    out = F.fttq_quantize(theta, wq, CFG.t_k)
+    vals = np.unique(np.round(np.abs(np.asarray(out)), 6))
+    assert len(vals) <= 2  # {0, w_q}
+    assert float(wq) > 0
+
+
+def test_wq_init_is_l2_optimum():
+    """Prop 4.1 / eq. 20: w* = mean(|θ_i| over quantized positions) minimizes
+    ||θ − w·I_t||² for fixed I_t — check against brute-force line search."""
+    theta = jax.random.normal(jax.random.PRNGKey(2), (256, 128))
+    wq = float(F.init_wq(theta, CFG))
+    ts = F.scale_layer(theta)
+    d = F.fttq_threshold(ts, CFG.t_k)
+    it = np.asarray(F.ternarize(ts, d))
+    th = np.asarray(theta)
+
+    def err(w):
+        return np.sum((th - w * it) ** 2)
+
+    ws = np.linspace(wq * 0.5, wq * 1.5, 201)
+    errs = [err(w) for w in ws]
+    assert err(wq) <= min(errs) + 1e-3
+
+
+def test_ste_gradients():
+    theta = jax.random.normal(jax.random.PRNGKey(3), (32, 16))
+    wq = F.init_wq(theta, CFG)
+
+    def loss(t, w):
+        return jnp.sum(F.fttq_quantize(t, w, CFG.t_k) ** 2)
+
+    g_t, g_w = jax.grad(loss, argnums=(0, 1))(theta, wq)
+    assert g_t.shape == theta.shape
+    assert g_w.shape == ()
+    # ∂J/∂w_q = Σ g·I_t (Alg. 1)
+    ts = F.scale_layer(theta)
+    it = F.ternarize(ts, F.fttq_threshold(ts, CFG.t_k))
+    expected_gw = jnp.sum(2 * F.fttq_quantize(theta, wq, CFG.t_k) * it)
+    assert float(g_w) == pytest.approx(float(expected_gw), rel=1e-4)
+    # latent grads scaled by w_q on quantized positions, 1 elsewhere
+    g_out = 2 * F.fttq_quantize(theta, wq, CFG.t_k)
+    expected_gt = np.where(np.asarray(it) != 0, np.asarray(g_out) * float(wq),
+                           np.asarray(g_out))
+    np.testing.assert_allclose(np.asarray(g_t), expected_gt, rtol=1e-5)
+
+
+def test_quantize_tree_policy():
+    params = {
+        "layer": {"w": jnp.ones((8, 4)), "bias": jnp.ones((4,))},
+        "attn_norm": jnp.ones((8, 8)),       # excluded by name
+        "embed": {"table": jnp.ones((16, 8))},  # excluded by default
+        "stack": {"w_in": jnp.ones((3, 8, 4))},  # per-layer factors
+    }
+    wq = F.init_wq_tree(params, CFG)
+    assert wq["layer"]["bias"] is None
+    assert wq["attn_norm"] is None
+    assert wq["embed"]["table"] is None
+    assert wq["stack"]["w_in"].shape == (3, 1, 1)
+    q = F.quantize_tree(params, wq, CFG)
+    assert q["layer"]["bias"].shape == (4,)
+    np.testing.assert_array_equal(np.asarray(q["embed"]["table"]),
+                                  np.asarray(params["embed"]["table"]))
+
+
+def test_quantize_embed_flag():
+    cfg = F.FTTQConfig(quantize_embed=True)
+    params = {"embed": {"table": jax.random.normal(jax.random.PRNGKey(0), (16, 8))}}
+    wq = F.init_wq_tree(params, cfg)
+    assert wq["embed"]["table"] is not None
+
+
+def test_ternary_stats():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(4), (128, 64))}
+    stats = F.ternary_stats(params, CFG)
+    assert stats["quantized_params"] == 128 * 64
+    assert 0.2 < stats["ternary_sparsity"] < 0.6  # ~uniform → ~35% zeros

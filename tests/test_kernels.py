@@ -1,0 +1,93 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
+pure-jnp oracles in kernels/ref.py (interpret=True executes the Pallas body
+on CPU; TPU is the deployment target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES_2D = [(128, 128), (256, 512), (64, 384), (100, 260)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_ternary_quantize_kernel(shape, dtype):
+    theta = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    absw = jnp.abs(theta.astype(jnp.float32))
+    mx = jnp.max(absw) + 1e-8
+    inv = 1.0 / mx
+    d = 0.7 * jnp.mean(absw) * inv
+    sel = absw * inv > d
+    wq = jnp.sum(jnp.where(sel, absw * inv, 0.0)) / (jnp.sum(sel) + 1e-8)
+
+    it_k, tt_k = __import__("repro.kernels.ternary_quantize",
+                            fromlist=["ternary_quantize"]).ternary_quantize(
+        theta, inv, d, wq, interpret=True)
+    it_r, tt_r = ref.ternary_quantize_ref(theta, inv, d, wq)
+    np.testing.assert_array_equal(np.asarray(it_k), np.asarray(it_r))
+    np.testing.assert_allclose(
+        np.asarray(tt_k, np.float32), np.asarray(tt_r, np.float32),
+        rtol=1e-2 if dtype == jnp.bfloat16 else 1e-6,
+    )
+
+
+@pytest.mark.parametrize("k,n", [(128, 128), (512, 256), (1024, 130), (260, 64)])
+def test_pack_unpack_kernel(k, n):
+    key = jax.random.PRNGKey(1)
+    it = jax.random.randint(key, (k, n), -1, 2).astype(jnp.int8)
+    packed_k = ops.pack2bit(it, interpret=True)
+    packed_r = ref.pack2bit_ref(it)
+    np.testing.assert_array_equal(np.asarray(packed_k), np.asarray(packed_r))
+    out = ops.unpack2bit(packed_k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(it))
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 512, 256), (64, 128, 128), (8, 1024, 512), (100, 260, 130),
+    (1, 512, 128),
+])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_ternary_matmul_kernel(m, k, n, dtype):
+    kk = (k // 4) * 4
+    key = jax.random.PRNGKey(2)
+    x = (jax.random.normal(key, (m, kk)) * 0.1).astype(dtype)
+    it = jax.random.randint(jax.random.PRNGKey(3), (kk, n), -1, 2).astype(jnp.int8)
+    packed = ref.pack2bit_ref(it)
+    wq = jnp.asarray(0.037, jnp.float32)
+    y_k = ops.ternary_matmul(x, packed, wq, interpret=True)
+    y_r = ref.ternary_matmul_ref(x, packed, wq)
+    np.testing.assert_allclose(
+        np.asarray(y_k, np.float32), np.asarray(y_r, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+    )
+
+
+def test_fttq_apply_end_to_end():
+    """ops.fttq_apply == core fttq math for one layer."""
+    from repro.core import fttq as F
+
+    theta = jax.random.normal(jax.random.PRNGKey(4), (256, 128))
+    it, tt, wq = ops.fttq_apply(theta, 0.7, interpret=True)
+    cfg = F.FTTQConfig()
+    ts = F.scale_layer(theta)
+    it_ref = F.ternarize(ts, F.fttq_threshold(ts, cfg.t_k))
+    np.testing.assert_array_equal(np.asarray(it), np.asarray(it_ref, np.int8))
+    # θ_t reconstructs in SCALED units: w_q(scaled) · I_t
+    np.testing.assert_allclose(
+        np.asarray(tt), np.asarray(float(wq) * np.asarray(it_ref)), rtol=1e-5
+    )
+
+
+def test_matmul_vs_dense_ref():
+    """Packed kernel path == dense int8 reference contraction."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (32, 256))
+    it = jax.random.randint(jax.random.PRNGKey(6), (256, 64), -1, 2).astype(jnp.int8)
+    wq = jnp.asarray(0.21, jnp.float32)
+    y1 = ops.ternary_matmul(x, ref.pack2bit_ref(it), wq, interpret=True)
+    y2 = ref.ternary_matmul_dense_ref(x, it, wq)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,95 @@
+"""Optimizer + data-substrate unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (
+    emd_to_global, partition_iid, partition_noniid, partition_unbalanced,
+    synthetic_classification, synthetic_tokens, token_batches,
+)
+from repro.optim import (
+    adam, adamw, apply_updates, clip_by_global_norm, cosine_schedule,
+    global_norm, momentum, sgd, warmup_cosine_schedule,
+)
+
+
+def _quad_losses(opt, steps=60):
+    """Minimize ||x||² from x0=1; returns the loss trace."""
+    params = {"x": jnp.ones((8,))}
+    state = opt.init(params)
+    trace = []
+    for _ in range(steps):
+        g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+        trace.append(float(jnp.sum(params["x"] ** 2)))
+    return trace
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), momentum(0.05), adam(0.1), adamw(0.1)])
+def test_optimizers_converge_quadratic(opt):
+    trace = _quad_losses(opt)
+    assert trace[-1] < 0.05 * trace[0]
+
+
+def test_adam_bias_correction_first_step():
+    opt = adam(1e-1)
+    params = {"x": jnp.ones((2,))}
+    st = opt.init(params)
+    g = {"x": jnp.full((2,), 0.5)}
+    upd, st = opt.update(g, st, params)
+    # first Adam step ≈ -lr·sign(g)
+    np.testing.assert_allclose(np.asarray(upd["x"]), -0.1, rtol=1e-3)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_schedules():
+    lr = warmup_cosine_schedule(1.0, warmup=10, total_steps=110)
+    assert float(lr(jnp.asarray(0))) < 0.2
+    assert float(lr(jnp.asarray(9))) == pytest.approx(1.0, rel=1e-6)
+    assert float(lr(jnp.asarray(109))) < 0.2
+    c = cosine_schedule(2.0, 100, final_frac=0.5)
+    assert float(c(jnp.asarray(0))) == pytest.approx(2.0)
+    assert float(c(jnp.asarray(100))) == pytest.approx(1.0)
+
+
+def test_partition_sizes_and_emd():
+    x, y = synthetic_classification(jax.random.PRNGKey(0), 1000, 10, 32)
+    iid = partition_iid(x, y, 10)
+    assert sum(len(c) for c in iid) == 1000
+    noniid = partition_noniid(x, y, 10, 2)
+    assert emd_to_global(noniid, 10) > emd_to_global(iid, 10)
+
+
+@pytest.mark.parametrize("beta", [0.1, 0.5, 1.0])
+def test_unbalanced_beta(beta):
+    x, y = synthetic_classification(jax.random.PRNGKey(1), 2000, 10, 16)
+    parts = partition_unbalanced(x, y, 10, beta)
+    sizes = sorted(len(c) for c in parts)
+    assert sum(sizes) == 2000
+    med = float(np.median(sizes)); mx = float(max(sizes))
+    assert med / mx == pytest.approx(beta, abs=0.12)
+
+
+def test_token_stream_and_batches():
+    toks = synthetic_tokens(jax.random.PRNGKey(2), 5000, vocab=50)
+    assert toks.min() >= 0 and toks.max() < 50
+    it = token_batches(toks, batch=4, seq=16)
+    b1, cur1 = next(it)
+    assert b1["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(
+        np.asarray(b1["tokens"][:, 1:]), np.asarray(b1["labels"][:, :-1])
+    )
+    # cursor resume: restart iterator at cur1 → same second batch
+    b2, _ = next(it)
+    it2 = token_batches(toks, batch=4, seq=16, start=cur1)
+    b2r, _ = next(it2)
+    np.testing.assert_array_equal(np.asarray(b2["tokens"]), np.asarray(b2r["tokens"]))

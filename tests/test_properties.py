@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) for the system's invariants:
+
+  - pack/unpack 2-bit codec is an exact bijection on ternary arrays,
+  - FTTQ is unbiased under symmetric weights (paper Prop. 4.2),
+  - the trained factor init is the L2 optimum (Prop. 4.1 / eq. 20),
+  - server aggregation is a convex combination (weights sum to 1),
+  - ternary compression error is bounded by the quantization radius,
+  - error feedback makes repeated compression of a constant signal exact
+    in cumulative mean.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CompressionSpec, FTTQConfig, compress_pytree, decompress_pytree,
+    pack2bit, unpack2bit,
+)
+from repro.core import fttq as F
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=4096),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    it = rng.integers(-1, 2, size=(n,)).astype(np.int8)
+    packed = pack2bit(jnp.asarray(it))
+    assert packed.size == (n + 3) // 4
+    out = unpack2bit(packed, n, jnp.int8)
+    np.testing.assert_array_equal(np.asarray(out), it)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(**SETTINGS)
+def test_fttq_unbiased_on_uniform(seed):
+    """Prop 4.2: E[FTTQ(θ)] = E[θ] = 0 for θ ~ U(-1, 1)."""
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.uniform(key, (512, 256), minval=-1.0, maxval=1.0)
+    cfg = FTTQConfig()
+    wq = F.init_wq(theta, cfg)
+    out = F.fttq_quantize(theta, wq, cfg.t_k)
+    # quantizer output mean ≈ input mean ≈ 0 (tolerance ~ 3·σ/√n of mean)
+    assert abs(float(jnp.mean(out))) < 0.01
+    assert abs(float(jnp.mean(theta))) < 0.01
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    rows=st.integers(min_value=4, max_value=64),
+    cols=st.integers(min_value=4, max_value=64),
+)
+@settings(**SETTINGS)
+def test_wq_l2_optimality(seed, rows, cols):
+    theta = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    cfg = FTTQConfig()
+    wq = float(F.init_wq(theta, cfg))
+    ts = F.scale_layer(theta)
+    it = np.asarray(F.ternarize(ts, F.fttq_threshold(ts, cfg.t_k)))
+    if not it.any():
+        return  # degenerate: everything below threshold
+    th = np.asarray(theta)
+    for w in (wq * 0.9, wq * 1.1):
+        assert np.sum((th - wq * it) ** 2) <= np.sum((th - w * it) ** 2) + 1e-4
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n_clients=st.integers(min_value=1, max_value=6),
+)
+@settings(**SETTINGS)
+def test_aggregation_convex_combination(seed, n_clients):
+    """Weighted FedAvg: aggregate of identical payloads is the payload; the
+    aggregate lies in the convex hull per coordinate."""
+    from repro.core.tfedavg import TernaryUpdate, server_aggregate
+
+    rng = np.random.default_rng(seed)
+    payloads = [
+        {"w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))}
+        for _ in range(n_clients)
+    ]
+    ups = [
+        TernaryUpdate(payload=p, n_samples=int(rng.integers(1, 100)), client_id=i)
+        for i, p in enumerate(payloads)
+    ]
+    agg = server_aggregate(ups)
+    stacked = np.stack([np.asarray(p["w"]) for p in payloads])
+    assert np.all(np.asarray(agg["w"]) <= stacked.max(0) + 1e-5)
+    assert np.all(np.asarray(agg["w"]) >= stacked.min(0) - 1e-5)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(**SETTINGS)
+def test_compression_error_bounded(seed):
+    """|θ − dequant(compress(θ))|∞ ≤ max|θ| + w_q (coarse but guaranteed)."""
+    key = jax.random.PRNGKey(seed)
+    tree = {"w": jax.random.normal(key, (64, 32))}
+    spec = CompressionSpec(kind="ternary")
+    wire, _ = compress_pytree(tree, spec)
+    rec = decompress_pytree(wire, spec)
+    err = np.abs(np.asarray(tree["w"]) - np.asarray(rec["w"]))
+    bound = float(jnp.max(jnp.abs(tree["w"])))
+    assert err.max() <= bound + 1e-4
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_error_feedback_reduces_bias(seed):
+    """Repeatedly compressing the SAME gradient with error feedback: the
+    time-average of the decompressed stream converges to the true value
+    (residual carries what quantization dropped)."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (32, 16))
+    spec = CompressionSpec(kind="ternary", error_feedback=True)
+    res = None
+    acc = np.zeros_like(np.asarray(g))
+    n = 12
+    for _ in range(n):
+        wire, res = compress_pytree({"w": g}, spec, residual=res)
+        acc += np.asarray(decompress_pytree(wire, spec)["w"])
+    mean_stream = acc / n
+    base_err = np.abs(np.asarray(g)).mean()
+    ef_err = np.abs(mean_stream - np.asarray(g)).mean()
+    assert ef_err < 0.35 * base_err

@@ -1,0 +1,117 @@
+"""Integration tests for the T-FedAvg protocol (paper Algorithm 2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FTTQConfig
+from repro.core.tfedavg import (
+    TernaryUpdate, client_update_payload, fedavg_round_bytes,
+    server_aggregate, server_requantize, tfedavg_round_bytes,
+)
+from repro.core.ternary import TernaryTensor
+from repro.core import fttq as F
+from repro.data import partition_iid, partition_noniid, synthetic_classification
+from repro.fed import FedConfig, run_federated
+from repro.models.paper_models import init_mlp_mnist, mlp_mnist
+from repro.optim import adam
+
+CFG = FTTQConfig()
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    x, y, xt, yt = synthetic_classification(
+        jax.random.PRNGKey(0), 1500, 10, 784, noise=3.0, n_test=400
+    )
+    return x, y, xt, yt
+
+
+def _eval_fn(xt, yt):
+    xt = jnp.asarray(xt); yt = jnp.asarray(yt)
+
+    def eval_fn(p):
+        logits = mlp_mnist(p, xt)
+        acc = jnp.mean(jnp.argmax(logits, -1) == yt)
+        logp = jax.nn.log_softmax(logits, -1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, yt[:, None], -1))
+        return float(acc), float(loss)
+
+    return eval_fn
+
+
+def test_payload_roundtrip():
+    params = init_mlp_mnist(jax.random.PRNGKey(1))
+    wq = F.init_wq_tree(params, CFG)
+    payload = client_update_payload(params, wq, CFG)
+    assert isinstance(payload["fc0"]["w"], TernaryTensor)
+    assert payload["fc2"]["bias"].shape == (10,)  # output bias ships fp32
+    deq = payload["fc0"]["w"].dequantize()
+    assert deq.shape == params["fc0"]["w"].shape
+    # reconstruction correlates strongly with the original
+    a = np.asarray(deq).ravel(); b = np.asarray(params["fc0"]["w"]).ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.7
+
+
+def test_aggregation_weighted_mean():
+    p1 = {"w": jnp.ones((4, 4))}
+    p2 = {"w": jnp.zeros((4, 4))}
+    agg = server_aggregate([
+        TernaryUpdate(payload=p1, n_samples=300),
+        TernaryUpdate(payload=p2, n_samples=100),
+    ])
+    np.testing.assert_allclose(np.asarray(agg["w"]), 0.75)
+
+
+def test_server_requantize_is_ternary_wire():
+    params = init_mlp_mnist(jax.random.PRNGKey(2))
+    wire = server_requantize(params, CFG)
+    t = wire["fc1"]["w"]
+    assert isinstance(t, TernaryTensor)
+    codes = np.asarray(t.ternary())
+    assert set(np.unique(codes)).issubset({-1, 0, 1})
+
+
+def test_round_bytes_16x(dataset):
+    """Paper Table IV: T-FedAvg ≈ 1/16 of FedAvg per round."""
+    params = init_mlp_mnist(jax.random.PRNGKey(3))
+    fed = fedavg_round_bytes(params, 10)
+    tfed = tfedavg_round_bytes(params, 10, CFG)
+    ratio = fed["upload"] / tfed["upload"]
+    assert 10 < ratio < 16.5  # biases stay fp32 ⇒ slightly under 16×
+
+
+def test_protocol_end_to_end_learns(dataset):
+    x, y, xt, yt = dataset
+    clients = partition_iid(x, y, 5)
+    params = init_mlp_mnist(jax.random.PRNGKey(4))
+    cfg = FedConfig(algorithm="tfedavg", participation=1.0, local_epochs=3,
+                    batch_size=32, rounds=12, fttq=CFG)
+    res = run_federated(mlp_mnist, params, clients, cfg, adam(2e-3),
+                        _eval_fn(xt, yt), eval_every=12)
+    assert res.accuracy[-1] > 0.5
+    assert res.upload_bytes < res.rounds_run * 5 * 120_000  # ≪ fp32 (≈0.5MB/client)
+
+
+def test_straggler_mitigation_never_loses_round(dataset):
+    x, y, xt, yt = dataset
+    clients = partition_iid(x, y, 6)
+    params = init_mlp_mnist(jax.random.PRNGKey(5))
+    cfg = FedConfig(algorithm="tfedavg", participation=0.5, local_epochs=1,
+                    batch_size=32, rounds=3, straggler_drop_prob=0.9)
+    res = run_federated(mlp_mnist, params, clients, cfg, adam(1e-3),
+                        _eval_fn(xt, yt), eval_every=3)
+    assert res.rounds_run == 3
+    assert all(p >= 1 for p in res.participants_per_round)
+
+
+def test_noniid_partition_properties(dataset):
+    x, y, _, _ = dataset
+    clients = partition_noniid(x, y, 5, n_classes_per_client=2)
+    total = sum(len(c) for c in clients)
+    assert total == len(y)
+    for c in clients:
+        if len(c):
+            assert len(np.unique(c.y)) <= 2
