@@ -26,16 +26,15 @@ FTTQ = FTTQConfig()
 
 
 def _run(algo, clients, params, eval_fn, *, rounds=14, participation=1.0,
-         local_epochs=3, batch=32, seed=0, straggler=0.0, lr=2e-3):
+         local_epochs=3, batch=32, seed=0, lr=2e-3, mode="sync"):
     """Protocol constants follow the regime validated in tests/examples:
     T-FedAvg re-quantizes the global model every round, so it needs enough
     local steps per round to recover from the downstream quantization — with
     too few rounds × epochs it sits at the re-quantization floor (the paper
     runs 100+ rounds; we use 14 × 3 epochs to stay in CPU budget)."""
-    cfg = FedConfig(algorithm=algo, participation=participation,
+    cfg = FedConfig(algorithm=algo, mode=mode, participation=participation,
                     local_epochs=local_epochs, batch_size=batch,
-                    rounds=rounds, fttq=FTTQ, seed=seed,
-                    straggler_drop_prob=straggler)
+                    rounds=rounds, fttq=FTTQ, seed=seed)
     t0 = time.perf_counter()
     res = run_federated(mlp_mnist, params, clients, cfg, adam(lr),
                         eval_fn, eval_every=rounds)

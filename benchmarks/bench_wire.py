@@ -1,0 +1,69 @@
+"""Wire-codec benchmarks: encode/decode throughput and bytes-per-parameter
+vs the fp32 baseline, on real model payloads.
+
+Rows (name, us_per_call, derived):
+  wire_encode_<model>   derived = encode throughput, MB/s
+  wire_decode_<model>   derived = decode throughput, MB/s
+  wire_bpp_<model>      derived = serialized ternary bytes per parameter
+  wire_ratio_<model>    derived = fp32 serialized bytes / ternary bytes
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.comm.wire import decode_update, encode_update
+from repro.core import FTTQConfig
+from repro.core.tfedavg import server_requantize
+from repro.models.paper_models import (
+    init_mlp_mnist, init_resnet_cifar,
+)
+
+FTTQ = FTTQConfig()
+
+
+def _models():
+    out = [
+        ("mlp", init_mlp_mnist(jax.random.PRNGKey(0))),
+        ("resnet", init_resnet_cifar(jax.random.PRNGKey(1))),
+    ]
+    try:
+        from repro.configs import get_reduced
+        from repro.models.transformer import init_params
+
+        cfg = get_reduced("olmo-1b")
+        out.append(("olmo_reduced", init_params(cfg, jax.random.PRNGKey(2))))
+    except Exception:
+        pass  # transformer stack unavailable: bench the paper models only
+    return out
+
+
+def _timed(fn, *args, repeats: int = 5):
+    fn(*args)  # warm (traces/compiles + device transfers)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    return out, (time.perf_counter() - t0) / repeats
+
+
+def wire_codec():
+    rows = []
+    for name, params in _models():
+        n_params = sum(l.size for l in jax.tree_util.tree_leaves(params))
+        wire_tree = server_requantize(params, FTTQ)
+
+        blob, dt_e = _timed(encode_update, wire_tree)
+        rows.append((f"wire_encode_{name}", round(dt_e * 1e6, 1),
+                     round(len(blob) / dt_e / 1e6, 1)))
+
+        _, dt_d = _timed(decode_update, blob)
+        rows.append((f"wire_decode_{name}", round(dt_d * 1e6, 1),
+                     round(len(blob) / dt_d / 1e6, 1)))
+
+        fp_blob = encode_update(params)
+        rows.append((f"wire_bpp_{name}", 0.0, round(len(blob) / n_params, 4)))
+        rows.append((f"wire_ratio_{name}", 0.0,
+                     round(len(fp_blob) / len(blob), 2)))
+    return rows

@@ -1,0 +1,32 @@
+"""repro.comm — the communication subsystem.
+
+Everything the federated protocol puts "on the wire" goes through this
+package:
+
+  - ``wire``:    byte-level serialization of update pytrees (versioned
+                 header, per-leaf records, CRC32 integrity). Upload /
+                 download bytes are measured as ``len(encode_update(...))``
+                 — real serialized buffers, never analytic formulas.
+  - ``channel``: a simulated transport that converts payload bytes into
+                 wall-clock transfer times from per-client bandwidth /
+                 latency distributions — stragglers emerge from
+                 bytes ÷ bandwidth instead of a coin flip.
+"""
+
+from repro.comm.channel import Channel, ChannelConfig, ClientLink, TransferEvent
+from repro.comm.wire import (
+    WIRE_VERSION,
+    WireError,
+    decode_tensor,
+    decode_update,
+    encode_tensor,
+    encode_update,
+    update_nbytes,
+)
+
+__all__ = [
+    "WIRE_VERSION", "WireError",
+    "encode_update", "decode_update", "encode_tensor", "decode_tensor",
+    "update_nbytes",
+    "Channel", "ChannelConfig", "ClientLink", "TransferEvent",
+]

@@ -1,0 +1,117 @@
+"""Simulated transport: payload bytes → wall-clock transfer times.
+
+Each client gets a ``ClientLink`` with bandwidth and latency drawn once
+from log-normal / normal distributions (heterogeneous edge fleet: a few
+fast links, a long slow tail — the shape WAN measurements show). A
+transfer of ``nbytes`` over a link costs
+
+    t = latency + nbytes / bandwidth        (+ optional jitter per transfer)
+
+so *stragglers are emergent*: a client is late because its payload is
+large or its link is slow, not because a coin flip said so. Ternary
+compression therefore shows up directly as shorter transfer times — the
+paper's Table IV claim expressed in seconds instead of bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Fleet-level link distribution + round deadline.
+
+    Attributes:
+      mean_bandwidth_bytes_s: median link bandwidth, bytes/second (default ≈ a
+        1 MB/s uplink — the paper targets exactly this regime of limited
+        upstream capacity).
+      bandwidth_sigma: σ of the log-normal bandwidth draw (0 → homogeneous).
+      base_latency_s: mean one-way link latency (propagation + handshake).
+      latency_jitter_s: per-transfer uniform jitter in [0, jitter).
+      deadline_s: round deadline for the SYNC server — a client whose
+        download + compute + upload exceeds it is dropped as a straggler
+        (0 or inf → never drop).
+      compute_speed_sigma: σ of the log-normal per-client compute speed
+        multiplier (device heterogeneity; 1.0 = nominal).
+    """
+
+    mean_bandwidth_bytes_s: float = 1e6
+    bandwidth_sigma: float = 0.5
+    base_latency_s: float = 0.05
+    latency_jitter_s: float = 0.01
+    deadline_s: float = float("inf")
+    compute_speed_sigma: float = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientLink:
+    """One client's drawn link + device characteristics."""
+
+    client_id: int
+    bandwidth_bytes_s: float
+    latency_s: float
+    compute_speed: float  # multiplier on nominal examples/sec
+
+    def transfer_time(self, nbytes: int, jitter: float = 0.0) -> float:
+        return self.latency_s + jitter + nbytes / self.bandwidth_bytes_s
+
+
+@dataclasses.dataclass
+class TransferEvent:
+    """Log entry for one wire transfer (used by FedResult.transfer_log)."""
+
+    client_id: int
+    direction: str  # "down" | "up"
+    nbytes: int
+    seconds: float
+
+
+class Channel:
+    """Holds the fleet's links and meters transfers through them."""
+
+    def __init__(self, cfg: ChannelConfig, n_clients: int, seed: int = 0):
+        self.cfg = cfg
+        rng = np.random.default_rng(seed)
+        bw = cfg.mean_bandwidth_bytes_s * rng.lognormal(
+            mean=0.0, sigma=cfg.bandwidth_sigma, size=n_clients
+        )
+        lat = np.maximum(
+            rng.normal(cfg.base_latency_s, cfg.base_latency_s * 0.2, size=n_clients),
+            1e-4,
+        )
+        speed = rng.lognormal(mean=0.0, sigma=cfg.compute_speed_sigma, size=n_clients)
+        self.links = [
+            ClientLink(k, float(bw[k]), float(lat[k]), float(speed[k]))
+            for k in range(n_clients)
+        ]
+        self._rng = rng
+        self.log: list[TransferEvent] = []
+
+    def transfer(self, client_id: int, nbytes: int, direction: str) -> float:
+        """Seconds to move ``nbytes`` over this client's link (logged)."""
+        jitter = float(self._rng.uniform(0.0, self.cfg.latency_jitter_s))
+        dt = self.links[client_id].transfer_time(nbytes, jitter)
+        self.log.append(TransferEvent(client_id, direction, nbytes, dt))
+        return dt
+
+    def compute_time(self, client_id: int, n_examples: int,
+                     nominal_examples_per_s: float = 5000.0) -> float:
+        """Local-training wall time for ``n_examples`` processed examples."""
+        return n_examples / (nominal_examples_per_s * self.links[client_id].compute_speed)
+
+    def summary(self) -> dict:
+        """Aggregate transfer statistics for reporting."""
+        if not self.log:
+            return {"n_transfers": 0, "total_bytes": 0, "total_seconds": 0.0,
+                    "mean_seconds": 0.0, "p95_seconds": 0.0}
+        secs = np.array([e.seconds for e in self.log])
+        return {
+            "n_transfers": len(self.log),
+            "total_bytes": int(sum(e.nbytes for e in self.log)),
+            "total_seconds": float(secs.sum()),
+            "mean_seconds": float(secs.mean()),
+            "p95_seconds": float(np.percentile(secs, 95)),
+        }

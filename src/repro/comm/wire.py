@@ -1,0 +1,332 @@
+"""Byte-level wire codec for federated update payloads.
+
+An *update* is a pytree of leaves (raw arrays and/or ``TernaryTensor``)
+as produced by ``core.tfedavg.client_update_payload`` /
+``server_requantize``. ``encode_update`` serializes it into one
+self-describing buffer; ``decode_update`` rebuilds the pytree bit-exactly.
+All byte accounting in the repo is ``len(encode_update(tree))`` — measured
+from the actual buffer, never estimated.
+
+Buffer layout (all little-endian):
+
+    HEADER (24 B):
+      magic      4s   b"TFW1"
+      version    u16  WIRE_VERSION
+      flags      u16  reserved (0)
+      n_records  u32  number of leaf records
+      crc32      u32  zlib.crc32 of the record section
+      body_len   u64  length of the record section in bytes
+
+    RECORD (one per pytree leaf, in tree_flatten order):
+      path_len   u16  + path bytes (utf-8; entries joined by "\\x1f",
+                        each entry "d:<key>" for dict keys or
+                        "i:<index>" for sequence indices)
+      kind       u8   0 = RAW, 1 = TERNARY
+      RAW:
+        dtype_len u8 + dtype ascii, ndim u8, dims u32×ndim,
+        data_len  u64 + raw little-endian array bytes
+      TERNARY (a ``TernaryTensor``):
+        logical dtype/ndim/dims as above (the unpacked tensor),
+        scale   dtype/ndim/dims + scale bytes (w_q, length derived),
+        packed_len u64 + packed 2-bit code bytes (4 codes/byte,
+        ``kernels.pack2bit`` layout)
+
+The CRC covers the whole record section; ``decode_update`` raises
+``WireError`` on magic/version/CRC mismatch or truncation, so a corrupted
+or torn transfer never silently yields wrong weights.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ternary import TernaryTensor
+
+Pytree = Any
+
+WIRE_MAGIC = b"TFW1"
+WIRE_VERSION = 1
+
+_HEADER = struct.Struct("<4sHHIIQ")   # magic, version, flags, n_records, crc, body_len
+_KIND_RAW = 0
+_KIND_TERNARY = 1
+_PATH_SEP = "\x1f"
+
+
+class WireError(ValueError):
+    """Malformed / corrupted / incompatible wire buffer."""
+
+
+# --------------------------------------------------------------------------
+# Low-level field packers.
+# --------------------------------------------------------------------------
+
+
+def _np(leaf) -> np.ndarray:
+    return np.asarray(leaf)
+
+
+def _pack_array_meta(arr: np.ndarray) -> bytes:
+    return _pack_meta(arr.dtype.name, arr.shape)
+
+
+def _pack_meta(dtype: str, shape: tuple) -> bytes:
+    dt = dtype.encode("ascii")
+    out = [struct.pack("<B", len(dt)), dt, struct.pack("<B", len(shape))]
+    out.append(struct.pack(f"<{len(shape)}I", *shape) if shape else b"")
+    return b"".join(out)
+
+
+class _Reader:
+    def __init__(self, buf: bytes):
+        self.buf = buf
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        if self.pos + n > len(self.buf):
+            raise WireError(
+                f"truncated wire buffer: need {n} bytes at offset {self.pos}, "
+                f"have {len(self.buf) - self.pos}"
+            )
+        out = self.buf[self.pos : self.pos + n]
+        self.pos += n
+        return out
+
+    def u8(self) -> int:
+        return self.take(1)[0]
+
+    def u16(self) -> int:
+        return struct.unpack("<H", self.take(2))[0]
+
+    def u64(self) -> int:
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def meta(self) -> tuple[str, tuple]:
+        dt = self.take(self.u8()).decode("ascii")
+        ndim = self.u8()
+        shape = struct.unpack(f"<{ndim}I", self.take(4 * ndim)) if ndim else ()
+        return dt, tuple(shape)
+
+
+def _decode_array(r: _Reader) -> jax.Array:
+    dtype, shape = r.meta()
+    data = r.take(r.u64())
+    np_dt = np.dtype(jnp.dtype(dtype))
+    n = int(np.prod(shape)) if shape else 1
+    if len(data) != n * np_dt.itemsize:
+        raise WireError(
+            f"record data length {len(data)} != {n}×{np_dt.itemsize} "
+            f"for dtype={dtype} shape={shape}"
+        )
+    arr = np.frombuffer(data, dtype=np_dt).reshape(shape)
+    return jnp.asarray(arr)
+
+
+# --------------------------------------------------------------------------
+# Single-tensor codec (used by TernaryTensor.to_bytes / from_bytes).
+# --------------------------------------------------------------------------
+
+
+def _ternary_body(t: TernaryTensor) -> bytes:
+    scale = _np(t.w_q)
+    packed = _np(t.packed)
+    if packed.dtype != np.uint8:
+        raise WireError(f"TernaryTensor.packed must be uint8, got {packed.dtype}")
+    parts = [
+        _pack_meta(str(t.dtype), tuple(int(s) for s in t.shape)),
+        _pack_array_meta(scale),
+        scale.tobytes(),
+        struct.pack("<Q", packed.size),
+        packed.tobytes(),
+    ]
+    return b"".join(parts)
+
+
+def _decode_ternary_body(r: _Reader) -> TernaryTensor:
+    dtype, shape = r.meta()
+    s_dtype, s_shape = r.meta()
+    s_np = np.dtype(jnp.dtype(s_dtype))
+    s_n = int(np.prod(s_shape)) if s_shape else 1
+    scale = np.frombuffer(r.take(s_n * s_np.itemsize), dtype=s_np).reshape(s_shape)
+    packed = np.frombuffer(r.take(r.u64()), dtype=np.uint8)
+    n = int(np.prod(shape)) if shape else 1
+    if packed.size != (n + 3) // 4:
+        raise WireError(
+            f"packed size {packed.size} inconsistent with logical shape {shape}"
+        )
+    return TernaryTensor(
+        packed=jnp.asarray(packed), w_q=jnp.asarray(scale),
+        shape=tuple(shape), dtype=dtype,
+    )
+
+
+def encode_tensor(t: TernaryTensor) -> bytes:
+    """Serialize one TernaryTensor (header + single TERNARY record body)."""
+    body = _ternary_body(t)
+    return _HEADER.pack(WIRE_MAGIC, WIRE_VERSION, 0, 1, zlib.crc32(body), len(body)) + body
+
+
+def decode_tensor(data: bytes) -> TernaryTensor:
+    body, _ = _check_header(data, expect_records=1)
+    r = _Reader(body)
+    t = _decode_ternary_body(r)
+    if r.pos != len(body):
+        raise WireError(f"{len(body) - r.pos} trailing bytes after tensor record")
+    return t
+
+
+# --------------------------------------------------------------------------
+# Pytree path encoding (dicts + sequences).
+# --------------------------------------------------------------------------
+
+
+def _path_entries(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            if isinstance(p.key, str):
+                out.append(f"d:{p.key}")
+            elif isinstance(p.key, (int, np.integer)):
+                out.append(f"k:{int(p.key)}")   # int dict key ≠ sequence index
+            else:
+                raise WireError(f"unsupported dict key type {type(p.key).__name__}")
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            out.append(f"i:{p.idx}")
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(f"d:{p.name}")
+        else:  # pragma: no cover - exotic custom nodes
+            raise WireError(f"unsupported pytree path entry {p!r}")
+    return out
+
+
+def _parse_entry(e: str) -> tuple[str, Any]:
+    if e.startswith("d:"):
+        return ("d", e[2:])
+    if e.startswith("k:"):
+        return ("k", int(e[2:]))
+    if e.startswith("i:"):
+        return ("i", int(e[2:]))
+    raise WireError(f"bad path entry {e!r}")
+
+
+def _insert(root: dict, entries: list[str], leaf) -> None:
+    node = root
+    for i, e in enumerate(entries):
+        key = _parse_entry(e)
+        if i == len(entries) - 1:
+            node[key] = leaf
+        else:
+            node = node.setdefault(key, {})
+
+
+def _containerize(node):
+    """Rebuild containers from typed keys: ('i', n) nodes → lists,
+    ('d', s)/('k', n) nodes → dicts (string / int keys)."""
+    if not isinstance(node, dict):
+        return node
+    tags = {t for t, _ in node}
+    if "i" in tags:
+        if tags != {"i"}:
+            raise WireError("mixed sequence and dict entries at one node")
+        idxs = sorted(k for _, k in node)
+        if idxs != list(range(len(idxs))):
+            raise WireError(f"non-contiguous sequence indices {idxs}")
+        return [_containerize(node[("i", i)]) for i in idxs]
+    return {k: _containerize(v) for (_, k), v in node.items()}
+
+
+# --------------------------------------------------------------------------
+# Update codec.
+# --------------------------------------------------------------------------
+
+
+def encode_update(tree: Pytree) -> bytes:
+    """Serialize an update pytree into one framed, CRC-protected buffer."""
+    leaves = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, TernaryTensor)
+    )[0]
+    records = []
+    for path, leaf in leaves:
+        p = _PATH_SEP.join(_path_entries(path)).encode("utf-8")
+        rec = [struct.pack("<H", len(p)), p]
+        if isinstance(leaf, TernaryTensor):
+            rec.append(struct.pack("<B", _KIND_TERNARY))
+            rec.append(_ternary_body(leaf))
+        else:
+            arr = _np(leaf)
+            rec.append(struct.pack("<B", _KIND_RAW))
+            rec.append(_pack_array_meta(arr))
+            rec.append(struct.pack("<Q", arr.nbytes))
+            rec.append(arr.tobytes())
+        records.append(b"".join(rec))
+    body = b"".join(records)
+    header = _HEADER.pack(
+        WIRE_MAGIC, WIRE_VERSION, 0, len(records), zlib.crc32(body), len(body)
+    )
+    return header + body
+
+
+def _check_header(data: bytes, expect_records: int | None = None) -> tuple[bytes, int]:
+    """Validate framing and integrity; returns (record section, n_records)."""
+    if len(data) < _HEADER.size:
+        raise WireError(f"buffer too short for header: {len(data)} B")
+    magic, version, _flags, n_records, crc, body_len = _HEADER.unpack_from(data)
+    if magic != WIRE_MAGIC:
+        raise WireError(f"bad magic {magic!r} (expected {WIRE_MAGIC!r})")
+    if version != WIRE_VERSION:
+        raise WireError(f"wire version {version} not supported (have {WIRE_VERSION})")
+    body = data[_HEADER.size :]
+    if len(body) != body_len:
+        raise WireError(f"body length {len(body)} != header body_len {body_len}")
+    if zlib.crc32(body) != crc:
+        raise WireError("CRC32 mismatch: payload corrupted in transit")
+    if expect_records is not None and n_records != expect_records:
+        raise WireError(f"expected {expect_records} records, header says {n_records}")
+    return body, n_records
+
+
+def decode_update(data: bytes) -> Pytree:
+    """Inverse of ``encode_update``: rebuild the pytree bit-exactly.
+
+    Dict containers round-trip as dicts (string and int keys preserved);
+    list/tuple containers come back as lists (index paths carry no
+    tuple-vs-list distinction), and attr-style custom nodes (GetAttrKey
+    paths) come back as plain dicts keyed by attribute name — leaves are
+    always bit-exact, containers normalize to dict/list. A single-leaf
+    tree with an empty path decodes to the bare leaf.
+    """
+    body, n_records = _check_header(data)
+    r = _Reader(body)
+    root: dict = {}
+    bare_leaf = None
+    for _ in range(n_records):
+        path = r.take(r.u16()).decode("utf-8")
+        kind = r.u8()
+        if kind == _KIND_TERNARY:
+            leaf = _decode_ternary_body(r)
+        elif kind == _KIND_RAW:
+            leaf = _decode_array(r)
+        else:
+            raise WireError(f"unknown record kind {kind}")
+        if not path:
+            if n_records != 1:
+                raise WireError("empty path in multi-record update")
+            bare_leaf = leaf
+        else:
+            _insert(root, path.split(_PATH_SEP), leaf)
+    if r.pos != len(body):
+        raise WireError(f"{len(body) - r.pos} trailing bytes after last record")
+    if bare_leaf is not None:
+        return bare_leaf
+    return _containerize(root)
+
+
+def update_nbytes(tree: Pytree) -> int:
+    """Measured wire size of a pytree: ``len(encode_update(tree))``."""
+    return len(encode_update(tree))

@@ -99,15 +99,12 @@ def decompress_pytree(wire_tree: Pytree, spec: CompressionSpec) -> Pytree:
 
 
 def wire_nbytes(wire_tree: Pytree) -> int:
-    """Actual bytes of a compressed pytree on the wire."""
-    import numpy as np
+    """Actual bytes of a compressed pytree on the wire.
 
-    total = 0
-    for leaf in jax.tree_util.tree_leaves(
-        wire_tree, is_leaf=lambda x: isinstance(x, TernaryTensor)
-    ):
-        if isinstance(leaf, TernaryTensor):
-            total += leaf.nbytes_wire()
-        else:
-            total += leaf.size * np.dtype(leaf.dtype).itemsize
-    return total
+    Delegates to the ``repro.comm.wire`` codec: the tree is serialized and
+    the buffer length measured, so header/framing overhead is included and
+    this number is exactly what a transport would move.
+    """
+    from repro.comm.wire import update_nbytes  # lazy: comm imports core.ternary
+
+    return update_nbytes(wire_tree)

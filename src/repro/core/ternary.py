@@ -103,6 +103,19 @@ class TernaryTensor:
         """Unpacked codes {-1,0,+1} at logical shape (int8)."""
         return unpack2bit(self.packed, self.n_elements, jnp.int8).reshape(self.shape)
 
+    def to_bytes(self) -> bytes:
+        """Serialize to the framed ``repro.comm.wire`` single-tensor format."""
+        from repro.comm.wire import encode_tensor  # lazy: comm imports this module
+
+        return encode_tensor(self)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "TernaryTensor":
+        """Inverse of ``to_bytes`` (CRC-checked)."""
+        from repro.comm.wire import decode_tensor
+
+        return decode_tensor(data)
+
 
 def encode_ternary(i_t: jax.Array, w_q: jax.Array, dtype: str = "float32") -> TernaryTensor:
     """Wrap ternary codes + scale into wire format."""

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fttq
-from repro.core.ternary import TernaryTensor, encode_ternary, packed_nbytes
+from repro.core.ternary import TernaryTensor, encode_ternary
 
 Pytree = Any
 
@@ -45,15 +45,10 @@ class TernaryUpdate:
     client_id: int = -1
 
     def nbytes_upstream(self) -> int:
-        total = 0
-        for leaf in jax.tree_util.tree_leaves(
-            self.payload, is_leaf=lambda x: isinstance(x, TernaryTensor)
-        ):
-            if isinstance(leaf, TernaryTensor):
-                total += leaf.nbytes_wire()
-            else:
-                total += leaf.size * np.dtype(leaf.dtype).itemsize
-        return total
+        """Measured upstream size: length of the serialized wire buffer."""
+        from repro.comm.wire import update_nbytes  # lazy: comm imports core.ternary
+
+        return update_nbytes(self.payload)
 
 
 def client_update_payload(
@@ -158,37 +153,16 @@ def server_requantize(
 
 
 # --------------------------------------------------------------------------
-# Communication accounting (paper Table IV).
+# Communication accounting (paper Table IV) — measured, not estimated: both
+# helpers serialize the actual wire payload and take len(bytes).
 # --------------------------------------------------------------------------
 
 
-def _tree_nbytes_fp32(params: Pytree) -> int:
-    return sum(l.size * 4 for l in jax.tree_util.tree_leaves(params))
-
-
-def _tree_nbytes_ternary(params: Pytree, cfg: fttq.FTTQConfig) -> int:
-    """2 bits per quantizable weight + 4B scale/layer; fp32 for the rest."""
-    total = 0
-
-    def visit(path, leaf):
-        nonlocal total
-        if fttq.is_quantizable(path, leaf, cfg):
-            if leaf.ndim >= 3:
-                # per-layer scale for stacked weights
-                total += packed_nbytes(leaf.size) + 4 * leaf.shape[0]
-            else:
-                total += packed_nbytes(leaf.size) + 4
-        else:
-            total += leaf.size * 4
-        return leaf
-
-    jax.tree_util.tree_map_with_path(visit, params)
-    return total
-
-
 def fedavg_round_bytes(params: Pytree, n_participants: int) -> dict:
-    """FP32 FedAvg per-round bytes (upload = download = n·|θ|·4)."""
-    per_client = _tree_nbytes_fp32(params)
+    """FP32 FedAvg per-round bytes (upload = download = n·|serialized θ|)."""
+    from repro.comm.wire import update_nbytes
+
+    per_client = update_nbytes(params)
     return {
         "upload": per_client * n_participants,
         "download": per_client * n_participants,
@@ -199,8 +173,10 @@ def fedavg_round_bytes(params: Pytree, n_participants: int) -> dict:
 def tfedavg_round_bytes(
     params: Pytree, n_participants: int, cfg: fttq.FTTQConfig
 ) -> dict:
-    """T-FedAvg per-round bytes: ternary both directions (paper §III.B)."""
-    per_client = _tree_nbytes_ternary(params, cfg)
+    """T-FedAvg per-round bytes: serialized ternary wire both directions."""
+    from repro.comm.wire import update_nbytes
+
+    per_client = update_nbytes(server_requantize(params, cfg))
     return {
         "upload": per_client * n_participants,
         "download": per_client * n_participants,

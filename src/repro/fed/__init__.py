@@ -1,7 +1,18 @@
 """Federated learning runtime: the paper's round-based protocol (selection →
-configuration → reporting), FedAvg and T-FedAvg, with straggler mitigation
-and exact communication metering."""
+configuration → reporting), FedAvg and T-FedAvg, over a real wire/transport
+model (``repro.comm``) with channel-emergent straggler mitigation — plus an
+event-driven buffered-asynchronous server (FedBuf-style). ``run_federated``
+is the unified entry point; ``cfg.mode`` picks "sync" or "async"."""
 
-from repro.fed.simulation import FedConfig, FedResult, run_federated
+from repro.fed.async_server import run_federated_async
+from repro.fed.simulation import (
+    FedConfig,
+    FedResult,
+    run_federated,
+    run_federated_sync,
+)
 
-__all__ = ["FedConfig", "FedResult", "run_federated"]
+__all__ = [
+    "FedConfig", "FedResult",
+    "run_federated", "run_federated_sync", "run_federated_async",
+]

@@ -1,40 +1,47 @@
 """Round-based federated simulation (paper Algorithm 2 + §II.A protocol).
 
 Each round:
-  1. SELECTION      — sample ⌈λN⌉ clients; clients may fail or exceed the
-                      straggler deadline (simulated) and are dropped — the
-                      protocol tolerates partial participation by design, so
-                      a lost client only reweights the average (fault
-                      tolerance: no round is ever lost).
-  2. CONFIGURATION  — broadcast the current global model (ternary wire for
-                      T-FedAvg — downstream compression, §III.B).
-  3. REPORTING      — clients run E local epochs (FTTQ QAT for T-FedAvg) and
-                      upload (ternary wire for T-FedAvg); the server
+  1. SELECTION      — sample ⌈λN⌉ clients.
+  2. CONFIGURATION  — the server SERIALIZES the current global model through
+                      ``repro.comm.wire`` (ternary wire for T-FedAvg —
+                      downstream compression, §III.B) and broadcasts the
+                      buffer; clients DECODE it. Download bytes are
+                      ``len(buffer)`` per recipient.
+  3. REPORTING      — clients run E local epochs (FTTQ QAT for T-FedAvg),
+                      serialize their update, and upload; the server decodes,
                       aggregates |D_k|-weighted and (T-FedAvg) re-quantizes.
 
-Bytes are metered from the ACTUAL wire payloads, not formulas, so Table IV
-is reproduced by measurement.
+Transfer and compute times come from the ``repro.comm.channel`` model, so a
+straggler is a client whose download + compute + upload exceeded the round
+deadline — an emergent property of bytes ÷ bandwidth, not a coin flip. The
+protocol tolerates partial participation by design: a dropped client only
+reweights the average, and the fastest client is always kept so no round is
+ever lost.
+
+``run_federated`` is the unified entry point: ``cfg.mode`` selects this
+synchronous server or the event-driven buffered-asynchronous one in
+``fed/async_server.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import Channel, ChannelConfig
+from repro.comm.wire import decode_update, encode_update
 from repro.core import fttq as fttq_mod
-from repro.core.compression import wire_nbytes
+from repro.core.compression import CompressionSpec, decompress_pytree
 from repro.core.tfedavg import (
     TernaryUpdate,
     client_update_payload,
     server_aggregate,
     server_requantize,
 )
-from repro.core.ternary import TernaryTensor
 from repro.data.federated import ClientDataset
 from repro.optim import Optimizer
 
@@ -44,14 +51,20 @@ Pytree = Any
 @dataclasses.dataclass
 class FedConfig:
     algorithm: str = "tfedavg"          # "fedavg" | "tfedavg"
+    mode: str = "sync"                  # "sync" | "async" (buffered, FedBuf-style)
     n_clients: int = 100
     participation: float = 0.1          # λ
     local_epochs: int = 5               # E
     batch_size: int = 64                # B
-    rounds: int = 100
+    rounds: int = 100                   # sync rounds / async aggregations
     fttq: fttq_mod.FTTQConfig = dataclasses.field(default_factory=fttq_mod.FTTQConfig)
-    straggler_drop_prob: float = 0.0    # P(client misses the round deadline)
+    channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
     seed: int = 0
+    # --- async (buffered) server knobs -----------------------------------
+    buffer_k: int = 4                   # aggregate every K arrivals
+    max_concurrency: int = 0            # in-flight clients (0 → ⌈λN⌉)
+    staleness_exponent: float = 0.5     # arrival weight ∝ (1+staleness)^-α
+    mixing_rate: float = 1.0            # η: global ← (1-η)·global + η·buffer avg
 
 
 @dataclasses.dataclass
@@ -62,6 +75,15 @@ class FedResult:
     download_bytes: int
     rounds_run: int
     participants_per_round: list
+    # wall-clock view from the channel model (simulated seconds):
+    round_times: list = dataclasses.field(default_factory=list)
+    dropped_per_round: list = dataclasses.field(default_factory=list)
+    transfer_summary: dict = dataclasses.field(default_factory=dict)
+    staleness_per_agg: list = dataclasses.field(default_factory=list)
+
+    @property
+    def total_time_s(self) -> float:
+        return float(sum(self.round_times))
 
 
 def _ce_loss(apply_fn, params, xb, yb):
@@ -114,7 +136,79 @@ def _make_local_steps(apply_fn, optimizer: Optimizer, cfg: FedConfig):
     return fp_step, qat_step
 
 
-def run_federated(
+# --------------------------------------------------------------------------
+# Shared protocol pieces (used by both the sync and async servers).
+# --------------------------------------------------------------------------
+
+
+_TERNARY_SPEC = CompressionSpec(kind="ternary")
+
+
+def dequantize_tree(tree: Pytree) -> Pytree:
+    """Dequantize any TernaryTensor leaves; raw leaves pass through."""
+    return decompress_pytree(tree, _TERNARY_SPEC)
+
+
+def broadcast_blob(global_params: Pytree, cfg: FedConfig) -> bytes:
+    """Serialize the downstream payload (ternary wire for T-FedAvg)."""
+    if cfg.algorithm == "tfedavg":
+        return encode_update(server_requantize(global_params, cfg.fttq))
+    return encode_update(global_params)
+
+
+def receive_broadcast(blob: bytes) -> Pytree:
+    """Client side of CONFIGURATION: decode the wire buffer, dequantize.
+    Decoded once per broadcast — the result is shared by every recipient of
+    the same (immutable) buffer."""
+    return dequantize_tree(decode_update(blob))
+
+
+def train_client(
+    client: ClientDataset,
+    start_params: Pytree,
+    cfg: FedConfig,
+    optimizer: Optimizer,
+    fp_step,
+    qat_step,
+    rng: np.random.Generator,
+) -> bytes:
+    """One client's round: train locally from the decoded broadcast
+    (``receive_broadcast``), serialize the upstream payload."""
+    params_k = start_params
+    opt_state = optimizer.init(params_k)
+    if cfg.algorithm == "tfedavg":
+        wq = fttq_mod.init_wq_tree(params_k, cfg.fttq)
+        for xb, yb in client.batches(cfg.batch_size, rng, cfg.local_epochs):
+            params_k, wq, opt_state, _ = qat_step(
+                params_k, wq, opt_state, jnp.asarray(xb), jnp.asarray(yb)
+            )
+        payload = client_update_payload(params_k, wq, cfg.fttq)
+    else:
+        for xb, yb in client.batches(cfg.batch_size, rng, cfg.local_epochs):
+            params_k, opt_state, _ = fp_step(
+                params_k, opt_state, jnp.asarray(xb), jnp.asarray(yb)
+            )
+        payload = params_k
+    return encode_update(payload)
+
+
+def client_round_time(
+    channel: Channel, k: int, down_nbytes: int, up_nbytes: int,
+    n_examples: int,
+) -> float:
+    """Simulated wall-clock for one client's full round trip."""
+    t_down = channel.transfer(k, down_nbytes, "down")
+    t_comp = channel.compute_time(k, n_examples)
+    t_up = channel.transfer(k, up_nbytes, "up")
+    return t_down + t_comp + t_up
+
+
+# --------------------------------------------------------------------------
+# Synchronous server (paper Algorithm 2).
+# --------------------------------------------------------------------------
+
+
+def run_federated_sync(
     apply_fn: Callable,
     global_params: Pytree,
     clients: list[ClientDataset],
@@ -124,64 +218,74 @@ def run_federated(
     *,
     eval_every: int = 10,
 ) -> FedResult:
-    """Run the protocol; eval_fn(params) → (accuracy, loss) on held-out data."""
     rng = np.random.default_rng(cfg.seed)
     fp_step, qat_step = _make_local_steps(apply_fn, optimizer, cfg)
-    is_t = cfg.algorithm == "tfedavg"
-    fcfg = cfg.fttq
+    channel = Channel(cfg.channel, len(clients), seed=cfg.seed + 1)
+    deadline = cfg.channel.deadline_s if cfg.channel.deadline_s > 0 else float("inf")
 
     up_bytes = 0
     down_bytes = 0
     acc_hist, loss_hist, parts_hist = [], [], []
+    round_times, dropped_hist = [], []
     n_sel = max(int(np.ceil(cfg.participation * len(clients))), 1)
 
     for r in range(cfg.rounds):
-        # ---- selection + straggler/failure mitigation -------------------
+        # ---- selection --------------------------------------------------
         selected = rng.choice(len(clients), size=n_sel, replace=False)
-        survivors = [
-            k for k in selected if rng.random() >= cfg.straggler_drop_prob
-        ]
-        if not survivors:           # never lose a round: keep the fastest one
-            survivors = [int(selected[0])]
-        parts_hist.append(len(survivors))
 
-        # ---- configuration (downstream broadcast) -----------------------
-        if is_t:
-            wire_global = server_requantize(global_params, fcfg)
-            down_bytes += wire_nbytes(wire_global) * len(survivors)
-            start_params = jax.tree_util.tree_map(
-                lambda l: l.dequantize() if isinstance(l, TernaryTensor) else l,
-                wire_global,
-                is_leaf=lambda x: isinstance(x, TernaryTensor),
-            )
-        else:
-            down_bytes += wire_nbytes(global_params) * len(survivors)
-            start_params = global_params
+        # ---- configuration (downstream broadcast, one serialized buffer) -
+        blob = broadcast_blob(global_params, cfg)
+        down_bytes += len(blob) * len(selected)
+        start_params = receive_broadcast(blob)
 
         # ---- local training + reporting (upstream) ----------------------
-        updates = []
-        for k in survivors:
-            c = clients[k]
-            params_k = start_params
-            opt_state = optimizer.init(params_k)
-            if is_t:
-                wq = fttq_mod.init_wq_tree(params_k, fcfg)
-                for xb, yb in c.batches(cfg.batch_size, rng, cfg.local_epochs):
-                    params_k, wq, opt_state, _ = qat_step(
-                        params_k, wq, opt_state, jnp.asarray(xb), jnp.asarray(yb)
-                    )
-                payload = client_update_payload(params_k, wq, fcfg)
-            else:
-                for xb, yb in c.batches(cfg.batch_size, rng, cfg.local_epochs):
-                    params_k, opt_state, _ = fp_step(
-                        params_k, opt_state, jnp.asarray(xb), jnp.asarray(yb)
-                    )
-                payload = params_k
-            u = TernaryUpdate(payload=payload, n_samples=len(c), client_id=int(k))
-            up_bytes += u.nbytes_upstream()
-            updates.append(u)
+        # Download + compute time are known before training; a client whose
+        # link/device alone blows the deadline is dropped WITHOUT paying for
+        # local training (the upload could only add time). The fastest
+        # pre-time client always trains, so no round is ever lost.
+        pre = []  # (t_down + t_comp, client_id)
+        for k in selected:
+            k = int(k)
+            t_down = channel.transfer(k, len(blob), "down")
+            t_comp = channel.compute_time(k, len(clients[k]) * cfg.local_epochs)
+            pre.append((t_down + t_comp, k))
+        pre.sort()
 
-        # ---- aggregation -------------------------------------------------
+        arrivals = []  # (total_time, client_id, up_blob) — trained clients
+        for pt, k in pre:
+            if pt > deadline and arrivals:
+                continue            # decidably late; round already safe
+            up_blob = train_client(
+                clients[k], start_params, cfg, optimizer, fp_step, qat_step, rng
+            )
+            t_up = channel.transfer(k, len(up_blob), "up")
+            arrivals.append((pt + t_up, k, up_blob))
+
+        # ---- straggler mitigation: emergent from the channel ------------
+        arrivals.sort(key=lambda a: a[0])
+        survivors = [a for a in arrivals if a[0] <= deadline]
+        if not survivors:            # never lose a round: keep the fastest one
+            survivors = [arrivals[0]]
+        n_dropped = len(pre) - len(survivors)
+        dropped_hist.append(n_dropped)
+        parts_hist.append(len(survivors))
+        # sync barrier: no drops → the last survivor closes the round; any
+        # drop → the server waited out the full deadline (and, in the
+        # all-dropped fallback, for the fastest client beyond it).
+        last_survivor = max(a[0] for a in survivors)
+        round_times.append(
+            max(deadline, last_survivor) if n_dropped else last_survivor
+        )
+
+        # ---- aggregation (server decodes the real upstream buffers) -----
+        updates = []
+        for total, k, up_blob in survivors:
+            up_bytes += len(up_blob)
+            updates.append(TernaryUpdate(
+                payload=decode_update(up_blob),
+                n_samples=len(clients[k]),
+                client_id=k,
+            ))
         global_params = server_aggregate(updates)
 
         if (r + 1) % eval_every == 0 or r == cfg.rounds - 1:
@@ -196,4 +300,38 @@ def run_federated(
         download_bytes=down_bytes,
         rounds_run=cfg.rounds,
         participants_per_round=parts_hist,
+        round_times=round_times,
+        dropped_per_round=dropped_hist,
+        transfer_summary=channel.summary(),
+    )
+
+
+def run_federated(
+    apply_fn: Callable,
+    global_params: Pytree,
+    clients: list[ClientDataset],
+    cfg: FedConfig,
+    optimizer: Optimizer,
+    eval_fn: Callable[[Pytree], tuple[float, float]],
+    *,
+    eval_every: int = 10,
+) -> FedResult:
+    """Unified entry point: dispatches on ``cfg.mode``.
+
+    - "sync":  Algorithm 2's round-synchronous server (this module).
+    - "async": event-driven buffered-asynchronous server
+               (``fed.async_server``, FedBuf-style).
+    """
+    if cfg.mode == "async":
+        from repro.fed.async_server import run_federated_async
+
+        return run_federated_async(
+            apply_fn, global_params, clients, cfg, optimizer, eval_fn,
+            eval_every=eval_every,
+        )
+    if cfg.mode != "sync":
+        raise ValueError(f"unknown federated mode {cfg.mode!r}")
+    return run_federated_sync(
+        apply_fn, global_params, clients, cfg, optimizer, eval_fn,
+        eval_every=eval_every,
     )

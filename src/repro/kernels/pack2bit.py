@@ -56,6 +56,38 @@ def pack2bit(
     )(i_t)
 
 
+def pad_to_packable(i_t: jax.Array, lanes: int = 128) -> tuple[jax.Array, int]:
+    """Zero-pad + reshape an arbitrary-size ternary array for ``pack2bit``.
+
+    The Pallas codec wants a (K, N) tile with K % 4 == 0; wire payload
+    leaves are arbitrary shapes (biases excluded, but conv kernels, odd
+    hidden sizes and stacked scan weights all occur). This flattens,
+    pads with code 0 to a multiple of ``4 * lanes`` and returns the
+    (K, lanes) view plus the original element count, so
+
+        tiled, n = pad_to_packable(x)
+        packed = pack2bit(tiled)                    # kernel path
+        flat   = unpack_padded(packed, n)           # exact inverse
+
+    round-trips any shape. Padding is zeros (code 1 on the wire), so a
+    decoder that trusts ``n`` never sees it.
+    """
+    flat = i_t.reshape(-1)
+    n = flat.shape[0]
+    chunk = 4 * lanes
+    pad = (-n) % chunk
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, lanes), n
+
+
+def unpack_padded(packed: jax.Array, n_elements: int, *, dtype=jnp.int8,
+                  interpret: bool = False) -> jax.Array:
+    """Inverse of ``pack2bit(pad_to_packable(x))``: flat ternary of n values."""
+    out = unpack2bit(packed, dtype=dtype, interpret=interpret)
+    return out.reshape(-1)[:n_elements]
+
+
 @functools.partial(jax.jit, static_argnames=("dtype", "block", "interpret"))
 def unpack2bit(
     packed: jax.Array,

@@ -2,6 +2,12 @@
 the paper's deployed-inference path (§III: "at inference stage, only the
 quantized model is needed for prediction").
 
+With ``--ternary`` the deployment artifact is built through the
+``repro.comm.wire`` codec: the model is compressed to the ternary wire
+format, SERIALIZED, and decoded back before serving — so the reported
+download size is the measured edge-checkpoint byte count and the served
+weights provably round-tripped the wire.
+
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
         --batch 4 --prompt-len 32 --gen 16 --ternary
 """
@@ -14,19 +20,30 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.comm import ChannelConfig, ClientLink, decode_update, encode_update
 from repro.configs import get_config, get_reduced
-from repro.core import FTTQConfig
-from repro.core import fttq as F
+from repro.core import CompressionSpec, FTTQConfig, decompress_pytree
+from repro.core import compression as comp
 from repro.models.transformer import (
     decode_step, forward, init_cache, init_params, param_count,
 )
 
 
-def ternary_deploy(params, cfg: FTTQConfig):
-    """Quantize → dequantize the model for deployment (what a 2-bit edge
-    checkpoint loads to; on TPU the packed path uses kernels.ternary_matmul)."""
-    wq = F.init_wq_tree(params, cfg)
-    return F.quantize_tree(params, wq, cfg)
+def ternary_deploy(params, cfg: FTTQConfig, *, link: ClientLink | None = None):
+    """Compress → serialize → decode → dequantize the deployment artifact.
+
+    Returns (served_params, wire_bytes, est_download_s, link): what a 2-bit
+    edge checkpoint loads to (on TPU the packed path uses
+    kernels.ternary_matmul), its measured on-wire size, the estimated
+    edge-download time, and the link the estimate assumed."""
+    spec = CompressionSpec(kind="ternary", fttq=cfg)
+    wire_tree, _ = comp.compress_pytree(params, spec)
+    blob = encode_update(wire_tree)
+    served = decompress_pytree(decode_update(blob), spec)
+    if link is None:
+        c = ChannelConfig()
+        link = ClientLink(0, c.mean_bandwidth_bytes_s, c.base_latency_s, 1.0)
+    return served, len(blob), link.transfer_time(len(blob)), link
 
 
 def main():
@@ -47,7 +64,12 @@ def main():
     print(f"serving {cfg.name}: {param_count(cfg) / 1e6:.1f}M params, "
           f"ternary={args.ternary}")
     if args.ternary:
-        params = ternary_deploy(params, FTTQConfig())
+        fp_bytes = len(encode_update(params))
+        params, wire_bytes, dl_s, link = ternary_deploy(params, FTTQConfig())
+        print(f"edge checkpoint: {wire_bytes / 1e6:.2f} MB on the wire "
+              f"(fp32 {fp_bytes / 1e6:.2f} MB, {fp_bytes / wire_bytes:.1f}× "
+              f"smaller), est. download {dl_s:.1f}s "
+              f"@ {link.bandwidth_bytes_s / 1e6:.1f} MB/s")
 
     b, s = args.batch, args.prompt_len
     prompts = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)

@@ -12,6 +12,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
@@ -107,6 +110,27 @@ def test_compression_error_bounded(seed):
     err = np.abs(np.asarray(tree["w"]) - np.asarray(rec["w"]))
     bound = float(jnp.max(jnp.abs(tree["w"])))
     assert err.max() <= bound + 1e-4
+
+
+@given(
+    n=st.integers(min_value=1, max_value=2048),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_wire_update_roundtrip(n, seed):
+    """encode_update/decode_update is the identity on mixed ternary+raw
+    payloads of any leaf size (including non-multiples of 4)."""
+    from repro.comm import decode_update, encode_update
+    from repro.core.ternary import encode_ternary
+
+    rng = np.random.default_rng(seed)
+    i_t = jnp.asarray(rng.integers(-1, 2, size=(n,)).astype(np.int8))
+    raw = jnp.asarray(rng.normal(size=(3,)).astype(np.float32))
+    tree = {"w": encode_ternary(i_t, jnp.float32(rng.normal())), "b": raw}
+    back = decode_update(encode_update(tree))
+    np.testing.assert_array_equal(np.asarray(back["w"].ternary()), np.asarray(i_t))
+    np.testing.assert_array_equal(np.asarray(back["w"].w_q), np.asarray(tree["w"].w_q))
+    np.testing.assert_array_equal(np.asarray(back["b"]), np.asarray(raw))
 
 
 @given(seed=st.integers(min_value=0, max_value=2**31 - 1))

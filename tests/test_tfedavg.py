@@ -96,15 +96,28 @@ def test_protocol_end_to_end_learns(dataset):
 
 
 def test_straggler_mitigation_never_loses_round(dataset):
+    """Stragglers are emergent: a tight round deadline over a slow,
+    heterogeneous channel drops clients — yet no round is ever lost."""
+    from repro.comm import ChannelConfig
+
     x, y, xt, yt = dataset
     clients = partition_iid(x, y, 6)
     params = init_mlp_mnist(jax.random.PRNGKey(5))
-    cfg = FedConfig(algorithm="tfedavg", participation=0.5, local_epochs=1,
-                    batch_size=32, rounds=3, straggler_drop_prob=0.9)
+    chan = ChannelConfig(mean_bandwidth_bytes_s=2e5, bandwidth_sigma=1.0,
+                         deadline_s=0.25, compute_speed_sigma=1.0)
+    cfg = FedConfig(algorithm="tfedavg", participation=1.0, local_epochs=1,
+                    batch_size=32, rounds=3, channel=chan)
     res = run_federated(mlp_mnist, params, clients, cfg, adam(1e-3),
                         _eval_fn(xt, yt), eval_every=3)
     assert res.rounds_run == 3
     assert all(p >= 1 for p in res.participants_per_round)
+    assert sum(res.dropped_per_round) > 0      # the deadline actually bit
+    # any round that dropped someone cost the server the full deadline (or
+    # longer, if the all-dropped fallback waited for the fastest client).
+    assert all(
+        t >= 0.25 - 1e-9
+        for t, d in zip(res.round_times, res.dropped_per_round) if d > 0
+    )
 
 
 def test_noniid_partition_properties(dataset):
