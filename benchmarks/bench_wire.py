@@ -6,6 +6,9 @@ Rows (name, us_per_call, derived):
   wire_decode_<model>   derived = decode throughput, MB/s
   wire_bpp_<model>      derived = serialized ternary bytes per parameter
   wire_ratio_<model>    derived = fp32 serialized bytes / ternary bytes
+  codec_encode_<name>   per-registry-codec serialize throughput, MB/s
+  codec_decode_<name>   per-registry-codec decode+decompress throughput, MB/s
+  codec_bpp_<name>      per-registry-codec serialized bytes per parameter
 """
 
 from __future__ import annotations
@@ -15,13 +18,23 @@ import time
 import jax
 
 from repro.comm.wire import decode_update, encode_update
-from repro.core import FTTQConfig
+from repro.core import CodecSpec, FTTQConfig, compress_pytree, decompress_pytree
 from repro.core.tfedavg import server_requantize
 from repro.models.paper_models import (
     init_mlp_mnist, init_resnet_cifar,
 )
 
 FTTQ = FTTQConfig()
+
+# one CodecSpec per registry codec, applied tree-wide (weights AND residual
+# leaves) so codec_bpp_* is the intrinsic cost of each wire format
+CODEC_SPECS = {
+    "none": CodecSpec(kind="none", residual="none"),
+    "ternary": CodecSpec(kind="ternary", residual="none", fttq=FTTQ),
+    "fp16": CodecSpec(kind="fp16", residual="fp16"),
+    "bf16": CodecSpec(kind="bf16", residual="bf16"),
+    "topk10": CodecSpec(kind="topk", residual="topk", topk_fraction=0.1),
+}
 
 
 def _models():
@@ -66,4 +79,29 @@ def wire_codec():
         rows.append((f"wire_bpp_{name}", 0.0, round(len(blob) / n_params, 4)))
         rows.append((f"wire_ratio_{name}", 0.0,
                      round(len(fp_blob) / len(blob), 2)))
+    return rows
+
+
+def codec_table():
+    """Per-registry-codec throughput and bytes-per-param on the paper MLP."""
+    params = init_mlp_mnist(jax.random.PRNGKey(3))
+    n_params = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    rows = []
+    for name, spec in CODEC_SPECS.items():
+        wire_tree, _ = compress_pytree(params, spec)
+
+        def enc(tree=wire_tree):
+            return encode_update(tree)
+
+        blob, dt_e = _timed(enc)
+        rows.append((f"codec_encode_{name}", round(dt_e * 1e6, 1),
+                     round(len(blob) / dt_e / 1e6, 1)))
+
+        def dec(b=blob):
+            return decompress_pytree(decode_update(b))
+
+        _, dt_d = _timed(dec)
+        rows.append((f"codec_decode_{name}", round(dt_d * 1e6, 1),
+                     round(len(blob) / dt_d / 1e6, 1)))
+        rows.append((f"codec_bpp_{name}", 0.0, round(len(blob) / n_params, 4)))
     return rows

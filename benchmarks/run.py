@@ -17,6 +17,7 @@ from benchmarks import bench_kernels, bench_tables, bench_wire
 
 SECTIONS = {
     "wire": bench_wire.wire_codec,
+    "codecs": bench_wire.codec_table,
     "table2": bench_tables.table2_iid_accuracy,
     "table3": bench_tables.table3_noniid,
     "table4": bench_tables.table4_comm_costs,

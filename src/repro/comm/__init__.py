@@ -4,28 +4,35 @@ Everything the federated protocol puts "on the wire" goes through this
 package:
 
   - ``wire``:    byte-level serialization of update pytrees (versioned
-                 header, per-leaf records, CRC32 integrity). Upload /
-                 download bytes are measured as ``len(encode_update(...))``
-                 — real serialized buffers, never analytic formulas.
+                 header, per-leaf records dispatched through the codec
+                 record registry, CRC32 integrity; v2 with a v1 decode
+                 path). Upload / download bytes are measured as
+                 ``len(encode_update(...))`` — real serialized buffers,
+                 never analytic formulas.
   - ``channel``: a simulated transport that converts payload bytes into
                  wall-clock transfer times from per-client bandwidth /
                  latency distributions — stragglers emerge from
-                 bytes ÷ bandwidth instead of a coin flip.
+                 bytes ÷ bandwidth instead of a coin flip — with optional
+                 server-NIC contention across concurrent transfers.
 """
 
 from repro.comm.channel import Channel, ChannelConfig, ClientLink, TransferEvent
 from repro.comm.wire import (
+    SUPPORTED_VERSIONS,
     WIRE_VERSION,
     WireError,
+    WireRecord,
     decode_tensor,
     decode_update,
     encode_tensor,
     encode_update,
+    register_record,
     update_nbytes,
 )
 
 __all__ = [
-    "WIRE_VERSION", "WireError",
+    "WIRE_VERSION", "SUPPORTED_VERSIONS", "WireError",
+    "WireRecord", "register_record",
     "encode_update", "decode_update", "encode_tensor", "decode_tensor",
     "update_nbytes",
     "Channel", "ChannelConfig", "ClientLink", "TransferEvent",

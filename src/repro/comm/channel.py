@@ -11,6 +11,14 @@ so *stragglers are emergent*: a client is late because its payload is
 large or its link is slow, not because a coin flip said so. Ternary
 compression therefore shows up directly as shorter transfer times — the
 paper's Table IV claim expressed in seconds instead of bytes.
+
+Concurrent transfers additionally contend for the SERVER's NIC
+(``ChannelConfig.server_bandwidth_bytes_s``): ``transfer_concurrent``
+runs a fluid max-min fair-share model where simultaneous flows split the
+server's capacity (each still capped by its own client link), so a
+broadcast to N clients through a saturated NIC takes ~N× longer than a
+single download — the shared-bottleneck effect a per-link model misses.
+The default cap is infinite, which reduces exactly to independent links.
 """
 
 from __future__ import annotations
@@ -36,6 +44,10 @@ class ChannelConfig:
         (0 or inf → never drop).
       compute_speed_sigma: σ of the log-normal per-client compute speed
         multiplier (device heterogeneity; 1.0 = nominal).
+      server_bandwidth_bytes_s: total server NIC capacity shared by
+        SIMULTANEOUS transfers (0 or inf → no shared bottleneck, like
+        ``deadline_s``). Applied by ``transfer_concurrent`` with max-min
+        fairness.
     """
 
     mean_bandwidth_bytes_s: float = 1e6
@@ -44,6 +56,7 @@ class ChannelConfig:
     latency_jitter_s: float = 0.01
     deadline_s: float = float("inf")
     compute_speed_sigma: float = 0.3
+    server_bandwidth_bytes_s: float = float("inf")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +80,60 @@ class TransferEvent:
     direction: str  # "down" | "up"
     nbytes: int
     seconds: float
+
+
+def _fair_share_completion(
+    starts: list[float], nbytes: list[int], caps: list[float], total_cap: float
+) -> list[float]:
+    """Fluid processor-sharing model: completion time of each flow.
+
+    Flow i becomes active at ``starts[i]`` with ``nbytes[i]`` to move, its
+    rate capped by its own link ``caps[i]``; active flows share
+    ``total_cap`` with max-min fairness (water-filling). Returns absolute
+    completion times. With ``total_cap`` = inf every flow runs at its own
+    cap and this degenerates to latency + bytes/bandwidth.
+    """
+    n = len(starts)
+    remaining = [float(b) for b in nbytes]
+    done = [0.0] * n
+    finished = [False] * n
+    t = 0.0
+    while not all(finished):
+        active = [i for i in range(n) if not finished[i] and starts[i] <= t]
+        if not active:
+            t = min(s for i, s in enumerate(starts) if not finished[i] and s > t)
+            continue
+        # --- max-min water-filling over the active flows ------------------
+        rates = {}
+        pool = total_cap
+        todo = list(active)
+        while todo:
+            share = pool / len(todo) if pool != float("inf") else float("inf")
+            capped = [i for i in todo if caps[i] <= share]
+            if not capped:
+                for i in todo:
+                    rates[i] = share
+                todo = []
+            else:
+                for i in capped:
+                    rates[i] = caps[i]
+                    if pool != float("inf"):
+                        pool -= caps[i]
+                todo = [i for i in todo if i not in capped]
+        # --- advance to the next event (completion or a flow starting) ----
+        dt_complete = min(
+            remaining[i] / rates[i] if rates[i] > 0 else float("inf")
+            for i in active
+        )
+        upcoming = [s for i, s in enumerate(starts) if not finished[i] and s > t]
+        dt = min(dt_complete, min(upcoming) - t) if upcoming else dt_complete
+        for i in active:
+            remaining[i] -= rates[i] * dt
+            if remaining[i] <= 1e-9:
+                finished[i] = True
+                done[i] = t + dt
+        t += dt
+    return done
 
 
 class Channel:
@@ -96,6 +163,32 @@ class Channel:
         dt = self.links[client_id].transfer_time(nbytes, jitter)
         self.log.append(TransferEvent(client_id, direction, nbytes, dt))
         return dt
+
+    def transfer_concurrent(
+        self, client_ids: list[int], nbytes: list[int], direction: str
+    ) -> list[float]:
+        """Seconds for SIMULTANEOUS transfers contending for the server NIC.
+
+        Each flow starts after its own link latency (+jitter), then the data
+        phases share ``cfg.server_bandwidth_bytes_s`` max-min fairly, each
+        flow still capped by its client link. Per-client times are logged
+        and returned in ``client_ids`` order. With an infinite server cap
+        this is numerically identical to N independent ``transfer`` calls.
+        """
+        jitters = [
+            float(self._rng.uniform(0.0, self.cfg.latency_jitter_s))
+            for _ in client_ids
+        ]
+        starts = [self.links[k].latency_s + j for k, j in zip(client_ids, jitters)]
+        caps = [self.links[k].bandwidth_bytes_s for k in client_ids]
+        # 0-or-inf = uncapped, matching the deadline_s convention above
+        nic = self.cfg.server_bandwidth_bytes_s
+        done = _fair_share_completion(
+            starts, nbytes, caps, nic if nic > 0 else float("inf")
+        )
+        for k, b, dt in zip(client_ids, nbytes, done):
+            self.log.append(TransferEvent(k, direction, b, dt))
+        return done
 
     def compute_time(self, client_id: int, n_examples: int,
                      nominal_examples_per_s: float = 5000.0) -> float:

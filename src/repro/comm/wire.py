@@ -1,17 +1,18 @@
 """Byte-level wire codec for federated update payloads.
 
-An *update* is a pytree of leaves (raw arrays and/or ``TernaryTensor``)
-as produced by ``core.tfedavg.client_update_payload`` /
-``server_requantize``. ``encode_update`` serializes it into one
-self-describing buffer; ``decode_update`` rebuilds the pytree bit-exactly.
-All byte accounting in the repo is ``len(encode_update(tree))`` — measured
-from the actual buffer, never estimated.
+An *update* is a pytree of leaves (raw arrays and/or registered wire leaves:
+``TernaryTensor``, ``DowncastTensor``, ``TopKTensor``) as produced by
+``core.tfedavg.client_update_payload`` / ``server_requantize`` /
+``core.compression.compress_pytree``. ``encode_update`` serializes it into
+one self-describing buffer; ``decode_update`` rebuilds the pytree
+bit-exactly. All byte accounting in the repo is ``len(encode_update(tree))``
+— measured from the actual buffer, never estimated.
 
 Buffer layout (all little-endian):
 
     HEADER (24 B):
-      magic      4s   b"TFW1"
-      version    u16  WIRE_VERSION
+      magic      4s   b"TFW1"  (format family; the version field increments)
+      version    u16  lowest version able to carry the payload's records
       flags      u16  reserved (0)
       n_records  u32  number of leaf records
       crc32      u32  zlib.crc32 of the record section
@@ -21,41 +22,59 @@ Buffer layout (all little-endian):
       path_len   u16  + path bytes (utf-8; entries joined by "\\x1f",
                         each entry "d:<key>" for dict keys or
                         "i:<index>" for sequence indices)
-      kind       u8   0 = RAW, 1 = TERNARY
-      RAW:
-        dtype_len u8 + dtype ascii, ndim u8, dims u32×ndim,
-        data_len  u64 + raw little-endian array bytes
-      TERNARY (a ``TernaryTensor``):
-        logical dtype/ndim/dims as above (the unpacked tensor),
-        scale   dtype/ndim/dims + scale bytes (w_q, length derived),
-        packed_len u64 + packed 2-bit code bytes (4 codes/byte,
-        ``kernels.pack2bit`` layout)
+      kind       u8   dispatched through the record registry:
+        0 RAW      (v1) dtype/ndim/dims, data_len u64 + raw array bytes
+        1 TERNARY  (v1) a ``TernaryTensor``: logical dtype/ndim/dims, scale
+                   array (dtype/ndim/dims + bytes), packed_len u64 + packed
+                   2-bit codes (4 codes/byte, ``kernels.pack2bit`` layout)
+        2 DOWNCAST (v2) a ``DowncastTensor``: orig dtype string + the
+                   downcast payload as a RAW-style array
+        3 TOPK     (v2) a ``TopKTensor``: logical dtype/ndim/dims + indices
+                   array (uint32) + values array, both RAW-style
+
+Record kinds are a REGISTRY (``register_record``): each entry binds a kind
+byte to a wire-leaf class and its pack/unpack functions, plus the minimum
+wire version that may carry it. ``WIRE_VERSION`` is 2; encoders stamp the
+LOWEST version whose record set covers the payload (RAW/TERNARY-only
+buffers stay v1 so deployed v1-only readers keep working), and decoders
+accept every ``SUPPORTED_VERSIONS`` buffer — stored v1 checkpoints and
+captures stay readable forever.
 
 The CRC covers the whole record section; ``decode_update`` raises
-``WireError`` on magic/version/CRC mismatch or truncation, so a corrupted
-or torn transfer never silently yields wrong weights.
+``WireError`` on magic/version/CRC mismatch, truncation, or any malformed
+record — a corrupted or torn transfer never silently yields wrong weights
+and never escapes as a non-``WireError`` exception.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import struct
 import zlib
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compression import (
+    KIND_DOWNCAST,
+    KIND_RAW,
+    KIND_TERNARY,
+    KIND_TOPK,
+    DowncastTensor,
+    TopKTensor,
+    wire_leaf_types,
+)
 from repro.core.ternary import TernaryTensor
 
 Pytree = Any
 
 WIRE_MAGIC = b"TFW1"
-WIRE_VERSION = 1
+WIRE_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 
 _HEADER = struct.Struct("<4sHHIIQ")   # magic, version, flags, n_records, crc, body_len
-_KIND_RAW = 0
-_KIND_TERNARY = 1
 _PATH_SEP = "\x1f"
 
 
@@ -83,13 +102,20 @@ def _pack_meta(dtype: str, shape: tuple) -> bytes:
     return b"".join(out)
 
 
+def _pack_arr(arr: np.ndarray) -> bytes:
+    """RAW-style array field: meta + u64 length + raw little-endian bytes."""
+    return b"".join(
+        [_pack_array_meta(arr), struct.pack("<Q", arr.nbytes), arr.tobytes()]
+    )
+
+
 class _Reader:
     def __init__(self, buf: bytes):
         self.buf = buf
         self.pos = 0
 
     def take(self, n: int) -> bytes:
-        if self.pos + n > len(self.buf):
+        if n < 0 or self.pos + n > len(self.buf):
             raise WireError(
                 f"truncated wire buffer: need {n} bytes at offset {self.pos}, "
                 f"have {len(self.buf) - self.pos}"
@@ -114,10 +140,17 @@ class _Reader:
         return dt, tuple(shape)
 
 
+def _resolve_dtype(dtype: str) -> np.dtype:
+    try:
+        return np.dtype(jnp.dtype(dtype))
+    except TypeError as e:
+        raise WireError(f"unknown dtype {dtype!r} in wire record") from e
+
+
 def _decode_array(r: _Reader) -> jax.Array:
     dtype, shape = r.meta()
     data = r.take(r.u64())
-    np_dt = np.dtype(jnp.dtype(dtype))
+    np_dt = _resolve_dtype(dtype)
     n = int(np.prod(shape)) if shape else 1
     if len(data) != n * np_dt.itemsize:
         raise WireError(
@@ -129,8 +162,12 @@ def _decode_array(r: _Reader) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
-# Single-tensor codec (used by TernaryTensor.to_bytes / from_bytes).
+# Record bodies, one pair of pack/unpack per wire kind.
 # --------------------------------------------------------------------------
+
+
+def _raw_body(leaf) -> bytes:
+    return _pack_arr(_np(leaf))
 
 
 def _ternary_body(t: TernaryTensor) -> bytes:
@@ -151,7 +188,7 @@ def _ternary_body(t: TernaryTensor) -> bytes:
 def _decode_ternary_body(r: _Reader) -> TernaryTensor:
     dtype, shape = r.meta()
     s_dtype, s_shape = r.meta()
-    s_np = np.dtype(jnp.dtype(s_dtype))
+    s_np = _resolve_dtype(s_dtype)
     s_n = int(np.prod(s_shape)) if s_shape else 1
     scale = np.frombuffer(r.take(s_n * s_np.itemsize), dtype=s_np).reshape(s_shape)
     packed = np.frombuffer(r.take(r.u64()), dtype=np.uint8)
@@ -166,14 +203,125 @@ def _decode_ternary_body(r: _Reader) -> TernaryTensor:
     )
 
 
+def _downcast_body(t: DowncastTensor) -> bytes:
+    dt = str(t.orig_dtype).encode("ascii")
+    return b"".join([struct.pack("<B", len(dt)), dt, _pack_arr(_np(t.data))])
+
+
+def _decode_downcast_body(r: _Reader) -> DowncastTensor:
+    orig = r.take(r.u8()).decode("ascii")
+    _resolve_dtype(orig)  # validate before it reaches restore()
+    return DowncastTensor(data=_decode_array(r), orig_dtype=orig)
+
+
+def _topk_body(t: TopKTensor) -> bytes:
+    idx = _np(t.indices)
+    if idx.dtype != np.uint32:
+        raise WireError(f"TopKTensor.indices must be uint32, got {idx.dtype}")
+    parts = [
+        _pack_meta(str(t.dtype), tuple(int(s) for s in t.shape)),
+        _pack_arr(idx),
+        _pack_arr(_np(t.values)),
+    ]
+    return b"".join(parts)
+
+
+def _decode_topk_body(r: _Reader) -> TopKTensor:
+    dtype, shape = r.meta()
+    _resolve_dtype(dtype)
+    indices = _decode_array(r)
+    values = _decode_array(r)
+    n = int(np.prod(shape)) if shape else 1
+    if indices.shape != values.shape or indices.ndim != 1:
+        raise WireError(
+            f"topk indices/values shapes differ: {indices.shape} vs {values.shape}"
+        )
+    if indices.size and int(jnp.max(indices)) >= n:
+        raise WireError(f"topk index out of range for logical shape {shape}")
+    return TopKTensor(
+        indices=indices, values=values, shape=tuple(shape), dtype=dtype
+    )
+
+
+# --------------------------------------------------------------------------
+# The record registry: kind byte ↔ wire-leaf class ↔ pack/unpack.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WireRecord:
+    kind: int
+    name: str
+    leaf_type: type | None          # None = RAW fallback for plain arrays
+    pack: Callable[[Any], bytes]
+    unpack: Callable[[_Reader], Any]
+    min_version: int = WIRE_VERSION  # oldest wire version that may carry it
+
+
+_RECORDS: dict[int, WireRecord] = {}
+
+
+def register_record(record: WireRecord) -> WireRecord:
+    """Register a record kind (new codecs plug in here; see compression.py)."""
+    if not 0 <= record.kind <= 0xFF:
+        raise ValueError(f"record kind {record.kind} does not fit the u8 field")
+    if record.kind in _RECORDS:
+        raise ValueError(
+            f"record kind {record.kind} already registered "
+            f"as {_RECORDS[record.kind].name!r}"
+        )
+    _RECORDS[record.kind] = record
+    return record
+
+
+register_record(WireRecord(KIND_RAW, "RAW", None, _raw_body, _decode_array,
+                           min_version=1))
+register_record(WireRecord(KIND_TERNARY, "TERNARY", TernaryTensor,
+                           _ternary_body, _decode_ternary_body, min_version=1))
+register_record(WireRecord(KIND_DOWNCAST, "DOWNCAST", DowncastTensor,
+                           _downcast_body, _decode_downcast_body))
+register_record(WireRecord(KIND_TOPK, "TOPK", TopKTensor,
+                           _topk_body, _decode_topk_body))
+
+
+def _leaf_types() -> tuple[type, ...]:
+    # union of the record registry's leaf classes and the codec registry's
+    # (so a codec registered without a wire record is SEEN as a leaf here
+    # and _record_for_leaf can refuse it loudly instead of tree-flattening
+    # through it and silently serializing its children as containers).
+    own = {r.leaf_type for r in _RECORDS.values() if r.leaf_type is not None}
+    return tuple(own | set(wire_leaf_types()))
+
+
+def _record_for_leaf(leaf, codec_leaf_types: tuple[type, ...] | None = None) -> WireRecord:
+    for rec in _RECORDS.values():
+        if rec.leaf_type is not None and isinstance(leaf, rec.leaf_type):
+            return rec
+    if codec_leaf_types is None:
+        codec_leaf_types = tuple(wire_leaf_types())
+    if isinstance(leaf, codec_leaf_types):
+        raise WireError(
+            f"wire leaf {type(leaf).__name__} has a registered codec but no "
+            f"record kind — call comm.wire.register_record for it"
+        )
+    return _RECORDS[KIND_RAW]
+
+
+# --------------------------------------------------------------------------
+# Single-tensor codec (used by TernaryTensor.to_bytes / from_bytes).
+# --------------------------------------------------------------------------
+
+
 def encode_tensor(t: TernaryTensor) -> bytes:
-    """Serialize one TernaryTensor (header + single TERNARY record body)."""
+    """Serialize one TernaryTensor (header + single TERNARY record body,
+    stamped v1 — the TERNARY body is unchanged since v1)."""
     body = _ternary_body(t)
-    return _HEADER.pack(WIRE_MAGIC, WIRE_VERSION, 0, 1, zlib.crc32(body), len(body)) + body
+    v = _RECORDS[KIND_TERNARY].min_version
+    return _HEADER.pack(WIRE_MAGIC, v, 0, 1, zlib.crc32(body), len(body)) + body
 
 
 def decode_tensor(data: bytes) -> TernaryTensor:
-    body, _ = _check_header(data, expect_records=1)
+    body, _, _ = _check_header(data, expect_records=1)
     r = _Reader(body)
     t = _decode_ternary_body(r)
     if r.pos != len(body):
@@ -209,10 +357,17 @@ def _parse_entry(e: str) -> tuple[str, Any]:
     if e.startswith("d:"):
         return ("d", e[2:])
     if e.startswith("k:"):
-        return ("k", int(e[2:]))
+        return ("k", _parse_int(e[2:]))
     if e.startswith("i:"):
-        return ("i", int(e[2:]))
+        return ("i", _parse_int(e[2:]))
     raise WireError(f"bad path entry {e!r}")
+
+
+def _parse_int(s: str) -> int:
+    try:
+        return int(s)
+    except ValueError as e:
+        raise WireError(f"bad integer path entry {s!r}") from e
 
 
 def _insert(root: dict, entries: list[str], leaf) -> None:
@@ -220,9 +375,14 @@ def _insert(root: dict, entries: list[str], leaf) -> None:
     for i, e in enumerate(entries):
         key = _parse_entry(e)
         if i == len(entries) - 1:
+            if key in node and isinstance(node[key], dict):
+                raise WireError(f"path collision at {e!r}: leaf under container")
             node[key] = leaf
         else:
-            node = node.setdefault(key, {})
+            nxt = node.setdefault(key, {})
+            if not isinstance(nxt, dict):
+                raise WireError(f"path collision at {e!r}: container under leaf")
+            node = nxt
 
 
 def _containerize(node):
@@ -247,40 +407,48 @@ def _containerize(node):
 
 
 def encode_update(tree: Pytree) -> bytes:
-    """Serialize an update pytree into one framed, CRC-protected buffer."""
+    """Serialize an update pytree into one framed, CRC-protected buffer.
+
+    The header is stamped with the LOWEST wire version able to carry the
+    payload's record kinds (v1 for RAW/TERNARY-only traffic — byte-identical
+    to what a v1 encoder produced, so old decoders stay compatible; v2 once
+    a downcast/top-k record appears)."""
+    lt = _leaf_types()  # hoisted: rebuilt per call, not per pytree node
     leaves = jax.tree_util.tree_flatten_with_path(
-        tree, is_leaf=lambda x: isinstance(x, TernaryTensor)
+        tree, is_leaf=lambda x: isinstance(x, lt)
     )[0]
     records = []
+    version = min(SUPPORTED_VERSIONS)
+    codec_lt = tuple(wire_leaf_types())
     for path, leaf in leaves:
         p = _PATH_SEP.join(_path_entries(path)).encode("utf-8")
-        rec = [struct.pack("<H", len(p)), p]
-        if isinstance(leaf, TernaryTensor):
-            rec.append(struct.pack("<B", _KIND_TERNARY))
-            rec.append(_ternary_body(leaf))
-        else:
-            arr = _np(leaf)
-            rec.append(struct.pack("<B", _KIND_RAW))
-            rec.append(_pack_array_meta(arr))
-            rec.append(struct.pack("<Q", arr.nbytes))
-            rec.append(arr.tobytes())
-        records.append(b"".join(rec))
+        rec = _record_for_leaf(leaf, codec_lt)
+        version = max(version, rec.min_version)
+        records.append(b"".join([
+            struct.pack("<H", len(p)), p,
+            struct.pack("<B", rec.kind), rec.pack(leaf),
+        ]))
     body = b"".join(records)
     header = _HEADER.pack(
-        WIRE_MAGIC, WIRE_VERSION, 0, len(records), zlib.crc32(body), len(body)
+        WIRE_MAGIC, version, 0, len(records), zlib.crc32(body), len(body)
     )
     return header + body
 
 
-def _check_header(data: bytes, expect_records: int | None = None) -> tuple[bytes, int]:
-    """Validate framing and integrity; returns (record section, n_records)."""
+def _check_header(
+    data: bytes, expect_records: int | None = None
+) -> tuple[bytes, int, int]:
+    """Validate framing and integrity; returns (record section, n_records,
+    buffer wire version)."""
     if len(data) < _HEADER.size:
         raise WireError(f"buffer too short for header: {len(data)} B")
     magic, version, _flags, n_records, crc, body_len = _HEADER.unpack_from(data)
     if magic != WIRE_MAGIC:
         raise WireError(f"bad magic {magic!r} (expected {WIRE_MAGIC!r})")
-    if version != WIRE_VERSION:
-        raise WireError(f"wire version {version} not supported (have {WIRE_VERSION})")
+    if version not in SUPPORTED_VERSIONS:
+        raise WireError(
+            f"wire version {version} not supported (have {SUPPORTED_VERSIONS})"
+        )
     body = data[_HEADER.size :]
     if len(body) != body_len:
         raise WireError(f"body length {len(body)} != header body_len {body_len}")
@@ -288,7 +456,7 @@ def _check_header(data: bytes, expect_records: int | None = None) -> tuple[bytes
         raise WireError("CRC32 mismatch: payload corrupted in transit")
     if expect_records is not None and n_records != expect_records:
         raise WireError(f"expected {expect_records} records, header says {n_records}")
-    return body, n_records
+    return body, n_records, version
 
 
 def decode_update(data: bytes) -> Pytree:
@@ -301,19 +469,33 @@ def decode_update(data: bytes) -> Pytree:
     always bit-exact, containers normalize to dict/list. A single-leaf
     tree with an empty path decodes to the bare leaf.
     """
-    body, n_records = _check_header(data)
+    try:
+        return _decode_update(data)
+    except WireError:
+        raise
+    except (struct.error, ValueError, TypeError, OverflowError,
+            UnicodeDecodeError) as e:
+        # any parse failure surfaces as WireError — never a stray exception
+        raise WireError(f"malformed wire buffer: {e}") from e
+
+
+def _decode_update(data: bytes) -> Pytree:
+    body, n_records, version = _check_header(data)
     r = _Reader(body)
     root: dict = {}
     bare_leaf = None
     for _ in range(n_records):
         path = r.take(r.u16()).decode("utf-8")
         kind = r.u8()
-        if kind == _KIND_TERNARY:
-            leaf = _decode_ternary_body(r)
-        elif kind == _KIND_RAW:
-            leaf = _decode_array(r)
-        else:
+        rec = _RECORDS.get(kind)
+        if rec is None:
             raise WireError(f"unknown record kind {kind}")
+        if version < rec.min_version:
+            raise WireError(
+                f"record kind {rec.name} requires wire v{rec.min_version}, "
+                f"buffer is v{version}"
+            )
+        leaf = rec.unpack(r)
         if not path:
             if n_records != 1:
                 raise WireError("empty path in multi-record update")

@@ -26,7 +26,18 @@ from repro.core.tfedavg import (
     tfedavg_round_bytes,
     fedavg_round_bytes,
 )
-from repro.core.compression import CompressionSpec, compress_pytree, decompress_pytree
+from repro.core.compression import (
+    Codec,
+    CodecSpec,
+    CompressionSpec,
+    DowncastTensor,
+    TopKTensor,
+    available_codecs,
+    compress_pytree,
+    decompress_pytree,
+    get_codec,
+    register_codec,
+)
 
 __all__ = [
     "FTTQConfig", "fttq_quantize", "scale_layer", "fttq_threshold", "ternarize",
@@ -35,5 +46,7 @@ __all__ = [
     "TernaryTensor",
     "TernaryUpdate", "client_update_payload", "server_aggregate",
     "server_requantize", "tfedavg_round_bytes", "fedavg_round_bytes",
-    "CompressionSpec", "compress_pytree", "decompress_pytree",
+    "Codec", "CodecSpec", "CompressionSpec", "DowncastTensor", "TopKTensor",
+    "available_codecs", "get_codec", "register_codec",
+    "compress_pytree", "decompress_pytree",
 ]

@@ -1,70 +1,371 @@
-"""Compression API shared by checkpoints, collectives, and the fed protocol.
+"""Codec registry shared by checkpoints, collectives, and the fed protocol.
 
-``CompressionSpec`` selects the codec; ``compress_pytree`` /
-``decompress_pytree`` apply it leaf-wise. Two codecs:
+Compression is organized as a registry of ``Codec`` objects. A codec turns
+one pytree leaf into a *wire leaf* (a compact, serializable representation)
+and back; each codec owns a wire record kind byte so ``repro.comm.wire``
+can frame it without a hard-coded type switch. Shipped codecs:
 
   - "none":    identity (fp32/bf16 wire) — the FedAvg baseline.
-  - "ternary": FTTQ wire format (TernaryTensor: 2-bit codes + scale) — the
-    paper's codec. Optional error feedback keeps the quantization residual
-    locally so repeated compression of a drifting signal is unbiased in the
-    long run (beyond-paper; used by the gradient-compression path).
+  - "ternary": FTTQ wire format (``TernaryTensor``: 2-bit codes + scale) —
+    the paper's codec.
+  - "fp16" / "bf16": half-precision downcast (``DowncastTensor``) — 2×
+    on the non-quantizable leaves (biases, norms) that FTTQ ships raw.
+  - "topk":    magnitude top-k sparsification (``TopKTensor``: sorted flat
+    indices + values), per Sattler et al. (arXiv:1903.02891) — the other
+    half of "downcast + sparsify the residual streams".
+
+``CodecSpec`` selects codecs for ONE direction of traffic: ``kind`` applies
+to quantizable (weight-like) leaves, ``residual`` to everything else.
+``CompressionSpec`` pairs two of them — ``upstream`` (client→server) and
+``downstream`` (server→client) — because the two directions compress
+independently (paper §III.B broadcasts re-quantized weights while clients
+upload FTTQ payloads; asymmetric codecs fall out of the same split).
+
+Optional error feedback keeps the compression residual locally so repeated
+compression of a drifting signal is unbiased in the long run (beyond-paper;
+used by the gradient-compression path). It is generic over codecs: the
+residual is ``x − decode(encode(x))`` whatever the codec.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import math
+from typing import Any, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fttq
 from repro.core.ternary import TernaryTensor, encode_ternary
 
 Pytree = Any
 
+# Wire record kind bytes (the framing contract with ``repro.comm.wire``).
+# RAW and TERNARY are wire-v1; DOWNCAST and TOPK need wire-v2 buffers.
+KIND_RAW = 0
+KIND_TERNARY = 1
+KIND_DOWNCAST = 2
+KIND_TOPK = 3
+
+
+# --------------------------------------------------------------------------
+# Wire leaf containers (what a codec's encode_leaf produces).
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DowncastTensor:
+    """A leaf downcast to a narrower float dtype for the wire.
+
+    ``data`` carries the payload (fp16/bf16); ``orig_dtype`` is the logical
+    dtype ``restore()`` upcasts to (static aux data).
+    """
+
+    data: jax.Array
+    orig_dtype: str = "float32"
+
+    def tree_flatten(self):
+        return (self.data,), (self.orig_dtype,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(data=children[0], orig_dtype=aux[0])
+
+    def restore(self) -> jax.Array:
+        return self.data.astype(jnp.dtype(self.orig_dtype))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TopKTensor:
+    """Magnitude top-k sparsified leaf: sorted flat indices + their values.
+
+    Indices are uint32 over the flattened logical shape (ascending, so the
+    wire stream is delta-encodable later); dropped positions decode to zero.
+    """
+
+    indices: jax.Array  # (k,) uint32, ascending flat indices
+    values: jax.Array   # (k,) surviving values
+    shape: tuple
+    dtype: str = "float32"
+
+    def tree_flatten(self):
+        return (self.indices, self.values), (tuple(self.shape), self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(indices=children[0], values=children[1],
+                   shape=aux[0], dtype=aux[1])
+
+    @property
+    def n_elements(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    def densify(self) -> jax.Array:
+        flat = jnp.zeros((self.n_elements,), jnp.dtype(self.dtype))
+        flat = flat.at[self.indices.astype(jnp.int32)].set(
+            self.values.astype(jnp.dtype(self.dtype))
+        )
+        return flat.reshape(self.shape)
+
+
+# --------------------------------------------------------------------------
+# The Codec protocol + registry.
+# --------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Codec(Protocol):
+    """One leaf-level compression scheme.
+
+    ``wire_kind`` is the record kind byte ``repro.comm.wire`` frames this
+    codec's leaves under; ``leaf_type`` the wire-leaf class ``encode_leaf``
+    produces (None for codecs whose output is a plain array / RAW record).
+    """
+
+    name: str
+    wire_kind: int
+    leaf_type: type | None
+
+    def encode_leaf(self, leaf: jax.Array, spec: "CodecSpec") -> Any: ...
+
+    def decode_leaf(self, wire_leaf: Any) -> jax.Array: ...
+
+
+_CODECS: dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec) -> Codec:
+    """Add a codec to the registry (name and wire kind must be consistent:
+    two codecs may share a wire kind only if they share a leaf type)."""
+    if codec.name in _CODECS:
+        raise ValueError(f"codec {codec.name!r} already registered")
+    for other in _CODECS.values():
+        if other.wire_kind == codec.wire_kind and other.leaf_type is not codec.leaf_type:
+            raise ValueError(
+                f"codec {codec.name!r} reuses wire kind {codec.wire_kind} of "
+                f"{other.name!r} with a different leaf type"
+            )
+    _CODECS[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; registered: {available_codecs()}"
+        ) from None
+
+
+def available_codecs() -> list[str]:
+    return sorted(_CODECS)
+
+
+def wire_leaf_types() -> tuple[type, ...]:
+    """All registered non-RAW wire leaf classes (for tree_map is_leaf)."""
+    return tuple({c.leaf_type for c in _CODECS.values() if c.leaf_type is not None})
+
+
+def is_wire_leaf(x: Any) -> bool:
+    return isinstance(x, wire_leaf_types())
+
+
+def decode_wire_leaf(leaf: Any) -> jax.Array:
+    """Decode any registered wire leaf back to a dense array (type dispatch)."""
+    for codec in _CODECS.values():
+        if codec.leaf_type is not None and isinstance(leaf, codec.leaf_type):
+            return codec.decode_leaf(leaf)
+    return leaf
+
+
+# --------------------------------------------------------------------------
+# Specs.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecSpec:
+    """Codec selection for ONE direction of traffic.
+
+    kind:     codec for quantizable (weight-like) leaves.
+    residual: codec for the non-quantizable leaves (biases, norms, scalars)
+              — the streams FTTQ ships raw; fp16/bf16/topk live here.
+    """
+
+    kind: str = "ternary"
+    residual: str = "none"
+    fttq: fttq.FTTQConfig = dataclasses.field(default_factory=fttq.FTTQConfig)
+    error_feedback: bool = False
+    topk_fraction: float = 0.1  # fraction of elements the "topk" codec keeps
+
+    def __post_init__(self):
+        for field in ("kind", "residual"):
+            name = getattr(self, field)
+            if name not in _CODECS:
+                raise ValueError(
+                    f"unknown compression {field} {name!r}; "
+                    f"registered: {available_codecs()}"
+                )
+        if not 0.0 < self.topk_fraction <= 1.0:
+            raise ValueError(f"topk_fraction must be in (0, 1], got {self.topk_fraction}")
+
+    @property
+    def is_identity(self) -> bool:
+        return self.kind == "none" and self.residual == "none"
+
 
 @dataclasses.dataclass(frozen=True)
 class CompressionSpec:
-    kind: str = "ternary"  # "none" | "ternary"
-    fttq: fttq.FTTQConfig = dataclasses.field(default_factory=fttq.FTTQConfig)
-    error_feedback: bool = False
+    """Per-direction codec selection: upstream (client→server) and
+    downstream (server→client) compress independently."""
 
-    def __post_init__(self):
-        if self.kind not in ("none", "ternary"):
-            raise ValueError(f"unknown compression kind {self.kind!r}")
+    upstream: CodecSpec = dataclasses.field(default_factory=CodecSpec)
+    downstream: CodecSpec = dataclasses.field(default_factory=CodecSpec)
+
+    @classmethod
+    def symmetric(cls, kind: str = "ternary", residual: str = "none",
+                  **kw) -> "CompressionSpec":
+        d = CodecSpec(kind=kind, residual=residual, **kw)
+        return cls(upstream=d, downstream=d)
 
 
-def compress_pytree(
-    tree: Pytree, spec: CompressionSpec, residual: Pytree | None = None
-) -> tuple[Pytree, Pytree | None]:
-    """Compress each quantizable leaf; returns (wire_tree, new_residual).
+# --------------------------------------------------------------------------
+# Shipped codecs.
+# --------------------------------------------------------------------------
 
-    With error feedback, the input is first corrected by the carried residual
-    and the new residual is (corrected − dequant(wire)).
-    """
-    if spec.kind == "none":
-        return tree, residual
 
-    cfg = spec.fttq
+class NoneCodec:
+    name = "none"
+    wire_kind = KIND_RAW
+    leaf_type = None
 
-    def one(path, leaf, res):
-        if not fttq.is_quantizable(path, leaf, cfg):
-            return leaf, jnp.zeros_like(leaf) if spec.error_feedback else None
-        x = leaf + res if (spec.error_feedback and res is not None) else leaf
-        ts = fttq.scale_layer(x)
+    def encode_leaf(self, leaf, spec):
+        return leaf
+
+    def decode_leaf(self, wire_leaf):
+        return wire_leaf
+
+
+class TernaryCodec:
+    """The paper's FTTQ wire path (2-bit codes + one trained scale)."""
+
+    name = "ternary"
+    wire_kind = KIND_TERNARY
+    leaf_type = TernaryTensor
+
+    def encode_leaf(self, leaf, spec):
+        cfg = spec.fttq
+        ts = fttq.scale_layer(leaf)
         d = fttq.fttq_threshold(ts, cfg.t_k, cfg.threshold_rule)
         i_t = fttq.ternarize(ts, d)
         absw = jnp.abs(ts)
         sel = absw > d
         wq = jnp.sum(jnp.where(sel, absw, 0.0)) / (jnp.sum(sel) + 1e-8)
-        wq = wq * (jnp.max(jnp.abs(x)) + 1e-8)  # undo layer scaling on the wire
-        wire = encode_ternary(i_t, wq.astype(x.dtype), dtype=str(x.dtype))
-        new_res = (x - wire.dequantize()) if spec.error_feedback else None
+        wq = wq * (jnp.max(jnp.abs(leaf)) + 1e-8)  # undo layer scaling on the wire
+        return encode_ternary(i_t, wq.astype(leaf.dtype), dtype=str(leaf.dtype))
+
+    def decode_leaf(self, wire_leaf):
+        return wire_leaf.dequantize()
+
+
+class DowncastCodec:
+    """Half-precision downcast of the whole leaf (Sattler et al.-style)."""
+
+    wire_kind = KIND_DOWNCAST
+    leaf_type = DowncastTensor
+
+    def __init__(self, name: str, wire_dtype):
+        self.name = name
+        self.wire_dtype = jnp.dtype(wire_dtype)
+
+    def encode_leaf(self, leaf, spec):
+        return DowncastTensor(
+            data=leaf.astype(self.wire_dtype), orig_dtype=str(leaf.dtype)
+        )
+
+    def decode_leaf(self, wire_leaf):
+        return wire_leaf.restore()
+
+
+class TopKCodec:
+    """Keep the spec.topk_fraction largest-magnitude entries; rest decode 0."""
+
+    name = "topk"
+    wire_kind = KIND_TOPK
+    leaf_type = TopKTensor
+
+    def encode_leaf(self, leaf, spec):
+        flat = leaf.reshape(-1)
+        n = flat.shape[0]
+        k = max(1, math.ceil(spec.topk_fraction * n))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        idx = jnp.sort(idx)
+        return TopKTensor(
+            indices=idx.astype(jnp.uint32),
+            values=flat[idx],
+            shape=tuple(leaf.shape),
+            dtype=str(leaf.dtype),
+        )
+
+    def decode_leaf(self, wire_leaf):
+        return wire_leaf.densify()
+
+
+register_codec(NoneCodec())
+register_codec(TernaryCodec())
+register_codec(DowncastCodec("fp16", jnp.float16))
+register_codec(DowncastCodec("bf16", jnp.bfloat16))
+register_codec(TopKCodec())
+
+
+# --------------------------------------------------------------------------
+# Pytree application.
+# --------------------------------------------------------------------------
+
+
+def compress_pytree(
+    tree: Pytree, spec: CodecSpec, residual: Pytree | None = None
+) -> tuple[Pytree, Pytree | None]:
+    """Compress each leaf per the directional spec; returns (wire_tree,
+    new_residual).
+
+    Quantizable leaves (``fttq.is_quantizable``) go through ``spec.kind``,
+    the rest through ``spec.residual``. Leaves that are ALREADY wire leaves
+    (e.g. a QAT client payload whose weights are TernaryTensor) pass through
+    untouched, so this also "finishes" a partially compressed tree. With
+    error feedback, the input is first corrected by the carried residual and
+    the new residual is (corrected − decode(wire)).
+    """
+    if spec.is_identity:
+        return tree, residual
+
+    def one(path, leaf, res):
+        if is_wire_leaf(leaf):
+            # already compressed upstream of us; zero placeholder keeps the
+            # residual tree structure-aligned for the next round.
+            return leaf, (jnp.zeros(()) if spec.error_feedback else None)
+        if fttq.is_quantizable(path, leaf, spec.fttq):
+            codec = get_codec(spec.kind)
+        elif jnp.issubdtype(jnp.result_type(leaf), jnp.floating):
+            codec = get_codec(spec.residual)
+        else:
+            # int step counters, uint32 RNG keys, bools: lossy float codecs
+            # would corrupt them — they always ship raw.
+            codec = get_codec("none")
+        x = leaf + res if (spec.error_feedback and res is not None) else leaf
+        wire = codec.encode_leaf(x, spec)
+        new_res = (x - codec.decode_leaf(wire)) if spec.error_feedback else None
         return wire, new_res
 
-    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
-    treedef = jax.tree_util.tree_structure(tree)
+    paths_leaves = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_wire_leaf
+    )[0]
+    treedef = jax.tree_util.tree_structure(tree, is_leaf=is_wire_leaf)
     res_leaves = (
         jax.tree_util.tree_leaves(residual)
         if residual is not None
@@ -84,17 +385,12 @@ def compress_pytree(
     return wire_tree, res_tree
 
 
-def decompress_pytree(wire_tree: Pytree, spec: CompressionSpec) -> Pytree:
-    if spec.kind == "none":
-        return wire_tree
-
-    def one(leaf):
-        if isinstance(leaf, TernaryTensor):
-            return leaf.dequantize()
-        return leaf
-
+def decompress_pytree(wire_tree: Pytree, spec: CodecSpec | None = None) -> Pytree:
+    """Decode every wire leaf back to dense arrays (type dispatch — the wire
+    tree is self-describing, so ``spec`` is accepted only for symmetry)."""
+    del spec
     return jax.tree_util.tree_map(
-        one, wire_tree, is_leaf=lambda x: isinstance(x, TernaryTensor)
+        decode_wire_leaf, wire_tree, is_leaf=is_wire_leaf
     )
 
 

@@ -91,8 +91,10 @@ class TernaryTensor:
         return int(np.prod(self.shape)) if self.shape else 1
 
     def nbytes_wire(self) -> int:
-        """Bytes on the wire: packed codes + one fp32 scale."""
-        return int(self.packed.size) + 4
+        """Bytes on the wire: packed codes + the scale payload (derived from
+        the actual ``w_q`` dtype/shape, so bf16/fp16 or per-layer stacked
+        scales report correctly instead of an assumed single fp32)."""
+        return int(self.packed.size) + int(np.asarray(self.w_q).nbytes)
 
     def dequantize(self) -> jax.Array:
         it = unpack2bit(self.packed, self.n_elements, jnp.int8)

@@ -82,14 +82,11 @@ def client_update_payload(
 
 
 def _dequant_payload(payload: Pytree) -> Pytree:
-    def one(leaf):
-        if isinstance(leaf, TernaryTensor):
-            return leaf.dequantize()
-        return leaf
+    # type-dispatched through the codec registry: handles ternary, downcast
+    # and top-k wire leaves alike (whatever the upstream spec shipped).
+    from repro.core.compression import decompress_pytree  # lazy: import order
 
-    return jax.tree_util.tree_map(
-        one, payload, is_leaf=lambda x: isinstance(x, TernaryTensor)
-    )
+    return decompress_pytree(payload)
 
 
 def server_aggregate(updates: list[TernaryUpdate]) -> Pytree:

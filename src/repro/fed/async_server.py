@@ -21,7 +21,12 @@ the throughput ceiling, so this server removes it:
 
 Bytes are measured from the serialized buffers on both directions; transfer
 times are logged per client, so the async-vs-sync comparison reads out in
-simulated seconds as well as bytes.
+simulated seconds as well as bytes. Compression is per-direction
+(``FedConfig.compression``): dispatch serializes through the DOWNSTREAM
+codec spec and arrivals through the UPSTREAM one (via the shared
+``broadcast_blob`` / ``train_client`` helpers), and ``_weighted_mix``
+decodes any registered wire leaf — ternary, downcast, or top-k — through
+the codec registry, so asymmetric up/down codecs meter correctly here too.
 """
 
 from __future__ import annotations

@@ -35,7 +35,12 @@ import numpy as np
 from repro.comm import Channel, ChannelConfig
 from repro.comm.wire import decode_update, encode_update
 from repro.core import fttq as fttq_mod
-from repro.core.compression import CompressionSpec, decompress_pytree
+from repro.core.compression import (
+    CodecSpec,
+    CompressionSpec,
+    compress_pytree,
+    decompress_pytree,
+)
 from repro.core.tfedavg import (
     TernaryUpdate,
     client_update_payload,
@@ -59,6 +64,10 @@ class FedConfig:
     rounds: int = 100                   # sync rounds / async aggregations
     fttq: fttq_mod.FTTQConfig = dataclasses.field(default_factory=fttq_mod.FTTQConfig)
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
+    # per-direction codec selection (None → derived from `algorithm`:
+    # tfedavg → symmetric ternary, fedavg → identity). Asymmetric specs —
+    # e.g. fp16 residuals upstream only — change the measured byte split.
+    compression: CompressionSpec | None = None
     seed: int = 0
     # --- async (buffered) server knobs -----------------------------------
     buffer_k: int = 4                   # aggregate every K arrivals
@@ -141,19 +150,35 @@ def _make_local_steps(apply_fn, optimizer: Optimizer, cfg: FedConfig):
 # --------------------------------------------------------------------------
 
 
-_TERNARY_SPEC = CompressionSpec(kind="ternary")
+def resolve_compression(cfg: FedConfig) -> CompressionSpec:
+    """The run's per-direction codec pair (explicit, or derived from the
+    algorithm: T-FedAvg ships ternary both ways, FedAvg ships raw fp32)."""
+    if cfg.compression is not None:
+        return cfg.compression
+    kind = "ternary" if cfg.algorithm == "tfedavg" else "none"
+    return CompressionSpec.symmetric(kind=kind, fttq=cfg.fttq)
 
 
 def dequantize_tree(tree: Pytree) -> Pytree:
-    """Dequantize any TernaryTensor leaves; raw leaves pass through."""
-    return decompress_pytree(tree, _TERNARY_SPEC)
+    """Decode any wire leaves (ternary/downcast/top-k); raw leaves pass."""
+    return decompress_pytree(tree)
 
 
 def broadcast_blob(global_params: Pytree, cfg: FedConfig) -> bytes:
-    """Serialize the downstream payload (ternary wire for T-FedAvg)."""
-    if cfg.algorithm == "tfedavg":
-        return encode_update(server_requantize(global_params, cfg.fttq))
-    return encode_update(global_params)
+    """Serialize the downstream payload through the downstream codec spec.
+
+    The ternary weights path keeps Algorithm 2's server re-quantization
+    (fixed Δ = server_delta); the residual codec then compresses whatever
+    leaves are still raw (biases, norms) — that is where the remaining
+    downstream bytes live.
+    """
+    dspec = resolve_compression(cfg).downstream
+    if dspec.kind == "ternary":
+        tree = server_requantize(global_params, dspec.fttq)
+        tree, _ = compress_pytree(tree, dspec)  # residual codec on raw leaves
+    else:
+        tree, _ = compress_pytree(global_params, dspec)
+    return encode_update(tree)
 
 
 def receive_broadcast(blob: bytes) -> Pytree:
@@ -173,7 +198,9 @@ def train_client(
     rng: np.random.Generator,
 ) -> bytes:
     """One client's round: train locally from the decoded broadcast
-    (``receive_broadcast``), serialize the upstream payload."""
+    (``receive_broadcast``), serialize the upstream payload through the
+    upstream codec spec (QAT ternary weights pass through untouched; the
+    residual codec compresses the raw bias/norm leaves)."""
     params_k = start_params
     opt_state = optimizer.init(params_k)
     if cfg.algorithm == "tfedavg":
@@ -189,6 +216,7 @@ def train_client(
                 params_k, opt_state, jnp.asarray(xb), jnp.asarray(yb)
             )
         payload = params_k
+    payload, _ = compress_pytree(payload, resolve_compression(cfg).upstream)
     return encode_update(payload)
 
 
@@ -243,10 +271,14 @@ def run_federated_sync(
         # link/device alone blows the deadline is dropped WITHOUT paying for
         # local training (the upload could only add time). The fastest
         # pre-time client always trains, so no round is ever lost.
+        # The broadcast downloads run SIMULTANEOUSLY and contend for the
+        # server NIC (cfg.channel.server_bandwidth_bytes_s).
+        sel = [int(k) for k in selected]
+        down_times = channel.transfer_concurrent(
+            sel, [len(blob)] * len(sel), "down"
+        )
         pre = []  # (t_down + t_comp, client_id)
-        for k in selected:
-            k = int(k)
-            t_down = channel.transfer(k, len(blob), "down")
+        for t_down, k in zip(down_times, sel):
             t_comp = channel.compute_time(k, len(clients[k]) * cfg.local_epochs)
             pre.append((t_down + t_comp, k))
         pre.sort()

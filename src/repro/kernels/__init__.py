@@ -4,10 +4,13 @@
   pack2bit         — 2-bit wire codec (upload/download path)
   ternary_matmul   — packed ternary-weight GEMM (16× HBM traffic cut; the
                      edge-inference hot spot mapped to TPU decode)
+  repack           — wire flat-packed bytes → (K//4, N) kernel layout
+                     (PackedTernary weight leaves for the zero-copy serve
+                     path; host-side uint8 plane arithmetic)
 
 ``ops`` holds the jit'd dispatching wrappers; ``ref`` the pure-jnp oracles.
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, repack
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "repack"]

@@ -1,0 +1,188 @@
+"""Wire → kernel-layout repack: serve ternary weights without dequantizing.
+
+The wire format (``core.ternary.pack2bit``) packs 2-bit codes along the
+FLATTENED row-major element order — 4 consecutive flat elements per byte —
+because the wire does not care about matmul tiling. The Pallas serving
+kernel (``kernels.ternary_matmul``) wants the ``(K//4, N)`` layout instead:
+each byte holds 4 K-consecutive codes of one N-column, so the in-VMEM
+unpack is a sublane-only reshape (see pack2bit.py).
+
+``repack_to_kernel_layout`` converts between the two BY BYTE MANIPULATION:
+for aligned shapes (K and N multiples of 4 — every transformer matmul in
+the repo) it extracts four 2-bit planes from the wire bytes and re-packs
+them along K, touching only uint8 buffers of the packed size (~2× packed
+peak). The deploy path therefore never materializes the unpacked int8
+codes (4× larger) or a dense fp32 copy (16× larger) of any weight.
+Unaligned shapes fall back to an unpack/repack via int8 — documented,
+and never hit by the transformer serve path.
+
+``PackedTernary`` is the resulting weight leaf: a pytree node carrying the
+kernel-layout bytes + scale, so it can sit inside model params, be sliced
+by ``lax.scan`` over stacked layers, and be consumed by
+``packed_matmul`` (which ``models.common.matmul`` dispatches to).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import decompress_pytree, is_wire_leaf
+from repro.core.ternary import TernaryTensor
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedTernary:
+    """A ternary weight in the ``(K//4, N)`` Pallas kernel layout.
+
+    Fields:
+      packed: uint8 ``(K//4, N)`` — or ``(L, K//4, N)`` for stacked scan
+              layers; ``lax.scan`` slices the leading axis per layer.
+      w_q:    the trained scale (scalar, or ``(L, 1, 1)`` stacked).
+      k:      logical contraction dim BEFORE padding to a multiple of 4
+              (static aux data; ``packed_matmul`` zero-pads x up to it).
+      dtype:  logical dtype name of the dequantized weight.
+    """
+
+    packed: jax.Array
+    w_q: jax.Array
+    k: int
+    dtype: str = "float32"
+
+    def tree_flatten(self):
+        return (self.packed, self.w_q), (self.k, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, w_q = children
+        k, dtype = aux
+        return cls(packed=packed, w_q=w_q, k=k, dtype=dtype)
+
+
+def _repack2d_aligned(flat: np.ndarray, k: int, n: int) -> np.ndarray:
+    """Wire flat-packed bytes of a (k, n) leaf → (k//4, n) kernel bytes.
+
+    Requires k % 4 == 0 and n % 4 == 0. Pure uint8 plane arithmetic: the
+    wire byte grid reshapes to (k//4, 4, n//4); plane j2 (shift 2·j2) holds
+    the codes of output columns j2::4, which then pack along K.
+    """
+    b4 = flat[: k * n // 4].reshape(k // 4, 4, n // 4)
+    out = np.empty((k // 4, n), np.uint8)
+    for j2 in range(4):
+        plane = ((b4 >> np.uint8(2 * j2)) & np.uint8(0x3)).astype(np.uint8)
+        out[:, j2::4] = (
+            plane[:, 0]
+            | (plane[:, 1] << np.uint8(2))
+            | (plane[:, 2] << np.uint8(4))
+            | (plane[:, 3] << np.uint8(6))
+        )
+    return out
+
+
+def _repack2d_fallback(t_packed: np.ndarray, k: int, n: int) -> np.ndarray:
+    """Unaligned shapes: unpack to int8 codes, zero-pad K to a multiple of
+    4, repack along K. Materializes the (k, n) int8 codes — acceptable only
+    off the aligned fast path (odd conv/embedding shapes, tests)."""
+    shifts = np.arange(4, dtype=np.uint8) * 2
+    codes = (t_packed[:, None] >> shifts) & 0x3          # wire codes, flat
+    it = codes.reshape(-1)[: k * n].astype(np.int8) - 1  # {-1, 0, +1}
+    it = it.reshape(k, n)
+    k_pad = (-k) % 4
+    if k_pad:
+        it = np.concatenate([it, np.zeros((k_pad, n), np.int8)])
+    c = (it + 1).astype(np.uint8).reshape((k + k_pad) // 4, 4, n)
+    return c[:, 0] | (c[:, 1] << np.uint8(2)) | (c[:, 2] << np.uint8(4)) | (
+        c[:, 3] << np.uint8(6))
+
+
+def repack_to_kernel_layout(t: TernaryTensor) -> PackedTernary:
+    """Convert a decoded wire ``TernaryTensor`` into the kernel layout.
+
+    2-D leaves become ``(K//4, N)``; stacked 3-D scan leaves ``(L, K, N)``
+    become ``(L, K//4, N)`` with their per-layer ``(L, 1, 1)`` scales kept
+    as-is. Higher-rank leaves are not matmul weights — raise.
+    """
+    shape = tuple(int(s) for s in t.shape)
+    buf = np.asarray(t.packed)
+    if len(shape) == 2:
+        k, n = shape
+        if k % 4 == 0 and n % 4 == 0:
+            packed = _repack2d_aligned(buf, k, n)
+        else:
+            packed = _repack2d_fallback(buf, k, n)
+        return PackedTernary(
+            packed=jnp.asarray(packed), w_q=jnp.asarray(t.w_q), k=k,
+            dtype=t.dtype,
+        )
+    if len(shape) == 3:
+        l, k, n = shape
+        if (k * n) % 4:
+            raise ValueError(
+                f"stacked leaf {shape}: per-layer segment not byte-aligned"
+            )
+        seg = k * n // 4
+        layers = []
+        for i in range(l):
+            sub = TernaryTensor(
+                packed=buf[i * seg : (i + 1) * seg], w_q=t.w_q,
+                shape=(k, n), dtype=t.dtype,
+            )
+            layers.append(np.asarray(repack_to_kernel_layout(sub).packed))
+        # per-layer scales become (L, 1, 1); a single shared scale expands
+        # so lax.scan can slice one scale per layer.
+        wq = jnp.asarray(t.w_q)
+        if wq.size == 1:
+            wq = jnp.full((l, 1, 1), wq.reshape(()), wq.dtype)
+        elif wq.size == l:
+            wq = wq.reshape(l, 1, 1)
+        else:
+            raise ValueError(
+                f"stacked leaf {shape}: scale size {wq.size} is neither "
+                f"shared (1) nor per-layer ({l})"
+            )
+        return PackedTernary(
+            packed=jnp.asarray(np.stack(layers)), w_q=wq, k=k, dtype=t.dtype,
+        )
+    raise ValueError(f"cannot repack rank-{len(shape)} leaf {shape} for matmul")
+
+
+def packed_matmul(x: jax.Array, w: PackedTernary) -> jax.Array:
+    """x @ dequant(w) computed by the packed Pallas kernel.
+
+    Leading dims of x are flattened into M; if the logical K was padded to
+    a multiple of 4 at repack time, x is zero-padded to match (zero rows
+    contribute nothing). The dense weight is never materialized.
+    """
+    from repro.kernels import ops  # lazy: ops imports the Pallas modules
+
+    if w.packed.ndim != 2:
+        raise ValueError(
+            f"packed_matmul wants a per-layer (K//4, N) weight, got "
+            f"{w.packed.shape} — scan over the leading axis first"
+        )
+    *lead, k = x.shape
+    if k != w.k:
+        raise ValueError(f"x contraction dim {k} != weight logical K {w.k}")
+    x2 = x.reshape(-1, k)
+    k_pad = w.packed.shape[0] * 4
+    if k_pad != k:
+        x2 = jnp.pad(x2, ((0, 0), (0, k_pad - k)))
+    y = ops.ternary_matmul(x2, w.packed, w.w_q.reshape(()).astype(jnp.float32))
+    return y.reshape(*lead, y.shape[-1])
+
+
+def packed_params_from_wire(tree):
+    """Decoded wire tree → servable params: ternary matmul weights become
+    ``PackedTernary`` (kernel layout, no dequantization); every other wire
+    leaf decodes to a dense array."""
+
+    def one(leaf):
+        if isinstance(leaf, TernaryTensor) and len(leaf.shape) in (2, 3):
+            return repack_to_kernel_layout(leaf)
+        return decompress_pytree(leaf)
+
+    return jax.tree_util.tree_map(one, tree, is_leaf=is_wire_leaf)

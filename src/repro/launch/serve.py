@@ -8,8 +8,16 @@ format, SERIALIZED, and decoded back before serving — so the reported
 download size is the measured edge-checkpoint byte count and the served
 weights provably round-tripped the wire.
 
+``--packed`` additionally serves ZERO-COPY: the decoded ternary records are
+repacked byte-wise into the ``(K//4, N)`` layout ``kernels.ternary_matmul``
+consumes, and every weight matmul runs through the Pallas kernel. No
+unpacked int8 codes and no dense fp32 weight copy are ever materialized on
+the deploy path — weight HBM traffic is 16× below fp32, which is the whole
+game for memory-bound decode. ``--residual-codec fp16`` downcasts the
+non-quantizable leaves (biases, norms) on the wire as well.
+
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
-        --batch 4 --prompt-len 32 --gen 16 --ternary
+        --batch 4 --prompt-len 32 --gen 16 --ternary --packed
 """
 
 from __future__ import annotations
@@ -21,25 +29,37 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import ChannelConfig, ClientLink, decode_update, encode_update
-from repro.configs import get_config, get_reduced
-from repro.core import CompressionSpec, FTTQConfig, decompress_pytree
+from repro.core import CodecSpec, FTTQConfig, decompress_pytree
 from repro.core import compression as comp
+from repro.kernels.repack import packed_params_from_wire
 from repro.models.transformer import (
     decode_step, forward, init_cache, init_params, param_count,
 )
 
 
-def ternary_deploy(params, cfg: FTTQConfig, *, link: ClientLink | None = None):
-    """Compress → serialize → decode → dequantize the deployment artifact.
+def ternary_deploy(
+    params,
+    cfg: FTTQConfig,
+    *,
+    packed: bool = False,
+    residual: str = "none",
+    link: ClientLink | None = None,
+):
+    """Compress → serialize → decode the deployment artifact.
 
-    Returns (served_params, wire_bytes, est_download_s, link): what a 2-bit
-    edge checkpoint loads to (on TPU the packed path uses
-    kernels.ternary_matmul), its measured on-wire size, the estimated
-    edge-download time, and the link the estimate assumed."""
-    spec = CompressionSpec(kind="ternary", fttq=cfg)
+    Returns (served_params, wire_bytes, est_download_s, link). With
+    ``packed=False`` the artifact dequantizes to dense arrays (reference
+    path); with ``packed=True`` ternary records repack straight into the
+    ``(K//4, N)`` kernel layout and stay 2-bit in HBM.
+    """
+    spec = CodecSpec(kind="ternary", residual=residual, fttq=cfg)
     wire_tree, _ = comp.compress_pytree(params, spec)
     blob = encode_update(wire_tree)
-    served = decompress_pytree(decode_update(blob), spec)
+    decoded = decode_update(blob)
+    if packed:
+        served = packed_params_from_wire(decoded)
+    else:
+        served = decompress_pytree(decoded)
     if link is None:
         c = ChannelConfig()
         link = ClientLink(0, c.mean_bandwidth_bytes_s, c.base_latency_s, 1.0)
@@ -54,22 +74,55 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--ternary", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="serve through kernels.ternary_matmul on the packed "
+                         "2-bit layout (requires --ternary)")
+    ap.add_argument("--residual-codec", default="none",
+                    choices=["none", "fp16", "bf16", "topk"],
+                    help="codec for the non-quantizable wire leaves")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
+    if args.packed and not args.ternary:
+        raise SystemExit("--packed requires --ternary")
+
+    from repro.configs import get_config, get_reduced
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     if not cfg.causal:
         raise SystemExit(f"{args.arch} is encoder-only — no decode path")
+    if args.packed and cfg.family not in ("dense", "vlm", "audio"):
+        raise SystemExit(
+            f"--packed serves attention+mlp weights; family {cfg.family!r} "
+            "routes its hot matmuls elsewhere (moe/ssm) — use --ternary alone"
+        )
     params = init_params(cfg, jax.random.PRNGKey(0))
     print(f"serving {cfg.name}: {param_count(cfg) / 1e6:.1f}M params, "
-          f"ternary={args.ternary}")
+          f"ternary={args.ternary} packed={args.packed}")
     if args.ternary:
         fp_bytes = len(encode_update(params))
-        params, wire_bytes, dl_s, link = ternary_deploy(params, FTTQConfig())
+        served, wire_bytes, dl_s, link = ternary_deploy(
+            params, FTTQConfig(), packed=args.packed,
+            residual=args.residual_codec,
+        )
         print(f"edge checkpoint: {wire_bytes / 1e6:.2f} MB on the wire "
               f"(fp32 {fp_bytes / 1e6:.2f} MB, {fp_bytes / wire_bytes:.1f}× "
               f"smaller), est. download {dl_s:.1f}s "
               f"@ {link.bandwidth_bytes_s / 1e6:.1f} MB/s")
+        if args.packed:
+            # correctness receipt: packed-kernel logits vs the dequantized
+            # reference path (the reference copy exists only for this check;
+            # compression is deterministic, so both deploys see one blob).
+            ref_params, _, _, _ = ternary_deploy(
+                params, FTTQConfig(), packed=False,
+                residual=args.residual_codec,
+            )
+            probe = jax.random.randint(
+                jax.random.PRNGKey(9), (2, 8), 0, cfg.vocab_size)
+            lp, _, _ = forward(cfg, served, probe)
+            lr, _, _ = forward(cfg, ref_params, probe)
+            diff = float(jnp.max(jnp.abs(lp - lr)))
+            print(f"packed-vs-dequant logits: max |Δ| = {diff:.2e}")
+        params = served
 
     b, s = args.batch, args.prompt_len
     prompts = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)

@@ -20,7 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import apply_rope, dense_init
+from repro.models.common import apply_rope, dense_init, matmul
 
 NEG_INF = -1e30
 FLASH_THRESHOLD = 2048
@@ -151,10 +151,10 @@ def attention(
     """
     b, sq, d = x.shape
     g = n_heads // n_kv_heads
-    q = (x @ params["wq"]).reshape(b, sq, n_kv_heads, g, head_dim)
+    q = matmul(x, params["wq"]).reshape(b, sq, n_kv_heads, g, head_dim)
     src = kv_source if kv_source is not None else x
-    k = (src @ params["wk"]).reshape(b, src.shape[1], n_kv_heads, head_dim)
-    v = (src @ params["wv"]).reshape(b, src.shape[1], n_kv_heads, head_dim)
+    k = matmul(src, params["wk"]).reshape(b, src.shape[1], n_kv_heads, head_dim)
+    v = matmul(src, params["wv"]).reshape(b, src.shape[1], n_kv_heads, head_dim)
 
     q_pos = pos + jnp.arange(sq)
     if kv_source is not None:
@@ -196,4 +196,4 @@ def attention(
         out = _attend_naive(q, k, v, q_pos, k_pos, causal=causal, window=window,
                             k_len=k_len)
     out = out.reshape(b, sq, n_heads * head_dim)
-    return out @ params["wo"], new_cache
+    return matmul(out, params["wo"]), new_cache

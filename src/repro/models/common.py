@@ -1,9 +1,27 @@
-"""Shared model building blocks: norms, RoPE, activations, initializers."""
+"""Shared model building blocks: norms, RoPE, activations, initializers,
+and the weight-matmul dispatch that lets serving run on packed 2-bit
+weights without touching the layer code."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, w) -> jax.Array:
+    """``x @ w`` with weight-type dispatch.
+
+    Dense arrays take the ordinary contraction. ``PackedTernary`` weights
+    (the zero-copy serve path) route through the packed Pallas kernel —
+    the 2-bit codes are unpacked in VMEM, never as a dense array in HBM.
+    The dispatch is static: the weight's type is part of the pytree
+    structure, so under jit/scan exactly one branch is traced.
+    """
+    from repro.kernels.repack import PackedTernary, packed_matmul
+
+    if isinstance(w, PackedTernary):
+        return packed_matmul(x, w)
+    return x @ w
 
 
 def rms_norm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import act_fn, dense_init
+from repro.models.common import act_fn, dense_init, matmul
 
 
 def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype):
@@ -21,9 +21,9 @@ def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype):
 
 def mlp(params: dict, x: jax.Array, activation: str = "silu") -> jax.Array:
     act = act_fn(activation)
-    h = x @ params["w_in"]
+    h = matmul(x, params["w_in"])
     if "w_gate" in params:
-        h = act(x @ params["w_gate"]) * h
+        h = act(matmul(x, params["w_gate"])) * h
     else:
         h = act(h)
-    return h @ params["w_out"]
+    return matmul(h, params["w_out"])

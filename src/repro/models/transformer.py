@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.models import mamba2 as mb
 from repro.models.attention import attention, init_attn
-from repro.models.common import apply_norm, dense_init, embed_init
+from repro.models.common import apply_norm, dense_init, embed_init, matmul
 from repro.models.mlp import init_mlp, mlp
 from repro.models.moe import init_moe, moe
 
@@ -554,7 +554,7 @@ def forward(
     if cfg.tie_embeddings:
         logits = x @ params["embed"]["table"].T.astype(cdt)
     else:
-        logits = x @ params["lm_head"]
+        logits = matmul(x, params["lm_head"])
     # logits stay in compute dtype: upcasting here would make every backward
     # cotangent f32 (2× activation-grad bandwidth + 2× TP all-reduce bytes);
     # the loss upcasts inside log_softmax instead.

@@ -19,19 +19,47 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
-from repro.core.compression import CompressionSpec, compress_pytree, decompress_pytree
+from repro.core.compression import (
+    CodecSpec,
+    DowncastTensor,
+    TopKTensor,
+    compress_pytree,
+    decompress_pytree,
+)
 from repro.core.ternary import TernaryTensor
 
 Pytree = Any
 
 _SENTINEL_ARRAY = "__nd__"
 _SENTINEL_TERNARY = "__tern__"
+_SENTINEL_DOWNCAST = "__down__"
+_SENTINEL_TOPK = "__topk__"
 _SENTINEL_NONE = "__none__"
+
+
+def _arr_obj(leaf) -> dict:
+    arr = np.asarray(leaf)
+    return {"data": arr.tobytes(), "dtype": arr.dtype.name,
+            "shape": list(arr.shape)}
+
+
+def _arr_from(obj) -> jnp.ndarray:
+    dt = np.dtype(jnp.dtype(obj["dtype"]))
+    return jnp.asarray(
+        np.frombuffer(obj["data"], dt).reshape(obj["shape"])
+    )
 
 
 def _pack_leaf(leaf):
     if leaf is None:
         return {_SENTINEL_NONE: True}
+    if isinstance(leaf, DowncastTensor):
+        return {_SENTINEL_DOWNCAST: True, "payload": _arr_obj(leaf.data),
+                "orig_dtype": leaf.orig_dtype}
+    if isinstance(leaf, TopKTensor):
+        return {_SENTINEL_TOPK: True, "indices": _arr_obj(leaf.indices),
+                "values": _arr_obj(leaf.values), "shape": list(leaf.shape),
+                "dtype": leaf.dtype}
     if isinstance(leaf, TernaryTensor):
         return {
             _SENTINEL_TERNARY: True,
@@ -54,6 +82,13 @@ def _pack_leaf(leaf):
 def _unpack_leaf(obj):
     if _SENTINEL_NONE in obj:
         return None
+    if _SENTINEL_DOWNCAST in obj:
+        return DowncastTensor(data=_arr_from(obj["payload"]),
+                              orig_dtype=obj["orig_dtype"])
+    if _SENTINEL_TOPK in obj:
+        return TopKTensor(indices=_arr_from(obj["indices"]),
+                          values=_arr_from(obj["values"]),
+                          shape=tuple(obj["shape"]), dtype=obj["dtype"])
     if _SENTINEL_TERNARY in obj:
         wq = np.frombuffer(obj["w_q"], np.float32).reshape(obj["w_q_shape"])
         return TernaryTensor(
@@ -69,7 +104,7 @@ def _unpack_leaf(obj):
 
 
 def _is_leaf(x):
-    return x is None or isinstance(x, TernaryTensor)
+    return x is None or isinstance(x, (TernaryTensor, DowncastTensor, TopKTensor))
 
 
 def save_checkpoint(
@@ -77,7 +112,7 @@ def save_checkpoint(
     step: int,
     state: Pytree,
     *,
-    compression: CompressionSpec | None = None,
+    compression: CodecSpec | None = None,
     keep: int = 3,
     metadata: dict | None = None,
 ) -> str:
@@ -87,7 +122,7 @@ def save_checkpoint(
     keep: retain only the newest ``keep`` checkpoints (0 = keep all).
     """
     os.makedirs(directory, exist_ok=True)
-    if compression is not None and compression.kind != "none":
+    if compression is not None and not compression.is_identity:
         wire, _ = compress_pytree(state, compression)
     else:
         wire = state
@@ -106,7 +141,7 @@ def save_checkpoint(
         f.write(msgpack.packb(payload, use_bin_type=True))
     meta = dict(metadata or {})
     meta.update({"step": step, "compressed": compression is not None
-                 and compression.kind != "none"})
+                 and not compression.is_identity})
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
     if os.path.exists(final):
@@ -143,7 +178,7 @@ def restore_checkpoint(
     step: int | None = None,
     *,
     example_state: Pytree | None = None,
-    compression: CompressionSpec | None = None,
+    compression: CodecSpec | None = None,
     sharding: Any | None = None,
 ) -> tuple[Pytree, dict]:
     """Load a checkpoint. If ``example_state`` is given its treedef is used
@@ -165,9 +200,9 @@ def restore_checkpoint(
     else:
         raise ValueError("restore_checkpoint requires example_state for treedef")
     state = jax.tree_util.tree_unflatten(treedef, leaves)
-    if compression is not None and compression.kind != "none" or meta.get("compressed"):
-        spec = compression or CompressionSpec(kind="ternary")
-        state = decompress_pytree(state, spec)
+    if (compression is not None and not compression.is_identity) or meta.get(
+            "compressed"):
+        state = decompress_pytree(state)
     if sharding is not None:
         if jax.tree_util.tree_structure(sharding) == jax.tree_util.tree_structure(state):
             state = jax.tree_util.tree_map(jax.device_put, state, sharding)

@@ -1,0 +1,96 @@
+"""Channel model tests: the shared server-NIC bottleneck (max-min fair
+share across concurrent transfers) and its reduction to independent links
+when the cap is infinite."""
+
+import numpy as np
+
+from repro.comm import Channel, ChannelConfig
+
+
+def _flat_cfg(**kw):
+    base = dict(mean_bandwidth_bytes_s=1e6, bandwidth_sigma=0.0,
+                base_latency_s=1e-4, latency_jitter_s=0.0,
+                compute_speed_sigma=0.0)
+    base.update(kw)
+    return ChannelConfig(**base)
+
+
+def test_concurrent_transfers_contend_for_server_nic():
+    """N simultaneous downloads through a saturated NIC take ~N× longer
+    than a single one — the shared bottleneck a per-link model misses."""
+    cfg = _flat_cfg(server_bandwidth_bytes_s=1e6)
+    ch = Channel(cfg, 8, seed=0)
+    t_one = ch.transfer_concurrent([0], [1_000_000], "down")[0]
+    t_four = ch.transfer_concurrent([0, 1, 2, 3], [1_000_000] * 4, "down")
+    assert 0.99 < t_one < 1.01
+    assert all(3.9 < t < 4.1 for t in t_four), t_four
+    # and the log recorded one event per flow
+    assert len(ch.log) == 5
+    assert all(e.direction == "down" for e in ch.log)
+
+
+def test_infinite_cap_reduces_to_independent_links():
+    cfg = ChannelConfig(mean_bandwidth_bytes_s=1e6, bandwidth_sigma=0.4,
+                        latency_jitter_s=0.0)
+    a, b = Channel(cfg, 6, seed=3), Channel(cfg, 6, seed=3)
+    conc = a.transfer_concurrent(list(range(6)), [300_000] * 6, "down")
+    solo = [b.transfer(k, 300_000, "down") for k in range(6)]
+    np.testing.assert_allclose(conc, solo, atol=1e-9)
+
+
+def test_zero_cap_means_uncapped_like_deadline_convention():
+    """server_bandwidth_bytes_s=0 disables the bottleneck (0-or-inf, same
+    convention as deadline_s) instead of hanging the fluid simulation."""
+    cfg = _flat_cfg(server_bandwidth_bytes_s=0.0)
+    ch = Channel(cfg, 2, seed=0)
+    times = ch.transfer_concurrent([0, 1], [1_000_000] * 2, "down")
+    assert all(0.99 < t < 1.01 for t in times), times
+
+
+def test_fair_share_respects_slow_client_links():
+    """A client slower than its fair share only uses its own link rate; the
+    leftover capacity goes to the fast clients (max-min)."""
+    cfg = _flat_cfg(server_bandwidth_bytes_s=2e6)
+    ch = Channel(cfg, 4, seed=0)
+    # hand-tune links: one 0.2 MB/s straggler, three 1 MB/s clients
+    from repro.comm.channel import ClientLink
+    ch.links[0] = ClientLink(0, 0.2e6, 1e-4, 1.0)
+    times = ch.transfer_concurrent([0, 1, 2, 3], [600_000] * 4, "down")
+    # straggler: 600k / 0.2 MB/s = 3 s regardless of the NIC
+    assert 2.9 < times[0] < 3.1
+    # fast three: share (2 MB/s − 0.2) / 3 = 0.6 → 1 s, then the finishers'
+    # capacity redistributes; must be well under serialized 0.9 s each
+    assert all(t < 1.2 for t in times[1:])
+
+
+def test_sync_server_broadcast_contends(tmp_path):
+    """End to end: capping the server NIC stretches the sync round's
+    wall-clock while bytes stay identical."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import partition_iid, synthetic_classification
+    from repro.fed import FedConfig, run_federated
+    from repro.models.paper_models import init_mlp_mnist, mlp_mnist
+    from repro.optim import adam
+
+    x, y, xt, yt = synthetic_classification(
+        jax.random.PRNGKey(0), 400, 10, 784, noise=3.0, n_test=80)
+    clients = partition_iid(x, y, 4)
+    params = init_mlp_mnist(jax.random.PRNGKey(1))
+
+    def eval_fn(p):
+        logits = mlp_mnist(p, jnp.asarray(xt))
+        return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(yt))), 0.0
+
+    def run(nic):
+        chan = _flat_cfg(server_bandwidth_bytes_s=nic)
+        cfg = FedConfig(algorithm="fedavg", participation=1.0, local_epochs=1,
+                        batch_size=32, rounds=1, channel=chan, seed=0)
+        return run_federated(mlp_mnist, params, clients, cfg, adam(1e-3),
+                             eval_fn, eval_every=1)
+
+    wide = run(float("inf"))
+    narrow = run(1e6)
+    assert narrow.download_bytes == wide.download_bytes
+    assert narrow.total_time_s > wide.total_time_s * 1.5

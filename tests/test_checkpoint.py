@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compression import CompressionSpec
+from repro.core.compression import CodecSpec
 from repro.models.transformer import ModelConfig
 from repro.optim import adam
 from repro.train import (
@@ -79,7 +79,7 @@ def test_ternary_compressed_checkpoint(tmp_path):
     d_fp = str(tmp_path / "fp")
     d_t = str(tmp_path / "tern")
     save_checkpoint(d_fp, 1, state.params)
-    save_checkpoint(d_t, 1, state.params, compression=CompressionSpec(kind="ternary"))
+    save_checkpoint(d_t, 1, state.params, compression=CodecSpec(kind="ternary"))
 
     def dir_size(d):
         return sum(os.path.getsize(os.path.join(r, f))
@@ -87,7 +87,7 @@ def test_ternary_compressed_checkpoint(tmp_path):
 
     assert dir_size(d_t) < 0.55 * dir_size(d_fp)  # embed stays fp32
     restored, _ = restore_checkpoint(
-        d_t, example_state=state.params, compression=CompressionSpec(kind="ternary")
+        d_t, example_state=state.params, compression=CodecSpec(kind="ternary")
     )
     # quantized leaves reconstruct approximately
     a = np.asarray(restored["blocks"]["attn"]["wq"])

@@ -1,0 +1,278 @@
+"""Codec registry tests: per-codec round trips through the v2 wire, the
+per-direction (upstream/downstream) split in the federated servers, and
+the measured-bytes contract for the new codecs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import decode_update, encode_update, update_nbytes
+from repro.core import (
+    CodecSpec,
+    CompressionSpec,
+    DowncastTensor,
+    TopKTensor,
+    available_codecs,
+    compress_pytree,
+    decompress_pytree,
+    get_codec,
+)
+from repro.core.ternary import TernaryTensor, encode_ternary
+
+
+def _tree(seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "layer": {
+            "w": jax.random.normal(k1, (48, 24)),          # quantizable
+            "bias": jax.random.normal(k2, (24,)) * 0.1,    # residual stream
+        },
+        "norm_scale": jnp.arange(8.0) / 8.0,               # residual stream
+    }
+
+
+def test_registry_ships_the_four_codec_families():
+    assert {"none", "ternary", "fp16", "bf16", "topk"} <= set(available_codecs())
+    with pytest.raises(ValueError, match="unknown codec"):
+        get_codec("gzip")
+    with pytest.raises(ValueError, match="unknown compression"):
+        CodecSpec(kind="gzip")
+    with pytest.raises(ValueError, match="topk_fraction"):
+        CodecSpec(kind="topk", topk_fraction=0.0)
+
+
+# --------------------------------------------------------------------------
+# Wire round trips (acceptance: fp16 and top-k bit-exact through v2).
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["fp16", "bf16"])
+def test_downcast_roundtrip_bitexact(kind):
+    tree = _tree(1)
+    wire, _ = compress_pytree(tree, CodecSpec(kind=kind, residual=kind))
+    back = decode_update(encode_update(wire))
+    for key in (("layer", "w"), ("layer", "bias")):
+        a, b = wire[key[0]][key[1]], back[key[0]][key[1]]
+        assert isinstance(a, DowncastTensor) and isinstance(b, DowncastTensor)
+        assert a.orig_dtype == b.orig_dtype == "float32"
+        np.testing.assert_array_equal(np.asarray(a.data), np.asarray(b.data))
+    # decode restores the logical dtype and halves the wire bytes
+    dec = decompress_pytree(back)
+    assert dec["layer"]["w"].dtype == jnp.float32
+    assert update_nbytes(wire) < 0.6 * update_nbytes(tree)
+
+
+def test_topk_roundtrip_bitexact_and_sparse_decode():
+    tree = _tree(2)
+    spec = CodecSpec(kind="topk", residual="topk", topk_fraction=0.125)
+    wire, _ = compress_pytree(tree, spec)
+    t = wire["layer"]["w"]
+    assert isinstance(t, TopKTensor)
+    assert t.indices.size == int(np.ceil(0.125 * 48 * 24))
+    back = decode_update(encode_update(wire))
+    np.testing.assert_array_equal(
+        np.asarray(t.indices), np.asarray(back["layer"]["w"].indices))
+    np.testing.assert_array_equal(
+        np.asarray(t.values), np.asarray(back["layer"]["w"].values))
+    # decode: kept positions exact, dropped positions exactly zero
+    dec = decompress_pytree(back)["layer"]["w"]
+    orig = np.asarray(tree["layer"]["w"]).reshape(-1)
+    idx = np.asarray(t.indices)
+    np.testing.assert_array_equal(np.asarray(dec).reshape(-1)[idx], orig[idx])
+    mask = np.ones(orig.size, bool)
+    mask[idx] = False
+    assert np.all(np.asarray(dec).reshape(-1)[mask] == 0.0)
+    # the kept set is the top-|value| set
+    thresh = np.abs(orig[idx]).min()
+    assert np.all(np.abs(orig[mask]) <= thresh + 1e-7)
+
+
+def test_mixed_spec_quantizable_vs_residual_split():
+    """kind applies to weight-like leaves, residual to the bias/norm rest."""
+    tree = _tree(3)
+    wire, _ = compress_pytree(tree, CodecSpec(kind="ternary", residual="fp16"))
+    assert isinstance(wire["layer"]["w"], TernaryTensor)
+    assert isinstance(wire["layer"]["bias"], DowncastTensor)
+    assert isinstance(wire["norm_scale"], DowncastTensor)
+    dec = decompress_pytree(decode_update(encode_update(wire)))
+    np.testing.assert_allclose(
+        np.asarray(dec["layer"]["bias"]), np.asarray(tree["layer"]["bias"]),
+        rtol=2e-3, atol=2e-4,
+    )
+
+
+def test_residual_codec_never_touches_non_float_leaves():
+    """Optimizer steps, RNG keys and masks ship raw even under lossy
+    residual codecs — a float codec would corrupt them."""
+    tree = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (16, 8)),
+        "step": jnp.asarray(100_000, jnp.int32),
+        "rng": jnp.asarray([4059202431, 2870008242], jnp.uint32),
+        "mask": jnp.asarray([True, False, True]),
+    }
+    for residual in ("fp16", "bf16", "topk"):
+        wire, _ = compress_pytree(tree, CodecSpec(kind="ternary", residual=residual))
+        dec = decompress_pytree(decode_update(encode_update(wire)))
+        assert int(dec["step"]) == 100_000, residual
+        np.testing.assert_array_equal(np.asarray(dec["rng"]), np.asarray(tree["rng"]))
+        np.testing.assert_array_equal(np.asarray(dec["mask"]), np.asarray(tree["mask"]))
+
+
+def test_register_codec_rejects_duplicates_and_unframed_leaves():
+    import repro.core.compression as comp_mod
+    from repro.comm import WireError, encode_update as enc
+
+    class FakeCodec:
+        name = "fp16"
+        wire_kind = comp_mod.KIND_DOWNCAST
+        leaf_type = DowncastTensor
+
+        def encode_leaf(self, leaf, spec):
+            return leaf
+
+        def decode_leaf(self, leaf):
+            return leaf
+
+    with pytest.raises(ValueError, match="already registered"):
+        comp_mod.register_codec(FakeCodec())
+
+    # a codec registered without a wire record must fail loudly at encode,
+    # not silently serialize its children as containers
+    @jax.tree_util.register_pytree_node_class
+    class OrphanLeaf:
+        def __init__(self, data):
+            self.data = data
+
+        def tree_flatten(self):
+            return (self.data,), None
+
+        @classmethod
+        def tree_unflatten(cls, aux, children):
+            return cls(children[0])
+
+    class OrphanCodec:
+        name = "orphan-test"
+        wire_kind = 200
+        leaf_type = OrphanLeaf
+
+        def encode_leaf(self, leaf, spec):
+            return OrphanLeaf(leaf)
+
+        def decode_leaf(self, leaf):
+            return leaf.data
+
+    comp_mod.register_codec(OrphanCodec())
+    try:
+        with pytest.raises(WireError, match="no .*record kind"):
+            enc({"x": OrphanLeaf(jnp.ones(3))})
+    finally:
+        del comp_mod._CODECS["orphan-test"]
+
+
+def test_compress_finishes_partially_compressed_tree():
+    """A QAT payload (TernaryTensor weights already in place) passes through
+    untouched; only the raw residual leaves get the residual codec."""
+    i_t = jnp.asarray(np.random.default_rng(0).integers(-1, 2, (16, 8)), jnp.int8)
+    payload = {"w": encode_ternary(i_t, jnp.float32(0.5)), "b": jnp.arange(4.0)}
+    wire, _ = compress_pytree(payload, CodecSpec(kind="ternary", residual="bf16"))
+    assert wire["w"] is payload["w"]
+    assert isinstance(wire["b"], DowncastTensor)
+
+
+def test_error_feedback_generic_over_codecs():
+    """EF makes the cumulative mean of repeated topk compressions exact."""
+    g = jax.random.normal(jax.random.PRNGKey(7), (32, 16))
+    spec = CodecSpec(kind="topk", residual="none", topk_fraction=0.2,
+                     error_feedback=True)
+    res = None
+    acc = np.zeros((32, 16), np.float32)
+    n = 15
+    for _ in range(n):
+        wire, res = compress_pytree({"w": g}, spec, residual=res)
+        acc += np.asarray(decompress_pytree(wire)["w"])
+    ef_err = np.abs(acc / n - np.asarray(g)).mean()
+    base_err = np.abs(np.asarray(g)).mean() * 0.8  # plain topk drops 80%
+    assert ef_err < 0.35 * base_err
+
+
+# --------------------------------------------------------------------------
+# Satellite: TernaryTensor.nbytes_wire derives scale bytes from w_q.
+# --------------------------------------------------------------------------
+
+
+def test_nbytes_wire_derives_scale_bytes_from_wq_dtype():
+    i_t = jnp.asarray(np.random.default_rng(1).integers(-1, 2, (4, 8, 8)), jnp.int8)
+    t32 = encode_ternary(i_t, jnp.ones((4, 1, 1), jnp.float32))
+    t16 = encode_ternary(i_t, jnp.ones((4, 1, 1), jnp.bfloat16))
+    packed = int(t32.packed.size)
+    assert t32.nbytes_wire() == packed + 4 * 4   # four fp32 scales
+    assert t16.nbytes_wire() == packed + 4 * 2   # four bf16 scales
+    scalar = encode_ternary(jnp.asarray([1, -1, 0], jnp.int8), jnp.float16(0.5))
+    assert scalar.nbytes_wire() == int(scalar.packed.size) + 2
+
+
+# --------------------------------------------------------------------------
+# Per-direction split through the federated servers.
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fed_task():
+    from repro.data import partition_iid, synthetic_classification
+    from repro.models.paper_models import init_mlp_mnist, mlp_mnist
+
+    x, y, xt, yt = synthetic_classification(
+        jax.random.PRNGKey(0), 600, 10, 784, noise=3.0, n_test=100
+    )
+    clients = partition_iid(x, y, 4)
+    params = init_mlp_mnist(jax.random.PRNGKey(1))
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+
+    def eval_fn(p):
+        logits = mlp_mnist(p, xt_j)
+        return float(jnp.mean(jnp.argmax(logits, -1) == yt_j)), 0.0
+
+    return clients, params, mlp_mnist, eval_fn
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_asymmetric_direction_bytes(fed_task, mode):
+    """fp16 residuals upstream only: upload shrinks, download unchanged —
+    the Table-IV accounting reflects the direction split."""
+    from repro.fed import FedConfig, run_federated
+    from repro.optim import adam
+
+    clients, params, apply_fn, eval_fn = fed_task
+    base = dict(algorithm="tfedavg", mode=mode, participation=1.0,
+                local_epochs=1, batch_size=32, rounds=2, seed=3)
+    asym = CompressionSpec(
+        upstream=CodecSpec(kind="ternary", residual="fp16"),
+        downstream=CodecSpec(kind="ternary", residual="none"),
+    )
+    r_base = run_federated(apply_fn, params, clients, FedConfig(**base),
+                           adam(1e-3), eval_fn, eval_every=2)
+    r_asym = run_federated(apply_fn, params, clients,
+                           FedConfig(**base, compression=asym),
+                           adam(1e-3), eval_fn, eval_every=2)
+    assert r_asym.upload_bytes < r_base.upload_bytes
+    assert r_asym.download_bytes == r_base.download_bytes
+
+
+def test_fedavg_with_downcast_both_ways(fed_task):
+    """FedAvg over an fp16 wire: ~2× less traffic than raw fp32, learning
+    still functional end to end (decode restores fp32)."""
+    from repro.fed import FedConfig, run_federated
+    from repro.optim import adam
+
+    clients, params, apply_fn, eval_fn = fed_task
+    base = dict(algorithm="fedavg", participation=1.0, local_epochs=1,
+                batch_size=32, rounds=2, seed=4)
+    half = CompressionSpec.symmetric(kind="fp16", residual="fp16")
+    r32 = run_federated(apply_fn, params, clients, FedConfig(**base),
+                        adam(1e-3), eval_fn, eval_every=2)
+    r16 = run_federated(apply_fn, params, clients,
+                        FedConfig(**base, compression=half),
+                        adam(1e-3), eval_fn, eval_every=2)
+    assert 1.8 < r32.upload_bytes / r16.upload_bytes < 2.2
+    assert 1.8 < r32.download_bytes / r16.download_bytes < 2.2

@@ -18,7 +18,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    CompressionSpec, FTTQConfig, compress_pytree, decompress_pytree,
+    CodecSpec, FTTQConfig, compress_pytree, decompress_pytree,
     pack2bit, unpack2bit,
 )
 from repro.core import fttq as F
@@ -104,7 +104,7 @@ def test_compression_error_bounded(seed):
     """|θ − dequant(compress(θ))|∞ ≤ max|θ| + w_q (coarse but guaranteed)."""
     key = jax.random.PRNGKey(seed)
     tree = {"w": jax.random.normal(key, (64, 32))}
-    spec = CompressionSpec(kind="ternary")
+    spec = CodecSpec(kind="ternary")
     wire, _ = compress_pytree(tree, spec)
     rec = decompress_pytree(wire, spec)
     err = np.abs(np.asarray(tree["w"]) - np.asarray(rec["w"]))
@@ -141,7 +141,7 @@ def test_error_feedback_reduces_bias(seed):
     (residual carries what quantization dropped)."""
     key = jax.random.PRNGKey(seed)
     g = jax.random.normal(key, (32, 16))
-    spec = CompressionSpec(kind="ternary", error_feedback=True)
+    spec = CodecSpec(kind="ternary", error_feedback=True)
     res = None
     acc = np.zeros_like(np.asarray(g))
     n = 12

@@ -150,9 +150,9 @@ def test_truncation_and_magic_and_version_rejected():
         decode_update(blob[: len(blob) - 3])
     with pytest.raises(WireError, match="magic"):
         decode_update(b"XXXX" + blob[4:])
-    # bump the version field (and keep everything else): header-level reject
+    # an unsupported version (keep everything else): header-level reject
     magic, ver, flags, n, crc, blen = _HEADER.unpack_from(blob)
-    bad = _HEADER.pack(WIRE_MAGIC, ver + 1, flags, n, crc, blen) + blob[_HEADER.size:]
+    bad = _HEADER.pack(WIRE_MAGIC, 99, flags, n, crc, blen) + blob[_HEADER.size:]
     with pytest.raises(WireError, match="version"):
         decode_update(bad)
     with pytest.raises(WireError):
