@@ -1,0 +1,134 @@
+"""Fused packed fan-in aggregation vs the per-client dequant loop.
+
+Both paths consume the SAME serialized client wire blobs (the ResNet-CIFAR
+payload — the paper's larger model) and produce the |D_k|-weighted mean:
+
+  old  — decode each blob to jax arrays, dequantize every leaf to a dense
+         fp32 tree, fold in a Python loop (``core.tfedavg.server_aggregate``)
+  fused — stream blobs through ``fed.aggregator.Aggregator``: zero-copy
+         record decode into stacked packed buffers + one Pallas launch per
+         chunk (``kernels.aggregate.packed_weighted_sum``)
+
+Rows (name, us_per_call, derived):
+  agg_old_c<C> / agg_fused_c<C>   derived = aggregation throughput, client
+                                  updates/s at fan-in C
+  agg_speedup_c<C>                derived = old_time / fused_time
+  agg_gbs_c<C>                    derived = effective dense GB/s of the fused
+                                  path (C · n_params · 4 B / second)
+  agg_peak_mib_c<C>               derived = peak stacked-buffer MiB of the
+                                  fused path (chunked ⇒ independent of C)
+
+``BENCH_aggregate.json`` (repo root) captures the same numbers for the CI
+perf trajectory. Pallas runs interpret-mode off-TPU; the STRUCTURAL wins
+(no per-client dense trees, O(chunk) memory, bounded trace set) transfer.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.comm.wire import decode_update, encode_update
+from repro.core import FTTQConfig
+from repro.core import fttq as F
+from repro.core.tfedavg import TernaryUpdate, client_update_payload, server_aggregate
+from repro.fed.aggregator import Aggregator
+from repro.models.paper_models import init_resnet_cifar
+
+FTTQ = FTTQConfig()
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_aggregate.json")
+CHUNK_C = 16
+N_DISTINCT = 4   # distinct client payloads; cycled to build larger fan-ins
+
+
+def _client_blobs():
+    blobs = []
+    n_params = 0
+    for c in range(N_DISTINCT):
+        params = init_resnet_cifar(jax.random.PRNGKey(c))
+        wq = F.init_wq_tree(params, FTTQ)
+        payload = client_update_payload(params, wq, FTTQ)
+        blobs.append(encode_update(payload))
+        if not n_params:
+            n_params = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    return blobs, n_params
+
+
+def _old_loop(blobs, weights):
+    updates = [
+        TernaryUpdate(payload=decode_update(b), n_samples=w)
+        for b, w in zip(blobs, weights)
+    ]
+    return server_aggregate(updates)
+
+
+def _fused(blobs, weights):
+    agg = Aggregator(chunk_c=CHUNK_C)
+    for b, w in zip(blobs, weights):
+        agg.add(b, weight=w)
+    return agg.finalize(), agg.peak_intermediate_bytes
+
+
+def _time(fn, repeats, warmup):
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def fused_aggregation():
+    from benchmarks.common import SMOKE
+
+    fan_ins = (4, 16) if SMOKE else (4, 16, 64)
+    repeats, warmup = (1, 1) if SMOKE else (3, 1)
+    base, n_params = _client_blobs()
+    rows, record = [], {
+        "payload": "resnet_cifar", "n_params": n_params,
+        "chunk_c": CHUNK_C, "interpret": jax.default_backend() != "tpu",
+        "smoke": SMOKE, "results": {},
+    }
+    for c in fan_ins:
+        blobs = [base[i % N_DISTINCT] for i in range(c)]
+        weights = [100 + 13 * i for i in range(c)]
+
+        dt_old = _time(lambda: _old_loop(blobs, weights), repeats, warmup)
+        dt_fused = _time(lambda: _fused(blobs, weights)[0], repeats, warmup)
+        _, peak = _fused(blobs, weights)
+
+        # parity receipt: the two paths must agree before their times do.
+        ref = _old_loop(blobs, weights)
+        got, _ = _fused(blobs, weights)
+        err = max(
+            float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+            for a, b in zip(jax.tree_util.tree_leaves(ref),
+                            jax.tree_util.tree_leaves(got))
+        )
+        assert err < 1e-5, f"fused aggregation diverged at C={c}: {err}"
+
+        speedup = dt_old / dt_fused
+        gbs = c * n_params * 4 / dt_fused / 1e9
+        rows.append((f"agg_old_c{c}", round(dt_old * 1e6, 1), round(c / dt_old, 1)))
+        rows.append((f"agg_fused_c{c}", round(dt_fused * 1e6, 1), round(c / dt_fused, 1)))
+        rows.append((f"agg_speedup_c{c}", 0.0, round(speedup, 2)))
+        rows.append((f"agg_gbs_c{c}", 0.0, round(gbs, 3)))
+        rows.append((f"agg_peak_mib_c{c}", 0.0, round(peak / 2**20, 3)))
+        record["results"][str(c)] = {
+            "old_s": dt_old, "fused_s": dt_fused, "speedup": round(speedup, 2),
+            "old_updates_per_s": round(c / dt_old, 1),
+            "fused_updates_per_s": round(c / dt_fused, 1),
+            "fused_effective_gb_s": round(gbs, 3),
+            "peak_intermediate_bytes": int(peak),
+            "max_abs_err_vs_reference": err,
+        }
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    return rows

@@ -53,11 +53,20 @@ def _models():
     return out
 
 
-def _timed(fn, *args, repeats: int = 5):
-    fn(*args)  # warm (traces/compiles + device transfers)
+def _timed(fn, *args, repeats: int = 5, warmup: int = 2):
+    """Warmed + synchronized: decode returns jax arrays whose computation is
+    async-dispatched — ``block_until_ready`` inside the timed region makes
+    the MB/s figures measure compute, not dispatch."""
+    from benchmarks.common import SMOKE
+
+    if SMOKE:
+        repeats, warmup = 1, 1
+    for _ in range(max(warmup, 1)):  # traces/compiles + device transfers
+        jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(repeats):
         out = fn(*args)
+        jax.block_until_ready(out)
     return out, (time.perf_counter() - t0) / repeats
 
 

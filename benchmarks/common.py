@@ -17,13 +17,23 @@ import jax.numpy as jnp
 from repro.data import synthetic_classification, partition_iid
 from repro.models.paper_models import init_mlp_mnist, mlp_mnist
 
+# smoke mode (benchmarks.run --smoke): shrink every section to a CI-budget
+# sanity pass — same code paths, fewer repeats / smaller sweeps.
+SMOKE = False
 
-def timed(fn, *args, repeats: int = 3):
-    fn(*args)  # compile/warm
+
+def timed(fn, *args, repeats: int = 3, warmup: int = 2):
+    """Mean wall-clock µs per call, async-dispatch-proof: every warmup AND
+    every timed iteration is ``jax.block_until_ready``-synchronized, so the
+    number measures compute, not how fast XLA enqueues work."""
+    if SMOKE:
+        repeats, warmup = 1, 1
+    for _ in range(max(warmup, 1)):            # compile/trace + device warm
+        jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(repeats):
         out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(out)
     return (time.perf_counter() - t0) / repeats * 1e6  # µs
 
 

@@ -4,6 +4,7 @@ appropriate per row; see each bench's docstring).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only table4,codec
+    PYTHONPATH=src python -m benchmarks.run --only aggregate --smoke   # CI
 """
 
 from __future__ import annotations
@@ -13,11 +14,12 @@ import sys
 import time
 import traceback
 
-from benchmarks import bench_kernels, bench_tables, bench_wire
+from benchmarks import bench_aggregate, bench_kernels, bench_tables, bench_wire
 
 SECTIONS = {
     "wire": bench_wire.wire_codec,
     "codecs": bench_wire.codec_table,
+    "aggregate": bench_aggregate.fused_aggregation,
     "table2": bench_tables.table2_iid_accuracy,
     "table3": bench_tables.table3_noniid,
     "table4": bench_tables.table4_comm_costs,
@@ -35,8 +37,14 @@ SECTIONS = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sanity mode: same code paths, minimal repeats")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        import benchmarks.common as common
+
+        common.SMOKE = True
 
     print("name,us_per_call,derived")
     failures = 0

@@ -43,11 +43,14 @@ from repro.core.ternary import TernaryTensor, encode_ternary
 Pytree = Any
 
 # Wire record kind bytes (the framing contract with ``repro.comm.wire``).
-# RAW and TERNARY are wire-v1; DOWNCAST and TOPK need wire-v2 buffers.
+# RAW and TERNARY are wire-v1; DOWNCAST and TOPK need wire-v2 buffers;
+# TOPK_DELTA (delta-varint indices, the kind encoders emit for TopKTensor
+# since v3) needs v3. KIND_TOPK stays decodable for stored v2 captures.
 KIND_RAW = 0
 KIND_TERNARY = 1
 KIND_DOWNCAST = 2
 KIND_TOPK = 3
+KIND_TOPK_DELTA = 4
 
 
 # --------------------------------------------------------------------------
@@ -293,10 +296,14 @@ class DowncastCodec:
 
 
 class TopKCodec:
-    """Keep the spec.topk_fraction largest-magnitude entries; rest decode 0."""
+    """Keep the spec.topk_fraction largest-magnitude entries; rest decode 0.
+
+    Leaves frame under TOPK_DELTA since wire v3 (sorted indices ship as
+    varint gaps); v2 TOPK buffers still decode to the same leaf type.
+    """
 
     name = "topk"
-    wire_kind = KIND_TOPK
+    wire_kind = KIND_TOPK_DELTA
     leaf_type = TopKTensor
 
     def encode_leaf(self, leaf, spec):

@@ -90,7 +90,14 @@ def _dequant_payload(payload: Pytree) -> Pytree:
 
 
 def server_aggregate(updates: list[TernaryUpdate]) -> Pytree:
-    """θ_{r+1} = Σ_k |D_k|/Σ|D_k| · dequant(payload_k)  (Algorithm 2)."""
+    """θ_{r+1} = Σ_k |D_k|/Σ|D_k| · dequant(payload_k)  (Algorithm 2).
+
+    This is the list-based REFERENCE: it dequantizes every client to a
+    dense tree before folding — O(C·P) fp32 traffic. The servers stream
+    wire blobs through ``fed.aggregator.Aggregator`` instead (fused packed
+    fan-in kernel, O(chunk) memory); the property tests pin the two paths
+    together within fp32 reordering tolerance.
+    """
     if not updates:
         raise ValueError("server_aggregate: no client updates survived the round")
     total = float(sum(u.n_samples for u in updates))

@@ -4,6 +4,7 @@ model (``repro.comm``) with channel-emergent straggler mitigation — plus an
 event-driven buffered-asynchronous server (FedBuf-style). ``run_federated``
 is the unified entry point; ``cfg.mode`` picks "sync" or "async"."""
 
+from repro.fed.aggregator import Aggregator
 from repro.fed.async_server import run_federated_async
 from repro.fed.simulation import (
     FedConfig,
@@ -13,6 +14,6 @@ from repro.fed.simulation import (
 )
 
 __all__ = [
-    "FedConfig", "FedResult",
+    "Aggregator", "FedConfig", "FedResult",
     "run_federated", "run_federated_sync", "run_federated_async",
 ]

@@ -1,0 +1,276 @@
+"""Streaming fused fan-in aggregation for the T-FedAvg server.
+
+``Aggregator`` replaces the dequantize-every-client Python loop
+(``core.tfedavg.server_aggregate`` stays as the list-based REFERENCE): wire
+blobs stream in one at a time (``add``), their ternary records are decoded
+ZERO-COPY (numpy views straight off the buffer, no per-client device
+transfer) into reusable stacked ``(chunk, R, LANES)`` uint8 buffers, and
+every full chunk is folded into the running dense sum by ONE launch of the
+fused Pallas kernel (``kernels.aggregate.packed_weighted_sum``, C-shardable
+over a mesh via ``parallel.fanin``). ``finalize`` flushes the remainder and
+returns the |D_k|-weighted mean pytree.
+
+Why this is the fan-in artery:
+  - per-client fp32 trees are never materialized — the only dense state is
+    ONE running fp32 partial per leaf plus one chunk-sized byte buffer, so
+    server memory is O(chunk + model), independent of the client count C;
+  - per-client scales fold into the kernel's coefficient vector
+    (coeff = |D_k| · w_q); leaves with per-leading-dim scales (stacked scan
+    layers, conv kernels) aggregate per SCALE SEGMENT — each segment is a
+    contiguous byte range of the wire stream, so the split is a zero-copy
+    slice;
+  - client counts vary round to round, so chunks are padded up to a BUCKET
+    (powers of two up to ``chunk_c``; padding rows carry coefficient 0) —
+    the jit trace set is the bucket set × leaf shapes, and a new client
+    count never triggers a retrace (``parallel.fanin.fanin_trace_count``);
+  - non-ternary wire leaves (raw fp32 biases, downcast, top-k — whatever
+    the upstream codec spec shipped) take a streaming dequant fallback with
+    the same O(chunk) footprint.
+
+Equivalence: Σ w_c·(s_c·codes_c) is computed as Σ (w_c·s_c)·codes_c in fp32
+— bit-order differs from the reference's per-client dequant-then-sum, so
+parity is within ~1e-6·C, not bit-exact (``tests/test_aggregate.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.wire import decode_update_leaves, tree_from_records
+from repro.core.compression import decode_wire_leaf
+from repro.core.ternary import TernaryTensor
+from repro.kernels.aggregate import BLOCK_ROWS, LANES, padded_rows
+from repro.parallel.fanin import fanin_weighted_sum
+
+Pytree = Any
+
+
+def bucket_for(c: int, chunk_c: int) -> int:
+    """Pad a partial chunk of c clients up to the trace bucket: the smallest
+    power of two ≥ c, capped at ``chunk_c`` (full chunks hit chunk_c; the
+    cap also holds for non-power-of-two chunk sizes)."""
+    if c >= chunk_c:
+        return chunk_c
+    b = 1
+    while b < c:
+        b <<= 1
+    return min(b, chunk_c)
+
+
+@dataclasses.dataclass
+class _Group:
+    """Pending rows of one (leaf, scale-segment) stacked kernel input."""
+
+    nbytes: int                  # real packed bytes per client segment
+    n_elements: int              # logical elements per segment
+    rows: int                    # padded byte-rows R (multiple of BLOCK_ROWS)
+    views: list = dataclasses.field(default_factory=list)   # np byte views
+    coeffs: list = dataclasses.field(default_factory=list)  # weight · scale
+    partial: Any = None          # running fp32 flat sum (jax array)
+
+
+@dataclasses.dataclass
+class _LeafPlan:
+    """How one record path aggregates: fused kernel groups or dense fallback."""
+
+    fused: bool
+    shape: tuple = ()
+    dtype: str = "float32"
+    n_segments: int = 1
+    scale_size: int = 1
+
+
+class Aggregator:
+    """Streaming |D_k|-weighted mean of wire-encoded client updates.
+
+    Usage::
+
+        agg = Aggregator(chunk_c=16)
+        for blob, n_samples in arrivals:
+            agg.add(blob, weight=n_samples)
+        global_params = agg.finalize()
+
+    One instance aggregates ONE round/buffer; construct a fresh one per
+    aggregation (buffers are reused across chunks within the instance).
+    """
+
+    def __init__(self, chunk_c: int = 16, *, mesh=None,
+                 block_rows: int = BLOCK_ROWS, interpret: bool | None = None):
+        if chunk_c < 1:
+            raise ValueError(f"chunk_c must be ≥ 1, got {chunk_c}")
+        self.chunk_c = chunk_c
+        self.mesh = mesh
+        self.block_rows = block_rows
+        self.interpret = interpret
+        self._paths: list[str] | None = None   # record order of client 0
+        self._plans: dict[str, _LeafPlan] = {}
+        self._groups: dict[tuple[str, int], _Group] = {}
+        self._fallback: dict[str, np.ndarray] = {}
+        self._fallback_dtype: dict[str, Any] = {}
+        self._buffers: dict[tuple[int, int], np.ndarray] = {}  # reusable
+        self._pending = 0
+        self._n_clients = 0
+        self._total_weight = 0.0
+        self.peak_intermediate_bytes = 0
+
+    # -- ingest ------------------------------------------------------------
+
+    def add(self, blob: bytes, weight: float) -> None:
+        """Decode one client's wire buffer (zero-copy) and buffer/accumulate
+        it; a full chunk triggers one fused kernel launch per leaf group."""
+        if weight < 0:
+            raise ValueError(f"client weight must be ≥ 0, got {weight}")
+        # weight 0 (an empty data shard) is tolerated exactly like the
+        # reference: the client rides along contributing nothing.
+        pairs = decode_update_leaves(blob, zero_copy=True)
+        paths = [p for p, _ in pairs]
+        if len(set(paths)) != len(paths):
+            # decode_update would last-wins this; an accumulator would
+            # double-count it — refuse loudly (it is a malformed update).
+            from repro.comm.wire import WireError
+
+            raise WireError("duplicate record paths in client update")
+        if self._paths is None:
+            self._paths = paths
+            for path, leaf in pairs:
+                self._plan_leaf(path, leaf)
+        elif paths != self._paths:
+            raise ValueError(
+                "client update structure changed mid-aggregation: "
+                f"{len(paths)} records vs {len(self._paths)}"
+            )
+        for path, leaf in pairs:
+            self._add_leaf(path, leaf, float(weight))
+        self._total_weight += float(weight)
+        self._n_clients += 1
+        self._pending += 1
+        if self._pending >= self.chunk_c:
+            self._flush()
+
+    def _plan_leaf(self, path: str, leaf) -> None:
+        if isinstance(leaf, TernaryTensor):
+            shape = tuple(int(s) for s in leaf.shape)
+            n = leaf.n_elements
+            scale = np.asarray(leaf.w_q)
+            trailing_ok = scale.ndim <= 1 or all(s == 1 for s in scale.shape[1:])
+            if scale.size == 1:
+                segs = 1
+            elif (trailing_ok and shape and scale.size == shape[0]
+                  and n % scale.size == 0 and (n // scale.size) % 4 == 0):
+                segs = scale.size   # per-leading-dim scales, byte-aligned
+            else:
+                segs = 0            # odd scale layout → dense fallback
+            if segs:
+                self._plans[path] = _LeafPlan(
+                    fused=True, shape=shape, dtype=leaf.dtype,
+                    n_segments=segs, scale_size=scale.size,
+                )
+                seg_elems = n // segs
+                seg_bytes = (seg_elems + 3) // 4 if segs == 1 else seg_elems // 4
+                rows = padded_rows(seg_bytes, self.block_rows)
+                for s in range(segs):
+                    self._groups[(path, s)] = _Group(
+                        nbytes=seg_bytes, n_elements=seg_elems, rows=rows
+                    )
+                return
+        self._plans[path] = _LeafPlan(fused=False)
+
+    def _add_leaf(self, path: str, leaf, weight: float) -> None:
+        plan = self._plans[path]
+        if plan.fused:
+            t: TernaryTensor = leaf
+            if tuple(int(s) for s in t.shape) != plan.shape:
+                raise ValueError(f"leaf {path!r} changed shape mid-aggregation")
+            packed = np.asarray(t.packed).reshape(-1)
+            scale = np.asarray(t.w_q, np.float64).reshape(-1)
+            if scale.size != plan.scale_size:
+                raise ValueError(f"leaf {path!r} changed scale layout")
+            for s in range(plan.n_segments):
+                g = self._groups[(path, s)]
+                g.views.append(packed[s * g.nbytes:(s + 1) * g.nbytes])
+                g.coeffs.append(weight * float(scale[s if scale.size > 1 else 0]))
+        else:
+            dense = np.asarray(decode_wire_leaf(leaf))
+            if path not in self._fallback:
+                self._fallback[path] = np.zeros(dense.shape, np.float32)
+                # reference promotion: float leaves keep their dtype under a
+                # python-float weight, int leaves promote to float32.
+                self._fallback_dtype[path] = (
+                    dense.dtype if jnp.issubdtype(dense.dtype, jnp.floating)
+                    else np.dtype(np.float32)
+                )
+            self._fallback[path] += weight * dense.astype(np.float32)
+
+    # -- kernel launches ---------------------------------------------------
+
+    def _buffer(self, c_pad: int, rows: int) -> np.ndarray:
+        buf = self._buffers.get((c_pad, rows))
+        if buf is None:
+            buf = np.empty((c_pad, rows * LANES), np.uint8)
+            self._buffers[(c_pad, rows)] = buf
+            live = sum(b.nbytes for b in self._buffers.values())
+            self.peak_intermediate_bytes = max(self.peak_intermediate_bytes, live)
+        return buf
+
+    def _flush(self) -> None:
+        for g in self._groups.values():
+            self._flush_group(g)
+        self._pending = 0
+
+    def _flush_group(self, g: _Group) -> None:
+        c = len(g.views)
+        if c == 0:
+            return
+        c_pad = bucket_for(c, self.chunk_c)
+        buf = self._buffer(c_pad, g.rows)
+        for i, v in enumerate(g.views):
+            buf[i, :g.nbytes] = v
+            buf[i, g.nbytes:] = 0
+        buf[c:] = 0
+        coeffs = np.zeros((c_pad,), np.float32)
+        coeffs[:c] = g.coeffs
+        out = fanin_weighted_sum(
+            buf.reshape(c_pad, g.rows, LANES), coeffs,
+            mesh=self.mesh, block_rows=self.block_rows,
+            interpret=self.interpret,
+        )
+        # the device_put of the staging buffer may be ZERO-COPY (CPU backend
+        # aliases aligned numpy memory) and the launch is async — block
+        # before the buffer is refilled for the next group/chunk, or the
+        # in-flight kernel would read torn bytes.
+        out.block_until_ready()
+        g.partial = out if g.partial is None else g.partial + out
+        g.views.clear()
+        g.coeffs.clear()
+
+    # -- result ------------------------------------------------------------
+
+    def finalize(self) -> Pytree:
+        """Flush pending rows and return the weighted-mean pytree
+        (Algorithm 2's Σ |D_k|/Σ|D_k| · dequant(payload_k))."""
+        if self._n_clients == 0:
+            raise ValueError("Aggregator.finalize: no client updates were added")
+        if self._total_weight <= 0:
+            raise ValueError("Aggregator.finalize: total client weight is zero")
+        self._flush()
+        inv = 1.0 / self._total_weight
+        pairs = []
+        for path in self._paths:
+            plan = self._plans[path]
+            if plan.fused:
+                parts = [
+                    self._groups[(path, s)].partial
+                    [: self._groups[(path, s)].n_elements]
+                    for s in range(plan.n_segments)
+                ]
+                flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+                leaf = (flat * inv).reshape(plan.shape).astype(plan.dtype)
+            else:
+                acc = self._fallback[path] * np.float32(inv)
+                leaf = jnp.asarray(acc).astype(self._fallback_dtype[path])
+            pairs.append((path, leaf))
+        return tree_from_records(pairs)

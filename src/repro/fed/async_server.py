@@ -25,8 +25,11 @@ simulated seconds as well as bytes. Compression is per-direction
 (``FedConfig.compression``): dispatch serializes through the DOWNSTREAM
 codec spec and arrivals through the UPSTREAM one (via the shared
 ``broadcast_blob`` / ``train_client`` helpers), and ``_weighted_mix``
-decodes any registered wire leaf — ternary, downcast, or top-k — through
-the codec registry, so asymmetric up/down codecs meter correctly here too.
+streams the buffered wire blobs through ``fed.aggregator.Aggregator`` —
+the fused packed fan-in kernel for ternary records, codec-registry dequant
+for everything else — so asymmetric up/down codecs meter correctly here
+too and the buffer is never expanded to per-client dense trees
+(``cfg.fused_aggregation=False`` restores the reference dequant loop).
 """
 
 from __future__ import annotations
@@ -40,6 +43,7 @@ import numpy as np
 from repro.comm import Channel
 from repro.comm.wire import decode_update
 from repro.data.federated import ClientDataset
+from repro.fed.aggregator import Aggregator
 from repro.fed.simulation import (
     FedConfig,
     FedResult,
@@ -55,19 +59,35 @@ from repro.optim import Optimizer
 Pytree = Any
 
 
-def _weighted_mix(global_params, buffered, eta):
-    """θ ← (1-η)·θ + η·Σ ŵ_i·dequant(payload_i) over the buffer."""
-    raw = np.array([w for w, _ in buffered], dtype=np.float64)
-    wts = raw / raw.sum()
-    models = [dequantize_tree(p) for _, p in buffered]
+def _weighted_mix(global_params, buffered, eta, cfg: FedConfig | None = None):
+    """θ ← (1-η)·θ + η·Σ ŵ_i·dequant(blob_i) over the buffered arrivals.
 
-    def mix(g, *leaves):
-        acc = leaves[0] * wts[0]
-        for w, l in zip(wts[1:], leaves[1:]):
-            acc = acc + w * l
-        return (1.0 - eta) * g + eta * acc
+    ``buffered`` holds (staleness-discounted weight, wire blob) pairs; the
+    weighted mean streams through the fused aggregator (Σ ŵ normalizes
+    inside ``finalize``), then mixes into the global with rate η.
+    """
+    if cfg is None or cfg.fused_aggregation:
+        chunk = cfg.agg_chunk_c if cfg is not None else 16
+        agg = Aggregator(chunk_c=chunk)
+        for w, blob in buffered:
+            agg.add(blob, weight=w)
+        mean = agg.finalize()
+    else:
+        raw = np.array([w for w, _ in buffered], dtype=np.float64)
+        wts = raw / raw.sum()
+        models = [dequantize_tree(decode_update(b)) for _, b in buffered]
 
-    return jax.tree_util.tree_map(mix, global_params, *models)
+        def wsum(*leaves):
+            acc = leaves[0] * wts[0]
+            for w, l in zip(wts[1:], leaves[1:]):
+                acc = acc + w * l
+            return acc
+
+        mean = jax.tree_util.tree_map(wsum, *models)
+
+    return jax.tree_util.tree_map(
+        lambda g, m: (1.0 - eta) * g + eta * m, global_params, mean
+    )
 
 
 def run_federated_async(
@@ -96,7 +116,7 @@ def run_federated_async(
     down_bytes = 0
     seq = 0                       # tie-breaker for the heap
     events: list = []             # (arrival_time, seq, client_id, blob, version)
-    buffered: list = []           # (weight, payload) awaiting aggregation
+    buffered: list = []           # (weight, wire blob) awaiting aggregation
     acc_hist, loss_hist = [], []
     agg_times, staleness_hist, parts_hist = [], [], []
     last_agg_t = 0.0
@@ -138,11 +158,13 @@ def run_federated_async(
         up_bytes += len(up_blob)
         staleness = version - born
         weight = len(clients[k]) * (1.0 + staleness) ** (-cfg.staleness_exponent)
-        buffered.append((weight, decode_update(up_blob)))
+        buffered.append((weight, up_blob))   # wire blob: decoded in the mix
         staleness_hist.append(staleness)
 
         if len(buffered) >= buffer_k:
-            global_params = _weighted_mix(global_params, buffered, cfg.mixing_rate)
+            global_params = _weighted_mix(
+                global_params, buffered, cfg.mixing_rate, cfg
+            )
             buffered = []
             version += 1
             parts_hist.append(buffer_k)

@@ -48,6 +48,7 @@ from repro.core.tfedavg import (
     server_requantize,
 )
 from repro.data.federated import ClientDataset
+from repro.fed.aggregator import Aggregator
 from repro.optim import Optimizer
 
 Pytree = Any
@@ -69,6 +70,12 @@ class FedConfig:
     # e.g. fp16 residuals upstream only — change the measured byte split.
     compression: CompressionSpec | None = None
     seed: int = 0
+    # --- server aggregation ----------------------------------------------
+    # True → stream survivor blobs through fed.aggregator.Aggregator (fused
+    # packed fan-in kernel, O(chunk) server memory); False → the list-based
+    # reference loop (core.tfedavg.server_aggregate).
+    fused_aggregation: bool = True
+    agg_chunk_c: int = 16               # clients per fused kernel launch
     # --- async (buffered) server knobs -----------------------------------
     buffer_k: int = 4                   # aggregate every K arrivals
     max_concurrency: int = 0            # in-flight clients (0 → ⌈λN⌉)
@@ -310,15 +317,25 @@ def run_federated_sync(
         )
 
         # ---- aggregation (server decodes the real upstream buffers) -----
-        updates = []
-        for total, k, up_blob in survivors:
-            up_bytes += len(up_blob)
-            updates.append(TernaryUpdate(
-                payload=decode_update(up_blob),
-                n_samples=len(clients[k]),
-                client_id=k,
-            ))
-        global_params = server_aggregate(updates)
+        if cfg.fused_aggregation:
+            # streaming fused fan-in: zero-copy record decode into stacked
+            # packed buffers, one Pallas launch per chunk_c clients — the
+            # per-client dense trees of the reference loop never exist.
+            agg = Aggregator(chunk_c=cfg.agg_chunk_c)
+            for total, k, up_blob in survivors:
+                up_bytes += len(up_blob)
+                agg.add(up_blob, weight=len(clients[k]))
+            global_params = agg.finalize()
+        else:
+            updates = []
+            for total, k, up_blob in survivors:
+                up_bytes += len(up_blob)
+                updates.append(TernaryUpdate(
+                    payload=decode_update(up_blob),
+                    n_samples=len(clients[k]),
+                    client_id=k,
+                ))
+            global_params = server_aggregate(updates)
 
         if (r + 1) % eval_every == 0 or r == cfg.rounds - 1:
             acc, ls = eval_fn(global_params)

@@ -7,10 +7,13 @@
   repack           — wire flat-packed bytes → (K//4, N) kernel layout
                      (PackedTernary weight leaves for the zero-copy serve
                      path; host-side uint8 plane arithmetic)
+  aggregate        — fused packed fan-in: Σ coeff_c·unpack(codes_c) over a
+                     stacked (C, R, 128) wire-byte tensor in one pass (the
+                     T-FedAvg server aggregation hot spot)
 
 ``ops`` holds the jit'd dispatching wrappers; ``ref`` the pure-jnp oracles.
 """
 
-from repro.kernels import ops, ref, repack
+from repro.kernels import aggregate, ops, ref, repack
 
-__all__ = ["ops", "ref", "repack"]
+__all__ = ["aggregate", "ops", "ref", "repack"]

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused packed fan-in aggregation (T-FedAvg Algorithm 2).
+
+The server's aggregation step is Σ_c coeff_c · dequant(codes_c) over C client
+updates. The naive path unpacks every client to a dense fp32 tree first —
+O(C·P) fp32 HBM traffic and one giant Python loop. This kernel instead
+consumes the WIRE bytes directly: a stacked ``(C, R, LANES)`` uint8 tensor of
+flat-packed 2-bit codes (4 codes/byte, ``core.ternary.pack2bit`` order) plus
+a per-client fp32 coefficient vector, and emits the weighted dense sum in one
+pass. Per-client fp32 trees are never materialized; the only dense array is
+the single fp32 accumulator tile in VMEM.
+
+Layout contract (matches the wire codec, NOT the matmul kernel):
+  - wire byte m of a leaf holds flat elements 4m+j (j = 0..3, 2 bits each,
+    little-endian within the byte; code = value + 1).
+  - the caller reshapes each client's padded byte stream to (R, LANES) rows,
+    so byte m sits at [m // LANES, m % LANES].
+  - the kernel unpacks in-register with the ``pack2bit`` shift/and idiom and
+    accumulates coeff_c · (code − 1); output rows interleave the 4 bit-planes
+    (out[4r+j, l] = element 4·(r·LANES+l)+j), and the jit'd wrapper undoes
+    the interleave with one dense transpose, returning the flat weighted sum
+    in logical element order.
+
+Scales fold into the coefficients: dequant is w_q·codes, so
+coeff_c = weight_c · w_q_c and the kernel never sees a scale tensor (leaves
+with per-layer scales are aggregated per scale segment by the caller —
+segments are contiguous byte ranges of the wire stream). Zero-padded rows /
+clients are cancelled by coeff 0 or sliced off the flat tail by the caller.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+LANES = 128
+BLOCK_ROWS = 32  # byte-rows per grid step: 32×128 B packed → 128×128 f32 out
+
+
+def padded_rows(nbytes: int, block_rows: int = BLOCK_ROWS) -> int:
+    """Byte-rows of the stacked buffer for a leaf of ``nbytes`` packed bytes:
+    ⌈nbytes / LANES⌉ rounded up to a multiple of ``block_rows``."""
+    rows = pl.cdiv(max(nbytes, 1), LANES)
+    return int(pl.cdiv(rows, block_rows) * block_rows)
+
+
+def _fanin_kernel(s_ref, p_ref, o_ref, *, n_c: int):
+    """One (block_rows, LANES) byte tile: loop the C axis in-register.
+
+    The C loop is a ``fori_loop`` (not a grid axis) so the trace stays one
+    step long regardless of C and the fp32 accumulator never leaves
+    registers/VMEM between clients.
+    """
+
+    def body(c, acc):
+        p = p_ref[pl.ds(c, 1)][0].astype(jnp.int32)      # (br, LANES) bytes
+        w = s_ref[c]
+        cols = [(((p >> (2 * j)) & 0x3) - 1).astype(jnp.float32) for j in range(4)]
+        u = jnp.stack(cols, axis=1).reshape(acc.shape)   # (4·br, LANES)
+        return acc + w * u
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, n_c, body, jnp.zeros(o_ref.shape, jnp.float32)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def packed_weighted_sum(
+    stacked: jax.Array,
+    coeffs: jax.Array,
+    *,
+    block_rows: int = BLOCK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Σ_c coeffs[c] · unpack(stacked[c]) without per-client dense trees.
+
+    stacked: (C, R, LANES) uint8, R % block_rows == 0 — each row-major byte
+      stream is a client's flat-packed 2-bit codes (zero-pad the tail).
+    coeffs:  (C,) float32 — weight_c · scale_c (0 for padding clients).
+    Returns the flat fp32 weighted sum of length 4·R·LANES in logical element
+    order; the caller slices [:n_elements].
+    """
+    c, r, lanes = stacked.shape
+    assert lanes == LANES, f"lane dim must be {LANES}, got {lanes}"
+    br = min(block_rows, r)
+    assert r % br == 0, f"rows {r} not a multiple of block_rows {br}"
+    out = pl.pallas_call(
+        functools.partial(_fanin_kernel, n_c=c),
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((c, br, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((4 * br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((4 * r, LANES), jnp.float32),
+        interpret=interpret,
+    )(coeffs.astype(jnp.float32), stacked)
+    # undo the bit-plane interleave: out[4r+j, l] → flat 4·(r·LANES+l)+j.
+    return out.reshape(r, 4, LANES).transpose(0, 2, 1).reshape(-1)
+
+
+def packed_weighted_sum_ref(stacked, coeffs) -> np.ndarray:
+    """Pure-numpy oracle with identical flat-order semantics."""
+    stacked = np.asarray(stacked)
+    c = stacked.shape[0]
+    flat = stacked.reshape(c, -1)
+    shifts = np.arange(4, dtype=np.uint8) * 2
+    vals = ((flat[:, :, None] >> shifts) & 0x3).astype(np.float32) - 1.0
+    return np.tensordot(
+        np.asarray(coeffs, np.float32), vals.reshape(c, -1), axes=1
+    )

@@ -1,6 +1,7 @@
-"""Distribution layer: parameter/activation sharding rules (DP+FSDP+TP+EP+SP)
-and ternary-compressed collectives (the paper's protocol mapped onto the
-cross-pod axis)."""
+"""Distribution layer: parameter/activation sharding rules (DP+FSDP+TP+EP+SP),
+ternary-compressed collectives (the paper's protocol mapped onto the
+cross-pod axis), and the client-sharded packed fan-in for server-side
+aggregation at scale."""
 
 from repro.parallel.sharding import (
     param_shardings,
@@ -14,9 +15,14 @@ from repro.parallel.collectives import (
     ternary_allreduce_tree,
     compressed_bytes_per_element,
 )
+from repro.parallel.fanin import (
+    fanin_weighted_sum,
+    fanin_trace_count,
+)
 
 __all__ = [
     "param_shardings", "param_specs", "batch_specs", "cache_specs",
     "logical_batch_axes",
     "ternary_allreduce", "ternary_allreduce_tree", "compressed_bytes_per_element",
+    "fanin_weighted_sum", "fanin_trace_count",
 ]

@@ -1,0 +1,92 @@
+"""Multi-device fan-in: shard the CLIENT axis of the fused packed aggregator.
+
+The streaming ``fed.aggregator`` batches up to ``chunk_c`` packed client
+updates into one ``(C, R, LANES)`` uint8 tensor per kernel launch. At
+million-client fan-in one device's HBM bandwidth becomes the ceiling, so
+this module splits the C axis across a mesh with ``shard_map``: every
+device runs ``kernels.aggregate.packed_weighted_sum`` over its client
+shard (coefficients travel with their rows) and a single fp32 ``psum``
+over the dense partials merges the shards — wire bytes never cross
+devices un-aggregated, only one dense tree per device does (the ROADMAP's
+"shard aggregation across devices for million-client fan-in").
+
+``fanin_weighted_sum`` is the single entry point: mesh-less (or a C that
+does not divide the axis) degrades to one kernel launch on the default
+device; every (shape, mesh) signature is compiled exactly once through an
+``lru_cache`` of jitted closures, so the trace count is inspectable
+(``fanin_trace_count``) and bounded by the aggregator's bucket set.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels.aggregate import BLOCK_ROWS, packed_weighted_sum
+
+try:  # jax ≥ 0.5 exports it at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _fanin_axis(mesh: Mesh) -> str:
+    """The mesh axis the client dimension shards over ("data" when present
+    — clients are the data-parallel resource — else the first axis)."""
+    return "data" if "data" in mesh.axis_names else mesh.axis_names[0]
+
+
+@functools.lru_cache(maxsize=None)
+def _build(c: int, rows: int, block_rows: int, interpret: bool,
+           mesh: Mesh | None, axis: str | None):
+    if mesh is not None:
+        n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    if mesh is None or n_shards == 1 or c % n_shards:
+        @jax.jit
+        def run(stacked, coeffs):
+            return packed_weighted_sum(
+                stacked, coeffs, block_rows=block_rows, interpret=interpret
+            )
+        return run
+
+    def shard(stacked, coeffs):
+        part = packed_weighted_sum(
+            stacked, coeffs, block_rows=block_rows, interpret=interpret
+        )
+        return jax.lax.psum(part, axis)
+
+    # check_rep=False: pallas_call has no replication rule; the psum above
+    # establishes the replicated output explicitly.
+    return jax.jit(_shard_map(
+        shard, mesh=mesh, in_specs=(P(axis), P(axis)), out_specs=P(),
+        check_rep=False,
+    ))
+
+
+def fanin_weighted_sum(
+    stacked,
+    coeffs,
+    *,
+    mesh: Mesh | None = None,
+    block_rows: int = BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Σ_c coeffs[c]·unpack(stacked[c]), C-sharded over ``mesh`` when given.
+
+    stacked: (C, R, LANES) uint8 flat-packed 2-bit codes; coeffs: (C,) f32.
+    Returns the flat fp32 weighted sum (length 4·R·LANES), replicated.
+    """
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    c, rows, _ = stacked.shape
+    axis = _fanin_axis(mesh) if mesh is not None else None
+    fn = _build(c, rows, block_rows, interp, mesh, axis)
+    return fn(jnp.asarray(stacked), jnp.asarray(coeffs, jnp.float32))
+
+
+def fanin_trace_count() -> int:
+    """Number of distinct compiled fan-in signatures this process has built
+    — the aggregator's bucketing keeps this bounded by the bucket set."""
+    return _build.cache_info().currsize

@@ -57,20 +57,21 @@ def test_v2_only_record_kinds_rejected_in_v1_buffer():
     )
     blob = encode_update(tree)
     magic, ver, fl, n, crc, bl = _HEADER.unpack_from(blob)
-    assert ver == WIRE_VERSION == 2
+    assert ver == 2  # downcast still stamps its v2 minimum
     v1 = _HEADER.pack(magic, 1, fl, n, crc, bl) + blob[_HEADER.size:]
     with pytest.raises(WireError, match="requires wire v2"):
         decode_update(v1)
 
 
 def test_supported_versions_contract():
-    assert SUPPORTED_VERSIONS == (1, 2)
-    assert WIRE_VERSION == 2
+    assert SUPPORTED_VERSIONS == (1, 2, 3)
+    assert WIRE_VERSION == 3
 
 
 def test_minimal_version_stamping():
     """RAW/TERNARY-only traffic stays v1 (old readers keep decoding it);
-    the header bumps to v2 only when a v2-only record appears."""
+    the header bumps only as far as the newest record present requires
+    (downcast → v2, delta-top-k → v3)."""
     raw_only = encode_update({"w": jnp.ones((4, 4))})
     assert _HEADER.unpack_from(raw_only)[1] == 1
     tern = encode_update({"w": encode_ternary(
@@ -79,6 +80,120 @@ def test_minimal_version_stamping():
     half, _ = compress_pytree({"b": jnp.arange(6.0)},
                               CodecSpec(kind="none", residual="fp16"))
     assert _HEADER.unpack_from(encode_update(half))[1] == 2
+    sparse, _ = compress_pytree({"b": jnp.arange(24.0)},
+                                CodecSpec(kind="none", residual="topk"))
+    assert _HEADER.unpack_from(encode_update(sparse))[1] == 3
+
+
+# --------------------------------------------------------------------------
+# TOPK_DELTA (v3): varint-delta indices.
+# --------------------------------------------------------------------------
+
+
+def _topk_leaf(indices, n, seed=3):
+    from repro.core.compression import TopKTensor
+
+    rng = np.random.default_rng(seed)
+    idx = np.asarray(indices, np.uint32)
+    return TopKTensor(
+        indices=jnp.asarray(idx),
+        values=jnp.asarray(rng.normal(size=idx.shape).astype(np.float32)),
+        shape=(n,), dtype="float32",
+    )
+
+
+def test_topk_delta_roundtrip():
+    """Sorted u32 indices → varint gaps → bit-exact decode, including index
+    0, dense runs (gap 1), and gaps needing multi-byte varints."""
+    idx = [0, 1, 2, 130, 16512, 2097300]
+    t = _topk_leaf(idx, 1 << 22)
+    blob = encode_update({"x": t})
+    assert _HEADER.unpack_from(blob)[1] == 3
+    back = decode_update(blob)["x"]
+    np.testing.assert_array_equal(np.asarray(back.indices), np.asarray(t.indices))
+    np.testing.assert_array_equal(np.asarray(back.values), np.asarray(t.values))
+    assert back.shape == t.shape and back.dtype == t.dtype
+
+
+def test_topk_delta_smaller_than_raw_u32():
+    """At 10% density the gaps are small → ≪ 4 B/index on the wire."""
+    rng = np.random.default_rng(7)
+    n = 10_000
+    idx = np.sort(rng.choice(n, size=n // 10, replace=False)).astype(np.uint32)
+    t = _topk_leaf(idx, n)
+    blob = encode_update({"x": t})
+    raw_index_bytes = 4 * idx.size
+    non_value_bytes = len(blob) - 4 * idx.size   # framing + varint stream
+    assert non_value_bytes < raw_index_bytes // 2
+
+
+def test_topk_delta_fuzz_roundtrip():
+    """Random sorted index sets of every density round-trip bit-exactly."""
+    rng = np.random.default_rng(11)
+    for n, k in ((1, 1), (5, 3), (257, 17), (4096, 1000), (4096, 4096)):
+        idx = np.sort(rng.choice(n, size=k, replace=False)).astype(np.uint32)
+        t = _topk_leaf(idx, n, seed=int(k))
+        back = decode_update(encode_update({"x": t}))["x"]
+        np.testing.assert_array_equal(np.asarray(back.indices), idx)
+
+
+def test_topk_delta_rejects_bad_indices_at_encode():
+    """Non-ascending or duplicate indices violate the TopKTensor contract —
+    the encoder fails fast instead of emitting an undecodable stream."""
+    for bad in ([5, 2], [2, 2]):
+        with pytest.raises(WireError, match="strictly ascending"):
+            encode_update({"x": _topk_leaf(bad, 8)})
+
+
+def _crc_fixed(blob, body):
+    import struct
+    import zlib
+
+    magic, ver, fl, n, _, bl = _HEADER.unpack_from(blob)
+    return _HEADER.pack(magic, ver, fl, n, zlib.crc32(bytes(body)), len(body)) \
+        + bytes(body)
+
+
+def test_topk_delta_malformed_streams_are_wireerror():
+    """CRC-valid but semantically broken delta streams must still refuse:
+    a zero gap (duplicate index) and an out-of-range index."""
+    t = _topk_leaf([2, 5], 8)
+    blob = encode_update({"x": t})
+    body = bytearray(blob[_HEADER.size:])
+    # locate the 2-byte varint stream (values 2, gap 3) right after the
+    # k u32 + stream_len u64 fields; the stream is the bytes b"\x02\x03".
+    pos = bytes(body).find(b"\x02\x03")
+    assert pos > 0
+    dup = bytearray(body)
+    dup[pos + 1] = 0x00          # gap 0 → duplicate index
+    with pytest.raises(WireError, match="ascending"):
+        decode_update(_crc_fixed(blob, dup))
+    oob = bytearray(body)
+    oob[pos + 1] = 0x7F          # gap 127 → index 129 ≥ n=8
+    with pytest.raises(WireError, match="out of range"):
+        decode_update(_crc_fixed(blob, oob))
+
+
+def test_legacy_topk_v2_buffer_still_decodes():
+    """A v2 buffer framed with the raw-u32 TOPK record (kind 3) must keep
+    decoding even though encoders now emit TOPK_DELTA."""
+    import struct
+
+    from repro.comm.wire import _PATH_SEP, _topk_body
+
+    t = _topk_leaf([1, 4, 6], 9)
+    path = "d:x".encode("utf-8")
+    record = b"".join([
+        struct.pack("<H", len(path)), path, struct.pack("<B", 3),
+        _topk_body(t),
+    ])
+    import zlib
+
+    blob = _HEADER.pack(b"TFW1", 2, 0, 1, zlib.crc32(record), len(record)) \
+        + record
+    back = decode_update(blob)["x"]
+    np.testing.assert_array_equal(np.asarray(back.indices), np.asarray(t.indices))
+    np.testing.assert_array_equal(np.asarray(back.values), np.asarray(t.values))
 
 
 # --------------------------------------------------------------------------
