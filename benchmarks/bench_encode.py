@@ -1,0 +1,187 @@
+"""Fused upstream encode vs the per-leaf jnp reference chain.
+
+Both paths build the SAME wire payloads (byte-identical — asserted before
+any timing is reported):
+
+  ref   — the pinned per-leaf jnp pipeline: scale → threshold → ternarize →
+          pack per tensor (``client_update_payload(fused=False)`` /
+          ``server_requantize(fused=False)``)
+  fused — the one-pass quantize→pack kernel driven tree-wide by
+          ``core.encode``: lane-aligned staging, one launch per dtype (+ a
+          vmapped launch per stacked leaf), w_q moments from the same pass
+
+Rows (name, us_per_call, derived):
+  enc_ref_<m> / enc_fused_<m>     client-payload encode; derived = encode
+                                  throughput, Mparam/s
+  enc_speedup_<m>                 derived = ref_time / fused_time
+  req_ref_<m> / req_fused_<m>     server re-quantize (downstream broadcast)
+  req_speedup_<m>                 derived = ref_time / fused_time
+  ser_join_<m> / ser_stream_<m>   encode_update on the ternary broadcast
+                                  tree: legacy join-based builder vs the
+                                  preallocated streaming writer; derived =
+                                  MB/s
+  ser_stream_ratio_<m>            derived = join_time / stream_time
+  ser_fp32_ratio_<m>              same ratio on the RAW fp32 payload (the
+                                  FedAvg direction, where the saved
+                                  whole-buffer copy is ~16× larger)
+
+Timing uses the trajectory-comparable harness (warmup + per-iteration
+``jax.block_until_ready``). ``BENCH_encode.json`` (repo root) captures the
+numbers for the CI perf trajectory next to ``BENCH_aggregate.json``.
+Pallas runs interpret-mode off-TPU; the structural wins (one HBM read per
+leaf, one byte-sized write, one serialization allocation) transfer.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+
+import jax
+
+from repro.core import FTTQConfig
+from repro.core import fttq as F
+from repro.core.tfedavg import client_update_payload, server_requantize
+from repro.comm.wire import (
+    _HEADER,
+    _PATH_SEP,
+    _leaf_types,
+    _path_entries,
+    _record_for_leaf,
+    encode_update,
+)
+from repro.models.paper_models import init_resnet_cifar
+
+FTTQ = FTTQConfig()
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_encode.json",
+)
+
+
+def _models():
+    out = [("resnet", init_resnet_cifar(jax.random.PRNGKey(0)))]
+    try:
+        from repro.configs import get_reduced
+        from repro.models.transformer import init_params
+
+        cfg = get_reduced("olmo-1b")
+        out.append(("olmo_reduced", init_params(cfg, jax.random.PRNGKey(1))))
+    except Exception:
+        pass  # transformer stack unavailable: bench the paper model only
+    return out
+
+
+def _timed(fn, repeats, warmup):
+    """Seconds per call via the shared harness (``benchmarks.common.timed``:
+    warmup + block_until_ready inside the timed region, SMOKE-aware) — one
+    timing contract for the whole bench suite."""
+    from benchmarks.common import timed
+
+    return timed(fn, repeats=repeats, warmup=warmup) / 1e6
+
+
+def _join_encode_update(tree) -> bytes:
+    """The pre-streaming encoder: per-record bytes + one big join — kept
+    here as the serialization baseline the micro-bench compares against."""
+    lt = _leaf_types()
+    leaves = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, lt)
+    )[0]
+    records, version = [], 1
+    for path, leaf in leaves:
+        p = _PATH_SEP.join(_path_entries(path)).encode("utf-8")
+        rec = _record_for_leaf(leaf)
+        version = max(version, rec.min_version)
+        records.append(b"".join([
+            struct.pack("<H", len(p)), p,
+            struct.pack("<B", rec.kind), rec.pack(leaf),
+        ]))
+    body = b"".join(records)
+    return _HEADER.pack(
+        b"TFW1", version, 0, len(records), zlib.crc32(body), len(body)
+    ) + body
+
+
+def fused_encode():
+    from benchmarks.common import SMOKE
+
+    repeats, warmup = 5, 2   # common.timed clamps to (1, 1) in SMOKE mode
+    rows, record = [], {
+        "interpret": jax.default_backend() != "tpu",
+        "smoke": SMOKE,
+        "results": {},
+    }
+    for name, params in _models():
+        n_params = sum(l.size for l in jax.tree_util.tree_leaves(params))
+        wq = F.init_wq_tree(params, FTTQ)
+
+        # parity receipt FIRST: both paths must serialize byte-identically.
+        ref_blob = encode_update(client_update_payload(params, wq, FTTQ,
+                                                       fused=False))
+        fus_blob = encode_update(client_update_payload(params, wq, FTTQ,
+                                                       fused=True))
+        assert ref_blob == fus_blob, f"fused encode diverged on {name}"
+
+        dt_ref = _timed(
+            lambda: client_update_payload(params, wq, FTTQ, fused=False),
+            repeats, warmup,
+        )
+        dt_fus = _timed(
+            lambda: client_update_payload(params, wq, FTTQ, fused=True),
+            repeats, warmup,
+        )
+        dt_rref = _timed(
+            lambda: server_requantize(params, FTTQ, fused=False),
+            repeats, warmup,
+        )
+        dt_rfus = _timed(
+            lambda: server_requantize(params, FTTQ, fused=True),
+            repeats, warmup,
+        )
+
+        wire_tree = server_requantize(params, FTTQ)
+        assert encode_update(wire_tree) == _join_encode_update(wire_tree)
+        blob_len = len(encode_update(wire_tree))
+        dt_join = _timed(lambda: _join_encode_update(wire_tree), repeats, warmup)
+        dt_stream = _timed(lambda: encode_update(wire_tree), repeats, warmup)
+        # the raw fp32 direction (FedAvg payloads): the intermediate copy
+        # the streaming writer removes is full-size here
+        dt_join32 = _timed(lambda: _join_encode_update(params), repeats, warmup)
+        dt_stream32 = _timed(lambda: encode_update(params), repeats, warmup)
+
+        mps = n_params / 1e6
+        rows += [
+            (f"enc_ref_{name}", round(dt_ref * 1e6, 1), round(mps / dt_ref, 2)),
+            (f"enc_fused_{name}", round(dt_fus * 1e6, 1), round(mps / dt_fus, 2)),
+            (f"enc_speedup_{name}", 0.0, round(dt_ref / dt_fus, 2)),
+            (f"req_ref_{name}", round(dt_rref * 1e6, 1), round(mps / dt_rref, 2)),
+            (f"req_fused_{name}", round(dt_rfus * 1e6, 1), round(mps / dt_rfus, 2)),
+            (f"req_speedup_{name}", 0.0, round(dt_rref / dt_rfus, 2)),
+            (f"ser_join_{name}", round(dt_join * 1e6, 1),
+             round(blob_len / dt_join / 1e6, 1)),
+            (f"ser_stream_{name}", round(dt_stream * 1e6, 1),
+             round(blob_len / dt_stream / 1e6, 1)),
+            (f"ser_stream_ratio_{name}", 0.0, round(dt_join / dt_stream, 2)),
+            (f"ser_fp32_ratio_{name}", 0.0, round(dt_join32 / dt_stream32, 2)),
+        ]
+        record["results"][name] = {
+            "n_params": n_params,
+            "payload_ref_s": dt_ref, "payload_fused_s": dt_fus,
+            "payload_speedup": round(dt_ref / dt_fus, 2),
+            "requantize_ref_s": dt_rref, "requantize_fused_s": dt_rfus,
+            "requantize_speedup": round(dt_rref / dt_rfus, 2),
+            "wire_bytes": blob_len,
+            "serialize_join_s": dt_join, "serialize_stream_s": dt_stream,
+            "serialize_stream_ratio": round(dt_join / dt_stream, 2),
+            "serialize_fp32_join_s": dt_join32,
+            "serialize_fp32_stream_s": dt_stream32,
+            "serialize_fp32_stream_ratio": round(dt_join32 / dt_stream32, 2),
+            "byte_identical": True,
+        }
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    return rows

@@ -14,12 +14,15 @@ import sys
 import time
 import traceback
 
-from benchmarks import bench_aggregate, bench_kernels, bench_tables, bench_wire
+from benchmarks import (
+    bench_aggregate, bench_encode, bench_kernels, bench_tables, bench_wire,
+)
 
 SECTIONS = {
     "wire": bench_wire.wire_codec,
     "codecs": bench_wire.codec_table,
     "aggregate": bench_aggregate.fused_aggregation,
+    "encode": bench_encode.fused_encode,
     "table2": bench_tables.table2_iid_accuracy,
     "table3": bench_tables.table3_noniid,
     "table4": bench_tables.table4_comm_costs,

@@ -45,6 +45,15 @@ buffers stay v1 so deployed v1-only readers keep working; downcast bumps to
 v2, delta-top-k to v3), and decoders accept every ``SUPPORTED_VERSIONS``
 buffer — stored v1/v2 checkpoints and captures stay readable forever.
 
+``encode_update`` is STREAMING: a size pre-pass walks the records
+(``WireRecord.prepare`` returns each body's exact size plus a writer), one
+buffer of the final length is allocated, and every record writes its header
+fields and array payloads straight into it (numpy-view memcpy, no
+intermediate per-record ``bytes``) — serializing a ResNet payload is one
+allocation instead of O(records) concatenations. Records registered with
+only the legacy ``pack`` still work: a fallback ``prepare`` materializes
+their body once and copies it in.
+
 The CRC covers the whole record section; ``decode_update`` raises
 ``WireError`` on magic/version/CRC mismatch, truncation, or any malformed
 record — a corrupted or torn transfer never silently yields wrong weights
@@ -97,15 +106,37 @@ def _np(leaf) -> np.ndarray:
     return np.asarray(leaf)
 
 
+# dtype-name prefixes are a tiny closed set but ``np.dtype.name`` is a
+# surprisingly slow computed property — cache the encoded field per dtype
+# (and per name string for the string-keyed callers).
+_DTYPE_FIELD_CACHE: dict = {}
+
+
+def _dtype_field(name: str) -> bytes:
+    field = _DTYPE_FIELD_CACHE.get(name)
+    if field is None:
+        dt = name.encode("ascii")
+        field = struct.pack("<B", len(dt)) + dt
+        _DTYPE_FIELD_CACHE[name] = field
+    return field
+
+
 def _pack_array_meta(arr: np.ndarray) -> bytes:
-    return _pack_meta(arr.dtype.name, arr.shape)
+    field = _DTYPE_FIELD_CACHE.get(arr.dtype)
+    if field is None:
+        field = _dtype_field(arr.dtype.name)
+        _DTYPE_FIELD_CACHE[arr.dtype] = field
+    return field + _pack_shape(arr.shape)
+
+
+def _pack_shape(shape: tuple) -> bytes:
+    if not shape:
+        return b"\x00"
+    return struct.pack(f"<B{len(shape)}I", len(shape), *shape)
 
 
 def _pack_meta(dtype: str, shape: tuple) -> bytes:
-    dt = dtype.encode("ascii")
-    out = [struct.pack("<B", len(dt)), dt, struct.pack("<B", len(shape))]
-    out.append(struct.pack(f"<{len(shape)}I", *shape) if shape else b"")
-    return b"".join(out)
+    return _dtype_field(dtype) + _pack_shape(shape)
 
 
 def _pack_arr(arr: np.ndarray) -> bytes:
@@ -113,6 +144,110 @@ def _pack_arr(arr: np.ndarray) -> bytes:
     return b"".join(
         [_pack_array_meta(arr), struct.pack("<Q", arr.nbytes), arr.tobytes()]
     )
+
+
+# --------------------------------------------------------------------------
+# Streaming record writers (the encode_update fast path).
+# --------------------------------------------------------------------------
+
+
+# One record body, measured: (exact byte size, emitter). The emitter is
+# either the body itself as ``bytes`` (small records — one slice assign in
+# the write loop, no closure) or a writer callable that memcpys large array
+# payloads into the preallocated buffer and returns the new offset. A plain
+# tuple, not a dataclass: encode_update builds one per record and
+# object-construction overhead is measurable at that rate.
+_Prepared = tuple  # (int, bytes | Callable[[memoryview, int], int])
+
+
+def _write_array_bytes(view: memoryview, off: int, arr: np.ndarray) -> int:
+    """memcpy a C-contiguous array's raw little-endian bytes into the
+    buffer — no intermediate ``tobytes`` allocation."""
+    end = off + arr.nbytes
+    if arr.nbytes:
+        view[off:end] = arr.reshape(-1).view(np.uint8).data
+    return end
+
+
+def _contig(leaf) -> np.ndarray:
+    arr = _np(leaf)
+    # NOT np.ascontiguousarray unconditionally: it promotes 0-d to 1-d,
+    # which would corrupt scalar w_q metadata on the wire.
+    return arr if arr.flags["C_CONTIGUOUS"] else np.ascontiguousarray(arr)
+
+
+# payloads at or below this fold into the record's head bytes at prepare
+# time: for the many tiny fields (scalar w_q, biases) one small ``tobytes``
+# beats the ~4-object numpy-view chain per array; large payloads (packed
+# code streams, fp32 weights) keep the zero-copy memcpy into the buffer.
+_INLINE_BYTES = 4096
+
+
+def _head_writer(head: bytes, *arrays: np.ndarray) -> _Prepared:
+    """Record body = fixed head bytes followed by raw array payloads."""
+    while arrays and arrays[0].nbytes <= _INLINE_BYTES:
+        head += arrays[0].tobytes()
+        arrays = arrays[1:]
+    size = len(head) + sum(a.nbytes for a in arrays)
+    if not arrays:
+        return (size, head)   # fully inlined: body IS the bytes
+
+    def write(view: memoryview, off: int) -> int:
+        end = off + len(head)
+        view[off:end] = head
+        for a in arrays:
+            end = _write_array_bytes(view, end, a)
+        return end
+
+    return (size, write)
+
+
+def _raw_prepare(leaf) -> _Prepared:
+    arr = _contig(leaf)
+    head = _pack_array_meta(arr) + struct.pack("<Q", arr.nbytes)
+    return _head_writer(head, arr)
+
+
+def _ternary_prepare(t: TernaryTensor) -> _Prepared:
+    scale = _contig(t.w_q)
+    packed = _contig(t.packed)
+    if packed.dtype != np.uint8:
+        raise WireError(f"TernaryTensor.packed must be uint8, got {packed.dtype}")
+    head = _pack_meta(str(t.dtype), tuple(int(s) for s in t.shape)) \
+        + _pack_array_meta(scale)
+    mid = struct.pack("<Q", packed.size)
+    if scale.nbytes <= _INLINE_BYTES:   # scalar / per-layer scales: tiny
+        return _head_writer(head + scale.tobytes() + mid, packed)
+    size = len(head) + scale.nbytes + len(mid) + packed.size
+
+    def write(view: memoryview, off: int) -> int:
+        end = off + len(head)
+        view[off:end] = head
+        end = _write_array_bytes(view, end, scale)
+        view[end:end + len(mid)] = mid
+        return _write_array_bytes(view, end + len(mid), packed)
+
+    return (size, write)
+
+
+def _downcast_prepare(t: "DowncastTensor") -> _Prepared:
+    arr = _contig(t.data)
+    dt = str(t.orig_dtype).encode("ascii")
+    head = struct.pack("<B", len(dt)) + dt \
+        + _pack_array_meta(arr) + struct.pack("<Q", arr.nbytes)
+    return _head_writer(head, arr)
+
+
+def _topk_delta_prepare(t: "TopKTensor") -> _Prepared:
+    idx = _np(t.indices)
+    if idx.dtype != np.uint32:
+        raise WireError(f"TopKTensor.indices must be uint32, got {idx.dtype}")
+    stream = _varint_pack(idx)
+    values = _contig(t.values)
+    head = _pack_meta(str(t.dtype), tuple(int(s) for s in t.shape)) \
+        + struct.pack("<I", idx.size) + struct.pack("<Q", len(stream)) + stream \
+        + _pack_array_meta(values) + struct.pack("<Q", values.nbytes)
+    return _head_writer(head, values)
 
 
 class _Reader:
@@ -370,6 +505,15 @@ class WireRecord:
     min_version: int = WIRE_VERSION  # oldest wire version that may carry it
     encode: bool = True              # False = legacy: decoded forever, never
                                      # emitted (a newer record supersedes it)
+    # streaming writer: size pre-pass + in-place emit (see module docstring).
+    # None → fallback: the body is built once via ``pack`` and copied in.
+    prepare: Callable[[Any], _Prepared] | None = None
+
+    def prepared(self, leaf) -> _Prepared:
+        if self.prepare is not None:
+            return self.prepare(leaf)
+        body = self.pack(leaf)   # legacy fallback: one build, one copy-in
+        return (len(body), body)
 
 
 _RECORDS: dict[int, WireRecord] = {}
@@ -389,12 +533,13 @@ def register_record(record: WireRecord) -> WireRecord:
 
 
 register_record(WireRecord(KIND_RAW, "RAW", None, _raw_body, _decode_array,
-                           min_version=1))
+                           min_version=1, prepare=_raw_prepare))
 register_record(WireRecord(KIND_TERNARY, "TERNARY", TernaryTensor,
-                           _ternary_body, _decode_ternary_body, min_version=1))
+                           _ternary_body, _decode_ternary_body, min_version=1,
+                           prepare=_ternary_prepare))
 register_record(WireRecord(KIND_DOWNCAST, "DOWNCAST", DowncastTensor,
                            _downcast_body, _decode_downcast_body,
-                           min_version=2))
+                           min_version=2, prepare=_downcast_prepare))
 # raw-u32-index top-k is legacy: stored v2 captures decode forever, but
 # encoders emit the delta-varint record below instead.
 register_record(WireRecord(KIND_TOPK, "TOPK", TopKTensor,
@@ -402,7 +547,7 @@ register_record(WireRecord(KIND_TOPK, "TOPK", TopKTensor,
                            min_version=2, encode=False))
 register_record(WireRecord(KIND_TOPK_DELTA, "TOPK_DELTA", TopKTensor,
                            _topk_delta_body, _decode_topk_delta_body,
-                           min_version=3))
+                           min_version=3, prepare=_topk_delta_prepare))
 
 
 def _leaf_types() -> tuple[type, ...]:
@@ -530,6 +675,11 @@ def _containerize(node):
 def encode_update(tree: Pytree) -> bytes:
     """Serialize an update pytree into one framed, CRC-protected buffer.
 
+    STREAMING: pass 1 prepares every record (exact body size + writer), then
+    ONE buffer of the final length is allocated and each record writes its
+    framing and array payloads straight into it — no per-record ``bytes``
+    concatenation (output is byte-identical to the old join-based builder).
+
     The header is stamped with the LOWEST wire version able to carry the
     payload's record kinds (v1 for RAW/TERNARY-only traffic — byte-identical
     to what a v1 encoder produced, so old decoders stay compatible; v2 once
@@ -538,22 +688,41 @@ def encode_update(tree: Pytree) -> bytes:
     leaves = jax.tree_util.tree_flatten_with_path(
         tree, is_leaf=lambda x: isinstance(x, lt)
     )[0]
-    records = []
     version = min(SUPPORTED_VERSIONS)
     codec_lt = tuple(wire_leaf_types())
+    prepared: list = []  # (record prefix: len+path+kind, body bytes | writer)
+    total = _HEADER.size
     for path, leaf in leaves:
         p = _PATH_SEP.join(_path_entries(path)).encode("utf-8")
         rec = _record_for_leaf(leaf, codec_lt)
         version = max(version, rec.min_version)
-        records.append(b"".join([
-            struct.pack("<H", len(p)), p,
-            struct.pack("<B", rec.kind), rec.pack(leaf),
-        ]))
-    body = b"".join(records)
-    header = _HEADER.pack(
-        WIRE_MAGIC, version, 0, len(records), zlib.crc32(body), len(body)
+        size, emit = rec.prepared(leaf)
+        pfx = struct.pack("<H", len(p)) + p + struct.pack("<B", rec.kind)
+        total += len(pfx) + size
+        prepared.append((pfx, emit))
+    buf = bytearray(total)
+    view = memoryview(buf)
+    off = _HEADER.size
+    for pfx, emit in prepared:
+        end = off + len(pfx)
+        view[off:end] = pfx
+        off = end
+        if type(emit) is bytes:       # small record: body is the bytes
+            end = off + len(emit)
+            view[off:end] = emit
+            off = end
+        else:                         # large record: memcpy writer
+            off = emit(view, off)
+    if off != total:  # pragma: no cover - writer/size contract violation
+        raise WireError(
+            f"record writer emitted {off - _HEADER.size} bytes, "
+            f"sized {total - _HEADER.size}"
+        )
+    _HEADER.pack_into(
+        buf, 0, WIRE_MAGIC, version, 0, len(prepared),
+        zlib.crc32(view[_HEADER.size:]), total - _HEADER.size,
     )
-    return header + body
+    return bytes(buf)
 
 
 def _check_header(

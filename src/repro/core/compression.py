@@ -127,6 +127,11 @@ class Codec(Protocol):
     ``wire_kind`` is the record kind byte ``repro.comm.wire`` frames this
     codec's leaves under; ``leaf_type`` the wire-leaf class ``encode_leaf``
     produces (None for codecs whose output is a plain array / RAW record).
+
+    Optional capability: a codec may additionally expose
+    ``encode_leaves_batch(leaves, spec) -> list`` — ``compress_pytree``
+    probes for it and routes ALL of a tree's kind-codec leaves through one
+    call (the fused-kernel batching hook) instead of the per-leaf loop.
     """
 
     name: str
@@ -205,6 +210,10 @@ class CodecSpec:
     fttq: fttq.FTTQConfig = dataclasses.field(default_factory=fttq.FTTQConfig)
     error_feedback: bool = False
     topk_fraction: float = 0.1  # fraction of elements the "topk" codec keeps
+    # True → ternary leaves encode through the fused one-pass quantize→pack
+    # kernel (core.encode; byte-identical wire output, property-tested);
+    # False → the pinned per-leaf jnp reference.
+    fused_encode: bool = True
 
     def __post_init__(self):
         for field in ("kind", "residual"):
@@ -255,22 +264,45 @@ class NoneCodec:
 
 
 class TernaryCodec:
-    """The paper's FTTQ wire path (2-bit codes + one trained scale)."""
+    """The paper's FTTQ wire path (2-bit codes + one trained scale).
+
+    The whole-leaf scale (no per-layer split — the codec sees opaque
+    leaves) uses the CANONICAL tiled moment reduction defined in
+    ``kernels.quantize_pack``: a float sum's value depends on reduction
+    order, so the jnp reference and the fused kernel share one order and
+    serialize byte-identically. ``spec.fused_encode`` picks the path.
+    """
 
     name = "ternary"
     wire_kind = KIND_TERNARY
     leaf_type = TernaryTensor
 
     def encode_leaf(self, leaf, spec):
+        if getattr(spec, "fused_encode", False):
+            from repro.core.encode import encode_codec_leaves_fused  # lazy
+
+            return encode_codec_leaves_fused([leaf], spec)[0]
+        from repro.kernels.quantize_pack import (  # lazy: import cycle
+            moments_ref, scale_from_moments,
+        )
+
         cfg = spec.fttq
         ts = fttq.scale_layer(leaf)
         d = fttq.fttq_threshold(ts, cfg.t_k, cfg.threshold_rule)
         i_t = fttq.ternarize(ts, d)
-        absw = jnp.abs(ts)
-        sel = absw > d
-        wq = jnp.sum(jnp.where(sel, absw, 0.0)) / (jnp.sum(sel) + 1e-8)
-        wq = wq * (jnp.max(jnp.abs(leaf)) + 1e-8)  # undo layer scaling on the wire
+        denom = jnp.max(jnp.abs(leaf)) + 1e-8  # undo layer scaling on the wire
+        wq = scale_from_moments(moments_ref(leaf, denom, d), denom)
         return encode_ternary(i_t, wq.astype(leaf.dtype), dtype=str(leaf.dtype))
+
+    def encode_leaves_batch(self, leaves, spec):
+        """Batch capability for the ``compress_pytree`` pre-pass: the fused
+        pipeline encodes all leaves in one launch per dtype; with
+        ``fused_encode=False`` it degrades to the per-leaf reference."""
+        if getattr(spec, "fused_encode", False):
+            from repro.core.encode import encode_codec_leaves_fused  # lazy
+
+            return encode_codec_leaves_fused(leaves, spec)
+        return [self.encode_leaf(leaf, spec) for leaf in leaves]
 
     def decode_leaf(self, wire_leaf):
         return wire_leaf.dequantize()
@@ -347,15 +379,54 @@ def compress_pytree(
     untouched, so this also "finishes" a partially compressed tree. With
     error feedback, the input is first corrected by the carried residual and
     the new residual is (corrected − decode(wire)).
+
+    Kind codecs exposing the optional ``encode_leaves_batch`` capability
+    (the ternary codec, when ``spec.fused_encode``) get all raw quantizable
+    leaves BATCHED through one call — the fused quantize→pack pipeline:
+    lane-aligned staging, one kernel launch per dtype — instead of one
+    Python-level per-leaf chain.
     """
     if spec.is_identity:
         return tree, residual
 
-    def one(path, leaf, res):
+    paths_leaves = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_wire_leaf
+    )[0]
+    treedef = jax.tree_util.tree_structure(tree, is_leaf=is_wire_leaf)
+    res_leaves = (
+        jax.tree_util.tree_leaves(residual)
+        if residual is not None
+        else [None] * len(paths_leaves)
+    )
+
+    # batched pre-pass: codecs exposing the optional encode_leaves_batch
+    # capability (see the Codec protocol) encode every raw quantizable leaf
+    # in one call — the fused ternary pipeline's O(few)-kernel-launch hook;
+    # the per-leaf loop below picks the results up.
+    pre: dict[int, Any] = {}
+    batch = getattr(get_codec(spec.kind), "encode_leaves_batch", None)
+    if batch is not None:
+        idxs, to_encode = [], []
+        for i, ((path, leaf), res) in enumerate(zip(paths_leaves, res_leaves)):
+            if is_wire_leaf(leaf) or not fttq.is_quantizable(path, leaf, spec.fttq):
+                continue
+            x = leaf + res if (spec.error_feedback and res is not None) else leaf
+            idxs.append(i)
+            to_encode.append(x)
+        if idxs:
+            for i, x, wire in zip(idxs, to_encode, batch(to_encode, spec)):
+                pre[i] = (x, wire)
+
+    def one(i, path, leaf, res):
         if is_wire_leaf(leaf):
             # already compressed upstream of us; zero placeholder keeps the
             # residual tree structure-aligned for the next round.
             return leaf, (jnp.zeros(()) if spec.error_feedback else None)
+        if i in pre:
+            x, wire = pre[i]
+            codec = get_codec(spec.kind)
+            new_res = (x - codec.decode_leaf(wire)) if spec.error_feedback else None
+            return wire, new_res
         if fttq.is_quantizable(path, leaf, spec.fttq):
             codec = get_codec(spec.kind)
         elif jnp.issubdtype(jnp.result_type(leaf), jnp.floating):
@@ -369,18 +440,9 @@ def compress_pytree(
         new_res = (x - codec.decode_leaf(wire)) if spec.error_feedback else None
         return wire, new_res
 
-    paths_leaves = jax.tree_util.tree_flatten_with_path(
-        tree, is_leaf=is_wire_leaf
-    )[0]
-    treedef = jax.tree_util.tree_structure(tree, is_leaf=is_wire_leaf)
-    res_leaves = (
-        jax.tree_util.tree_leaves(residual)
-        if residual is not None
-        else [None] * len(paths_leaves)
-    )
     out_wire, out_res = [], []
-    for (path, leaf), res in zip(paths_leaves, res_leaves):
-        w, r = one(path, leaf, res)
+    for i, ((path, leaf), res) in enumerate(zip(paths_leaves, res_leaves)):
+        w, r = one(i, path, leaf, res)
         out_wire.append(w)
         out_res.append(r)
     wire_tree = jax.tree_util.tree_unflatten(treedef, out_wire)

@@ -30,6 +30,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Pytree = Any
 
@@ -225,23 +226,33 @@ def quantize_tree(params: Pytree, wq_tree: Pytree, cfg: FTTQConfig) -> Pytree:
 
 
 def ternary_stats(params: Pytree, cfg: FTTQConfig) -> dict:
-    """Diagnostics: per-tree sparsity and quantized fraction of parameters."""
+    """Diagnostics: per-tree sparsity and quantized fraction of parameters.
+
+    The per-leaf zero counts stay on device and are folded by ONE final
+    sum — a single device→host sync for the whole tree instead of one
+    ``int(jnp.sum(...))`` blocking round trip per leaf."""
     total = 0
     quantized = 0
-    zeros = 0
+    zero_counts = []
 
     def visit(path, leaf):
-        nonlocal total, quantized, zeros
+        nonlocal total, quantized
         n = leaf.size
         total += n
         if is_quantizable(path, leaf, cfg):
             quantized += n
             ts = scale_layer(leaf)
             d = fttq_threshold(ts, cfg.t_k, cfg.threshold_rule)
-            zeros += int(jnp.sum(jnp.abs(ts) <= d))
+            zero_counts.append(jnp.sum(jnp.abs(ts) <= d))
         return leaf
 
     jax.tree_util.tree_map_with_path(visit, params)
+    # one transfer of the per-leaf count vector, summed in Python ints on
+    # the host — a device-side int32 fold could wrap past 2³¹ zeros.
+    zeros = (
+        int(np.asarray(jnp.stack(zero_counts)).astype(np.int64).sum())
+        if zero_counts else 0
+    )
     return {
         "total_params": total,
         "quantized_params": quantized,

@@ -8,6 +8,12 @@ Packing layout (little-endian within the byte):
 
     byte = c0 | c1 << 2 | c2 << 4 | c3 << 6
 
+Padding semantics (unified across the repo): when n % 4 ≠ 0, the trailing
+slots of the last byte carry code 1 — ternary VALUE 0 — matching
+``kernels.pack2bit.pad_to_packable`` and the fused encode kernel, so any
+consumer that reads past ``n`` (e.g. the fan-in kernel before its tail
+slice) sees zeros, never −1.
+
 These jnp implementations are the REFERENCE path; ``repro.kernels`` carries
 the Pallas TPU kernels for the same ops (validated against these).
 """
@@ -39,9 +45,10 @@ def pack2bit(i_t: jax.Array) -> jax.Array:
     flat = i_t.reshape(-1)
     n = flat.shape[0]
     pad = (-n) % CODES_PER_BYTE
-    codes = (flat.astype(jnp.int8) + 1).astype(jnp.uint8)
     if pad:
-        codes = jnp.concatenate([codes, jnp.zeros((pad,), jnp.uint8)])
+        # pad with VALUE 0 (wire code 1) — see padding semantics above.
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    codes = (flat.astype(jnp.int8) + 1).astype(jnp.uint8)
     codes = codes.reshape(-1, CODES_PER_BYTE)
     out = (
         codes[:, 0]
@@ -91,10 +98,16 @@ class TernaryTensor:
         return int(np.prod(self.shape)) if self.shape else 1
 
     def nbytes_wire(self) -> int:
-        """Bytes on the wire: packed codes + the scale payload (derived from
-        the actual ``w_q`` dtype/shape, so bf16/fp16 or per-layer stacked
-        scales report correctly instead of an assumed single fp32)."""
-        return int(self.packed.size) + int(np.asarray(self.w_q).nbytes)
+        """Bytes on the wire: packed codes + the scale payload, derived from
+        the ``w_q`` dtype/shape METADATA only — no ``np.asarray`` device→host
+        sync per leaf (this runs once per leaf per round in byte accounting),
+        while bf16/fp16 or per-layer stacked scales still report correctly."""
+        w = self.w_q
+        if hasattr(w, "dtype") and hasattr(w, "shape"):
+            scale_bytes = int(np.prod(w.shape)) * jnp.dtype(w.dtype).itemsize
+        else:  # plain python scalar: matches np.asarray's float64 default
+            scale_bytes = np.asarray(w).nbytes
+        return int(self.packed.size) + scale_bytes
 
     def dequantize(self) -> jax.Array:
         it = unpack2bit(self.packed, self.n_elements, jnp.int8)

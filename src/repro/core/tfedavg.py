@@ -51,30 +51,45 @@ class TernaryUpdate:
         return update_nbytes(self.payload)
 
 
+def _reference_payload_leaf(leaf, wq, cfg: fttq.FTTQConfig):
+    """Pinned jnp reference for ONE quantizable upstream leaf: scale →
+    threshold → ternarize → pack, with the TRAINED w_q carried as-is.
+    The fused path (``core.encode``) is property-tested byte-identical."""
+
+    def tern(t):
+        ts = fttq.scale_layer(t)
+        d = fttq.fttq_threshold(ts, cfg.t_k, cfg.threshold_rule)
+        return fttq.ternarize(ts, d)
+
+    if leaf.ndim >= 3 and hasattr(wq, "ndim") and wq.ndim == leaf.ndim:
+        # stacked scan layers: ternarize per layer, keep per-layer w_q.
+        i_t = jax.vmap(tern)(leaf)
+    else:
+        i_t = tern(leaf)
+    return encode_ternary(i_t, wq, dtype=str(leaf.dtype))
+
+
 def client_update_payload(
-    params: Pytree, wq_tree: Pytree, cfg: fttq.FTTQConfig
+    params: Pytree, wq_tree: Pytree, cfg: fttq.FTTQConfig, *,
+    fused: bool = True,
 ) -> Pytree:
     """Build the upstream wire payload from trained latent params + w_q tree.
 
     Quantizable leaves → TernaryTensor(I_t, w_q); others pass through (fp32).
+    ``fused=True`` (default) routes the whole tree through the one-pass
+    quantize→pack kernel pipeline (``core.encode.client_payload_fused``,
+    O(few) launches, byte-identical wire output); ``fused=False`` keeps the
+    per-leaf jnp chain as the pinned reference.
     """
+    if fused:
+        from repro.core.encode import client_payload_fused  # lazy: imports kernels
+
+        return client_payload_fused(params, wq_tree, cfg)
 
     def one(path, leaf, wq):
         if wq is None:
             return leaf
-        if leaf.ndim >= 3 and hasattr(wq, "ndim") and wq.ndim == leaf.ndim:
-            # stacked scan layers: ternarize per layer, keep per-layer w_q.
-            def tern(t):
-                ts = fttq.scale_layer(t)
-                d = fttq.fttq_threshold(ts, cfg.t_k, cfg.threshold_rule)
-                return fttq.ternarize(ts, d)
-
-            i_t = jax.vmap(tern)(leaf)
-            return encode_ternary(i_t, wq, dtype=str(leaf.dtype))
-        ts = fttq.scale_layer(leaf)
-        d = fttq.fttq_threshold(ts, cfg.t_k, cfg.threshold_rule)
-        i_t = fttq.ternarize(ts, d)
-        return encode_ternary(i_t, wq, dtype=str(leaf.dtype))
+        return _reference_payload_leaf(leaf, wq, cfg)
 
     return jax.tree_util.tree_map_with_path(
         one, params, wq_tree, is_leaf=lambda x: x is None
@@ -113,8 +128,37 @@ def server_aggregate(updates: list[TernaryUpdate]) -> Pytree:
     return jax.tree_util.tree_map(wsum, *dequant)
 
 
+def _reference_requantize_leaf(leaf, wq, cfg: fttq.FTTQConfig):
+    """Pinned jnp reference for ONE downstream leaf: fixed Δ = server_delta
+    on scaled weights; the downstream scale uses the CANONICAL tiled moment
+    reduction (``kernels.quantize_pack.moments_ref``) — a float sum's value
+    depends on its reduction order, so the reference and the fused kernel
+    share one defined order and stay byte-identical on the wire."""
+    from repro.kernels.quantize_pack import moments_ref, scale_from_moments
+
+    def codes(t):
+        ts = fttq.scale_layer(t)
+        return fttq.ternarize(ts, jnp.asarray(cfg.server_delta, ts.dtype))
+
+    def scale_of(t):
+        denom = jnp.max(jnp.abs(t)) + 1e-8
+        d = jnp.asarray(cfg.server_delta, t.dtype)
+        return scale_from_moments(moments_ref(t, denom, d), denom)
+
+    if leaf.ndim >= 3 and hasattr(wq, "ndim") and wq.ndim == leaf.ndim:
+        i_t = jax.vmap(codes)(leaf)
+        scale = jnp.stack(
+            [scale_of(leaf[i]) for i in range(leaf.shape[0])]
+        ).reshape(wq.shape)
+    else:
+        i_t = codes(leaf)
+        scale = scale_of(leaf)
+    return encode_ternary(i_t, scale.astype(leaf.dtype), dtype=str(leaf.dtype))
+
+
 def server_requantize(
-    global_params: Pytree, cfg: fttq.FTTQConfig, wq_tree: Pytree | None = None
+    global_params: Pytree, cfg: fttq.FTTQConfig, wq_tree: Pytree | None = None,
+    *, fused: bool = True,
 ) -> Pytree:
     """Downstream compression: re-quantize the aggregated global model.
 
@@ -125,31 +169,22 @@ def server_requantize(
     clients re-initializing w_q; carrying the optimal scale is equivalent on
     the wire (one extra fp32/layer) and keeps the global model usable for
     immediate evaluation.
+
+    ``fused=True`` (default) encodes through the one-pass quantize→pack
+    kernel (``core.encode.requantize_fused``, byte-identical wire output);
+    ``fused=False`` keeps the per-leaf jnp reference.
     """
+    if fused:
+        from repro.core.encode import requantize_fused  # lazy: imports kernels
+
+        return requantize_fused(global_params, cfg, wq_tree)
     if wq_tree is None:
         wq_tree = fttq.init_wq_tree(global_params, cfg)
 
     def one(path, leaf, wq):
         if wq is None:
             return leaf
-
-        def tern_opt(t):
-            ts = fttq.scale_layer(t)
-            d = jnp.asarray(cfg.server_delta, ts.dtype)
-            i_t = fttq.ternarize(ts, d)
-            absw = jnp.abs(ts)
-            sel = absw > d
-            scale = jnp.sum(jnp.where(sel, absw, 0.0)) / (jnp.sum(sel) + 1e-8)
-            # rescale back to the original magnitude range:
-            scale = scale * (jnp.max(jnp.abs(t)) + 1e-8)
-            return i_t, scale
-
-        if leaf.ndim >= 3 and hasattr(wq, "ndim") and wq.ndim == leaf.ndim:
-            i_t, scale = jax.vmap(tern_opt)(leaf)
-            scale = scale.reshape(wq.shape)
-        else:
-            i_t, scale = tern_opt(leaf)
-        return encode_ternary(i_t, scale.astype(leaf.dtype), dtype=str(leaf.dtype))
+        return _reference_requantize_leaf(leaf, wq, cfg)
 
     return jax.tree_util.tree_map_with_path(
         one, global_params, wq_tree, is_leaf=lambda x: x is None

@@ -94,8 +94,12 @@ class Aggregator:
             agg.add(blob, weight=n_samples)
         global_params = agg.finalize()
 
-    One instance aggregates ONE round/buffer; construct a fresh one per
-    aggregation (buffers are reused across chunks within the instance).
+    One instance aggregates one round/buffer at a time, but is REUSABLE:
+    ``finalize(reset=True)`` (or an explicit ``reset()``) clears the
+    accumulated state while KEEPING the leaf plans and the stacked staging
+    buffers, so a long-lived server instance — e.g. the buffered-async
+    server, which aggregates every K arrivals — never rebuilds its
+    buffers between mixes.
     """
 
     def __init__(self, chunk_c: int = 16, *, mesh=None,
@@ -249,9 +253,31 @@ class Aggregator:
 
     # -- result ------------------------------------------------------------
 
-    def finalize(self) -> Pytree:
+    @property
+    def n_clients(self) -> int:
+        """Client updates added since construction / the last reset."""
+        return self._n_clients
+
+    def reset(self) -> None:
+        """Clear the accumulated state for the next aggregation while
+        KEEPING the record plans and the reusable staging buffers — the
+        long-lived-server path (async ``buffer_k`` mixes) pays the buffer
+        allocation once, not every K arrivals."""
+        for g in self._groups.values():
+            g.views.clear()
+            g.coeffs.clear()
+            g.partial = None
+        for acc in self._fallback.values():
+            acc.fill(0.0)
+        self._pending = 0
+        self._n_clients = 0
+        self._total_weight = 0.0
+
+    def finalize(self, *, reset: bool = False) -> Pytree:
         """Flush pending rows and return the weighted-mean pytree
-        (Algorithm 2's Σ |D_k|/Σ|D_k| · dequant(payload_k))."""
+        (Algorithm 2's Σ |D_k|/Σ|D_k| · dequant(payload_k)). With
+        ``reset=True`` the instance is immediately reusable for the next
+        round (plans + staging buffers survive)."""
         if self._n_clients == 0:
             raise ValueError("Aggregator.finalize: no client updates were added")
         if self._total_weight <= 0:
@@ -273,4 +299,7 @@ class Aggregator:
                 acc = self._fallback[path] * np.float32(inv)
                 leaf = jnp.asarray(acc).astype(self._fallback_dtype[path])
             pairs.append((path, leaf))
-        return tree_from_records(pairs)
+        out = tree_from_records(pairs)
+        if reset:
+            self.reset()
+        return out

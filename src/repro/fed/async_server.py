@@ -24,12 +24,15 @@ times are logged per client, so the async-vs-sync comparison reads out in
 simulated seconds as well as bytes. Compression is per-direction
 (``FedConfig.compression``): dispatch serializes through the DOWNSTREAM
 codec spec and arrivals through the UPSTREAM one (via the shared
-``broadcast_blob`` / ``train_client`` helpers), and ``_weighted_mix``
-streams the buffered wire blobs through ``fed.aggregator.Aggregator`` —
-the fused packed fan-in kernel for ternary records, codec-registry dequant
-for everything else — so asymmetric up/down codecs meter correctly here
-too and the buffer is never expanded to per-client dense trees
-(``cfg.fused_aggregation=False`` restores the reference dequant loop).
+``broadcast_blob`` / ``train_client`` helpers). Arrivals stream straight
+into ONE long-lived ``fed.aggregator.Aggregator`` — zero-copy record
+ingest, the fused packed fan-in kernel for ternary records, codec-registry
+dequant for everything else — whose staging buffers and leaf plans persist
+ACROSS mixes (``finalize(reset=True)`` every ``buffer_k`` arrivals), so
+asymmetric up/down codecs meter correctly, the buffer is never expanded to
+per-client dense trees, and nothing is re-allocated per aggregation
+(``cfg.fused_aggregation=False`` restores the reference dequant loop over
+a buffered blob list).
 """
 
 from __future__ import annotations
@@ -59,19 +62,22 @@ from repro.optim import Optimizer
 Pytree = Any
 
 
-def _weighted_mix(global_params, buffered, eta, cfg: FedConfig | None = None):
+def _weighted_mix(global_params, buffered, eta, cfg: FedConfig | None = None,
+                  agg: Aggregator | None = None):
     """θ ← (1-η)·θ + η·Σ ŵ_i·dequant(blob_i) over the buffered arrivals.
 
     ``buffered`` holds (staleness-discounted weight, wire blob) pairs; the
     weighted mean streams through the fused aggregator (Σ ŵ normalizes
-    inside ``finalize``), then mixes into the global with rate η.
+    inside ``finalize``), then mixes into the global with rate η. Passing a
+    long-lived ``agg`` reuses its staging buffers (``finalize(reset=True)``)
+    instead of constructing a fresh one per mix.
     """
     if cfg is None or cfg.fused_aggregation:
-        chunk = cfg.agg_chunk_c if cfg is not None else 16
-        agg = Aggregator(chunk_c=chunk)
+        if agg is None:
+            agg = Aggregator(chunk_c=cfg.agg_chunk_c if cfg is not None else 16)
         for w, blob in buffered:
             agg.add(blob, weight=w)
-        mean = agg.finalize()
+        mean = agg.finalize(reset=True)
     else:
         raw = np.array([w for w, _ in buffered], dtype=np.float64)
         wts = raw / raw.sum()
@@ -116,7 +122,12 @@ def run_federated_async(
     down_bytes = 0
     seq = 0                       # tie-breaker for the heap
     events: list = []             # (arrival_time, seq, client_id, blob, version)
-    buffered: list = []           # (weight, wire blob) awaiting aggregation
+    buffered: list = []           # (weight, wire blob) — reference path only
+    # ONE long-lived aggregator for the whole run: arrivals stream into it
+    # as they land and `finalize(reset=True)` every buffer_k keeps its
+    # staging buffers + leaf plans alive across mixes (ROADMAP item).
+    agg = Aggregator(chunk_c=cfg.agg_chunk_c) if cfg.fused_aggregation else None
+    n_buffered = 0
     acc_hist, loss_hist = [], []
     agg_times, staleness_hist, parts_hist = [], [], []
     last_agg_t = 0.0
@@ -158,14 +169,19 @@ def run_federated_async(
         up_bytes += len(up_blob)
         staleness = version - born
         weight = len(clients[k]) * (1.0 + staleness) ** (-cfg.staleness_exponent)
-        buffered.append((weight, up_blob))   # wire blob: decoded in the mix
+        if agg is not None:
+            agg.add(up_blob, weight=weight)  # streams into the live aggregator
+        else:
+            buffered.append((weight, up_blob))  # decoded in the reference mix
+        n_buffered += 1
         staleness_hist.append(staleness)
 
-        if len(buffered) >= buffer_k:
+        if n_buffered >= buffer_k:
             global_params = _weighted_mix(
-                global_params, buffered, cfg.mixing_rate, cfg
+                global_params, buffered, cfg.mixing_rate, cfg, agg=agg
             )
             buffered = []
+            n_buffered = 0
             version += 1
             parts_hist.append(buffer_k)
             agg_times.append(now - last_agg_t)

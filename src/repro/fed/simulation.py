@@ -76,6 +76,11 @@ class FedConfig:
     # reference loop (core.tfedavg.server_aggregate).
     fused_aggregation: bool = True
     agg_chunk_c: int = 16               # clients per fused kernel launch
+    # --- client/server egress encode -------------------------------------
+    # True → quantize→pack through the fused one-pass kernel pipeline
+    # (core.encode: byte-identical wire buffers, one HBM read per leaf);
+    # False → the pinned per-leaf jnp reference chain.
+    fused_encode: bool = True
     # --- async (buffered) server knobs -----------------------------------
     buffer_k: int = 4                   # aggregate every K arrivals
     max_concurrency: int = 0            # in-flight clients (0 → ⌈λN⌉)
@@ -163,7 +168,9 @@ def resolve_compression(cfg: FedConfig) -> CompressionSpec:
     if cfg.compression is not None:
         return cfg.compression
     kind = "ternary" if cfg.algorithm == "tfedavg" else "none"
-    return CompressionSpec.symmetric(kind=kind, fttq=cfg.fttq)
+    return CompressionSpec.symmetric(
+        kind=kind, fttq=cfg.fttq, fused_encode=cfg.fused_encode
+    )
 
 
 def dequantize_tree(tree: Pytree) -> Pytree:
@@ -181,7 +188,8 @@ def broadcast_blob(global_params: Pytree, cfg: FedConfig) -> bytes:
     """
     dspec = resolve_compression(cfg).downstream
     if dspec.kind == "ternary":
-        tree = server_requantize(global_params, dspec.fttq)
+        tree = server_requantize(global_params, dspec.fttq,
+                                 fused=dspec.fused_encode)
         tree, _ = compress_pytree(tree, dspec)  # residual codec on raw leaves
     else:
         tree, _ = compress_pytree(global_params, dspec)
@@ -216,7 +224,13 @@ def train_client(
             params_k, wq, opt_state, _ = qat_step(
                 params_k, wq, opt_state, jnp.asarray(xb), jnp.asarray(yb)
             )
-        payload = client_update_payload(params_k, wq, cfg.fttq)
+        # gate on the RESOLVED upstream spec (not cfg.fused_encode directly)
+        # so an explicit cfg.compression's fused_encode flag is honored on
+        # this path exactly as broadcast_blob honors the downstream one.
+        payload = client_update_payload(
+            params_k, wq, cfg.fttq,
+            fused=resolve_compression(cfg).upstream.fused_encode,
+        )
     else:
         for xb, yb in client.batches(cfg.batch_size, rng, cfg.local_epochs):
             params_k, opt_state, _ = fp_step(

@@ -2,6 +2,10 @@
 
   ternary_quantize — fused FTTQ elementwise apply (QAT forward hot loop)
   pack2bit         — 2-bit wire codec (upload/download path)
+  quantize_pack    — fused one-pass quantize→pack for client egress:
+                     fp32/bf16 weights in, WIRE-layout packed bytes out,
+                     w_q moments from the same pass (the upstream encode
+                     hot spot; driven tree-wide by core.encode)
   ternary_matmul   — packed ternary-weight GEMM (16× HBM traffic cut; the
                      edge-inference hot spot mapped to TPU decode)
   repack           — wire flat-packed bytes → (K//4, N) kernel layout
@@ -14,6 +18,6 @@
 ``ops`` holds the jit'd dispatching wrappers; ``ref`` the pure-jnp oracles.
 """
 
-from repro.kernels import aggregate, ops, ref, repack
+from repro.kernels import aggregate, ops, quantize_pack, ref, repack
 
-__all__ = ["aggregate", "ops", "ref", "repack"]
+__all__ = ["aggregate", "ops", "quantize_pack", "ref", "repack"]

@@ -1,0 +1,371 @@
+"""Fused upstream encode: kernel-vs-oracle, fused-vs-reference BYTE
+identity of wire buffers (the acceptance property), unified pack-padding
+semantics, the streaming serializer, and the long-lived Aggregator reuse."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.wire import _RECORDS, decode_update, encode_update
+from repro.core import CodecSpec, FTTQConfig, compress_pytree
+from repro.core import fttq as F
+from repro.core.tfedavg import client_update_payload, server_requantize
+from repro.core.ternary import TernaryTensor, encode_ternary, pack2bit, unpack2bit
+from repro.kernels.pack2bit import pad_to_packable
+from repro.kernels.quantize_pack import (
+    LANES,
+    moments_ref,
+    quantize_pack,
+    quantize_pack_ref,
+    quantize_pack_segments,
+    quantize_pack_stacked,
+    stage_encode,
+)
+
+CFG = FTTQConfig()
+
+
+# --------------------------------------------------------------------------
+# Kernel vs pure-jnp oracle.
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 3, 511, 512, 513, 32768, 32769, 100_001])
+def test_kernel_bytes_match_wire_oracle(n):
+    """The fused kernel's flattened output IS the wire byte stream: equal to
+    ternarize→core-pack2bit for sizes on both sides of every padding
+    boundary (byte, lane chunk, block tile)."""
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    denom = jnp.max(jnp.abs(x)) + 1e-8
+    delta = 0.7 * jnp.mean(jnp.abs(x / denom))
+    packed, moments, count = quantize_pack(x, denom, delta, interpret=True)
+    assert count == n
+    ref = np.asarray(quantize_pack_ref(x, denom, delta))
+    got = np.asarray(packed).reshape(-1)[: ref.size]
+    np.testing.assert_array_equal(got, ref)
+    # moments: bit-identical to the canonical lax.map reference
+    np.testing.assert_array_equal(
+        np.asarray(moments), np.asarray(moments_ref(x, denom, delta))
+    )
+
+
+def test_kernel_multi_segment_launch():
+    """Per-block SMEM scalars: two segments with different (denom, Δ) in ONE
+    launch equal two single-segment launches."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(600,)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(900,)).astype(np.float32) * 3.0)
+    bs = 8
+    parts, scals = [], []
+    for x in (a, b):
+        staged, _ = stage_encode(x, bs)
+        denom = jnp.max(jnp.abs(x)) + 1e-8
+        delta = 0.7 * jnp.mean(jnp.abs(x / denom))
+        g = staged.shape[0] // bs
+        parts.append(staged)
+        scals.append(jnp.broadcast_to(
+            jnp.stack([denom, delta]).astype(jnp.float32)[None, :], (g, 2)))
+    packed, _ = quantize_pack_segments(
+        jnp.concatenate(parts), jnp.concatenate(scals), block_s=bs,
+        interpret=True,
+    )
+    flat = np.asarray(packed).reshape(-1)
+    off = 0
+    for x in (a, b):
+        denom = jnp.max(jnp.abs(x)) + 1e-8
+        delta = 0.7 * jnp.mean(jnp.abs(x / denom))
+        ref = np.asarray(quantize_pack_ref(x, denom, delta))
+        np.testing.assert_array_equal(flat[off:off + ref.size], ref)
+        staged, _ = stage_encode(x, bs)
+        off += staged.shape[0] // 4 * LANES
+
+
+def test_vmapped_stacked_matches_single_layer_calls():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(3, 16, 8)).astype(np.float32))
+    denoms = jax.vmap(lambda t: jnp.max(jnp.abs(t)) + 1e-8)(x)
+    deltas = jax.vmap(lambda t: 0.7 * jnp.mean(jnp.abs(t / (jnp.max(jnp.abs(t)) + 1e-8))))(x)
+    packed, moments, n_layer = quantize_pack_stacked(
+        x, denoms, deltas, interpret=True
+    )
+    assert n_layer == 16 * 8
+    for i in range(3):
+        p1, m1, _ = quantize_pack(x[i], denoms[i], deltas[i], interpret=True)
+        np.testing.assert_array_equal(np.asarray(packed[i]), np.asarray(p1))
+        np.testing.assert_array_equal(np.asarray(moments[i]), np.asarray(m1))
+
+
+# --------------------------------------------------------------------------
+# Fused vs reference: BYTE-IDENTICAL wire buffers (the acceptance property).
+# --------------------------------------------------------------------------
+
+
+def _ragged_params(key, dtype=jnp.float32):
+    """Every encode corner in one tree: ragged 2-D (n % 4 ≠ 0), sizes
+    crossing the pad_to_packable 512-element chunk and the BLOCK_S tile,
+    stacked clean (layer % 4 == 0) and ragged stacked leaves, biases, and
+    an int counter."""
+    k = jax.random.split(key, 7)
+    return {
+        "enc": {"w": jax.random.normal(k[0], (17, 9), dtype),
+                "b": jax.random.normal(k[1], (9,), dtype)},
+        "mid": {"w": jax.random.normal(k[2], (128, 4), dtype)},      # 512 exact
+        "odd": {"w": jax.random.normal(k[3], (129, 4), dtype)},      # 516 > 512
+        "stack": {"w": jax.random.normal(k[4], (3, 8, 12), dtype)},  # clean
+        "ragged_stack": {"w": jax.random.normal(k[5], (3, 9, 13), dtype)},
+        "head": {"w": jax.random.normal(k[6], (100, 260), dtype)},   # > BLOCK_S
+        "steps": jnp.asarray(7, jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("rule", ["mean", "max"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_client_payload_fused_bitexact(rule, dtype):
+    cfg = F.FTTQConfig(threshold_rule=rule)
+    params = _ragged_params(jax.random.PRNGKey(0), dtype)
+    wq = F.init_wq_tree(params, cfg)
+    ref = encode_update(client_update_payload(params, wq, cfg, fused=False))
+    fus = encode_update(client_update_payload(params, wq, cfg, fused=True))
+    assert ref == fus
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_server_requantize_fused_bitexact(dtype):
+    params = _ragged_params(jax.random.PRNGKey(1), dtype)
+    ref = encode_update(server_requantize(params, CFG, fused=False))
+    fus = encode_update(server_requantize(params, CFG, fused=True))
+    assert ref == fus
+
+
+@pytest.mark.parametrize("rule", ["mean", "max"])
+def test_codec_compress_fused_bitexact(rule):
+    cfg = F.FTTQConfig(threshold_rule=rule)
+    params = _ragged_params(jax.random.PRNGKey(2))
+    spec = CodecSpec(kind="ternary", residual="fp16", fttq=cfg)
+    ref_spec = dataclasses.replace(spec, fused_encode=False)
+    ref = encode_update(compress_pytree(params, ref_spec)[0])
+    fus = encode_update(compress_pytree(params, spec)[0])
+    assert ref == fus
+
+
+def test_fused_bitexact_property_sweep():
+    """Randomized shapes (hypothesis-style sweep without the dependency):
+    fused and reference buffers must match for every draw."""
+    rng = np.random.default_rng(7)
+    for trial in range(8):
+        m = int(rng.integers(1, 70))
+        n = int(rng.integers(1, 70))
+        key = jax.random.PRNGKey(trial)
+        params = {"w": jax.random.normal(key, (m, n)) * float(rng.uniform(0.1, 9))}
+        wq = F.init_wq_tree(params, CFG)
+        ref = encode_update(client_update_payload(params, wq, CFG, fused=False))
+        fus = encode_update(client_update_payload(params, wq, CFG, fused=True))
+        assert ref == fus, (m, n)
+        rr = encode_update(server_requantize(params, CFG, fused=False))
+        rf = encode_update(server_requantize(params, CFG, fused=True))
+        assert rr == rf, (m, n)
+
+
+def test_fused_payload_decodes_to_reference_codes():
+    """Sanity beyond byte equality: decoded fused codes equal the reference
+    ternarization."""
+    params = _ragged_params(jax.random.PRNGKey(3))
+    wq = F.init_wq_tree(params, CFG)
+    fus = decode_update(encode_update(client_update_payload(params, wq, CFG)))
+    t = fus["head"]["w"]
+    assert isinstance(t, TernaryTensor)
+    leaf = params["head"]["w"]
+    ts = F.scale_layer(leaf)
+    i_ref = F.ternarize(ts, F.fttq_threshold(ts, CFG.t_k, CFG.threshold_rule))
+    np.testing.assert_array_equal(
+        np.asarray(t.ternary()), np.asarray(i_ref, np.int8)
+    )
+
+
+# --------------------------------------------------------------------------
+# Padding semantics: code 1 (value 0) everywhere.
+# --------------------------------------------------------------------------
+
+
+def test_pack_padding_unified_on_code_1():
+    """core.ternary.pack2bit pads partial bytes with code 1 (decodes to 0),
+    matching kernels.pack2bit.pad_to_packable — a consumer reading past n
+    (e.g. the fan-in kernel before its tail slice) must see zeros, not −1."""
+    packed = np.asarray(pack2bit(jnp.asarray([1], jnp.int8)))
+    # byte = code2 | code1<<2 | code1<<4 | code1<<6 = 2 + 4 + 16 + 64
+    assert packed.tolist() == [86]
+    # decoding the padding slots yields VALUE 0
+    full = np.asarray(unpack2bit(jnp.asarray(packed), 4))
+    np.testing.assert_array_equal(full, [1, 0, 0, 0])
+    # the kernels-side helper pads identically (value 0 == code 1)
+    tiled, n = pad_to_packable(jnp.asarray([1, -1, 0], jnp.int8))
+    assert n == 3
+    flat = np.asarray(tiled).reshape(-1)
+    np.testing.assert_array_equal(flat[3:], np.zeros(flat.size - 3, np.int8))
+
+
+def test_padding_consistent_with_fused_kernel():
+    """Reference pack and fused kernel emit the SAME final partial byte."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(21,)).astype(np.float32))  # 21 % 4 = 1
+    denom = jnp.max(jnp.abs(x)) + 1e-8
+    delta = 0.7 * jnp.mean(jnp.abs(x / denom))
+    ts = x / denom
+    i_t = jnp.where(jnp.abs(ts) > delta, jnp.sign(ts), 0.0).astype(jnp.int8)
+    ref = np.asarray(pack2bit(i_t))
+    packed, _, _ = quantize_pack(x, denom, delta, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(packed).reshape(-1)[: ref.size], ref
+    )
+
+
+# --------------------------------------------------------------------------
+# Streaming serializer.
+# --------------------------------------------------------------------------
+
+
+def test_all_emitting_records_have_streaming_writers():
+    """No per-record bytes concatenation: every record kind an encoder can
+    emit carries a native prepare (size pre-pass + in-place writer); only
+    the decode-only legacy TOPK record may rely on the fallback."""
+    for rec in _RECORDS.values():
+        if rec.encode:
+            assert rec.prepare is not None, rec.name
+
+
+def test_streaming_encode_matches_join_reference():
+    """The preallocated single-buffer writer is byte-identical to the
+    legacy join-based builder (reconstructed from the registry's pack
+    functions) on a payload exercising every record kind."""
+    import struct
+    import zlib
+
+    from repro.comm.wire import (
+        _HEADER, _PATH_SEP, _path_entries, _record_for_leaf, _leaf_types,
+    )
+
+    rng = np.random.default_rng(11)
+    tree = {
+        "w": encode_ternary(
+            jnp.asarray(rng.integers(-1, 2, (13, 7)).astype(np.int8)),
+            jnp.float32(0.31),
+        ),
+        "b": jnp.asarray(rng.normal(size=(7,)).astype(np.float32)),
+        "half": compress_pytree(
+            {"x": jnp.asarray(rng.normal(size=(5, 4)).astype(np.float32))},
+            CodecSpec(kind="fp16", residual="fp16"),
+        )[0]["x"],
+        "sparse": compress_pytree(
+            {"x": jnp.asarray(rng.normal(size=(9, 6)).astype(np.float32))},
+            CodecSpec(kind="topk", residual="topk", topk_fraction=0.3),
+        )[0]["x"],
+    }
+    lt = _leaf_types()
+    leaves = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, lt)
+    )[0]
+    records, version = [], 1
+    for path, leaf in leaves:
+        p = _PATH_SEP.join(_path_entries(path)).encode("utf-8")
+        rec = _record_for_leaf(leaf)
+        version = max(version, rec.min_version)
+        records.append(b"".join([
+            struct.pack("<H", len(p)), p,
+            struct.pack("<B", rec.kind), rec.pack(leaf),
+        ]))
+    body = b"".join(records)
+    join_blob = _HEADER.pack(
+        b"TFW1", version, 0, len(records), zlib.crc32(body), len(body)
+    ) + body
+    assert encode_update(tree) == join_blob
+
+
+def test_streaming_encode_noncontiguous_leaf():
+    """A transposed (non-C-contiguous) numpy leaf serializes correctly."""
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4).T
+    assert not arr.flags["C_CONTIGUOUS"]
+    back = decode_update(encode_update({"w": arr}))["w"]
+    np.testing.assert_array_equal(np.asarray(back), arr)
+
+
+# --------------------------------------------------------------------------
+# Long-lived Aggregator (async-server satellite).
+# --------------------------------------------------------------------------
+
+
+def _client_blob(seed):
+    params = {"enc": {"w": jax.random.normal(jax.random.PRNGKey(seed), (17, 9)),
+                      "b": jax.random.normal(jax.random.PRNGKey(seed + 50), (9,))}}
+    wq = F.init_wq_tree(params, CFG)
+    return encode_update(client_update_payload(params, wq, CFG))
+
+
+def test_aggregator_reset_reuses_buffers_across_rounds():
+    from repro.fed.aggregator import Aggregator
+
+    blobs = [_client_blob(s) for s in range(4)]
+    fresh = []
+    for r in range(2):
+        a = Aggregator(chunk_c=2)
+        for i, b in enumerate(blobs):
+            a.add(b, 10 + i + r)
+        fresh.append(a.finalize())
+
+    agg = Aggregator(chunk_c=2)
+    for i, b in enumerate(blobs):
+        agg.add(b, 10 + i)
+    out0 = agg.finalize(reset=True)
+    buffers_after_round0 = dict(agg._buffers)
+    peak0 = agg.peak_intermediate_bytes
+    assert agg.n_clients == 0
+    for i, b in enumerate(blobs):
+        agg.add(b, 11 + i)
+    out1 = agg.finalize(reset=True)
+    # same results as fresh instances...
+    for ref, got in ((fresh[0], out0), (fresh[1], out1)):
+        for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(ref)[0],
+            jax.tree_util.tree_flatten_with_path(got)[0],
+        ):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-6
+            )
+    # ...with the SAME staging buffers (no reallocation, flat high-water)
+    assert dict(agg._buffers) == buffers_after_round0
+    assert agg.peak_intermediate_bytes == peak0
+
+
+def test_aggregator_reset_rejects_structure_change_consistently():
+    from repro.fed.aggregator import Aggregator
+
+    agg = Aggregator(chunk_c=2)
+    agg.add(_client_blob(0), 5)
+    agg.finalize(reset=True)
+    # plans survive the reset: a different update structure still refuses
+    with pytest.raises(ValueError, match="structure changed"):
+        agg.add(encode_update({"other": jnp.ones((4, 4))}), 1)
+
+
+# --------------------------------------------------------------------------
+# nbytes_wire metadata derivation (no per-leaf host sync).
+# --------------------------------------------------------------------------
+
+
+def test_nbytes_wire_handles_plain_python_scalar():
+    t = encode_ternary(jnp.asarray([1, -1, 0, 1], jnp.int8), 0.5)
+    # python float scale → np default float64 on the wire
+    assert t.nbytes_wire() == int(t.packed.size) + 8
+
+
+def test_nbytes_wire_numpy_packed_leaf():
+    """Fused-encoded tensors carry numpy packed views — accounting still
+    derives from metadata."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (33, 5))}
+    wq = F.init_wq_tree(params, CFG)
+    t = client_update_payload(params, wq, CFG)["w"]
+    assert isinstance(t.packed, np.ndarray)
+    assert t.nbytes_wire() == (33 * 5 + 3) // 4 + 4
