@@ -1,5 +1,6 @@
 """Wire-codec benchmarks: encode/decode throughput and bytes-per-parameter
-vs the fp32 baseline, on real model payloads.
+vs the fp32 baseline, on real model payloads — plus the SCENARIO section,
+which runs the same T-FedAvg config under realistic fleet conditions.
 
 Rows (name, us_per_call, derived):
   wire_encode_<model>   derived = encode throughput, MB/s
@@ -9,6 +10,10 @@ Rows (name, us_per_call, derived):
   codec_encode_<name>   per-registry-codec serialize throughput, MB/s
   codec_decode_<name>   per-registry-codec decode+decompress throughput, MB/s
   codec_bpp_<name>      per-registry-codec serialized bytes per parameter
+  scenario_<s>_acc      final accuracy under scenario s (async T-FedAvg)
+  scenario_<s>_upMB     measured upload megabytes under scenario s
+  scenario_<s>_time     simulated seconds under scenario s
+  scenario_<s>_goodput  goodput / (goodput + retransmitted) wire fraction
 """
 
 from __future__ import annotations
@@ -113,4 +118,44 @@ def codec_table():
         rows.append((f"codec_decode_{name}", round(dt_d * 1e6, 1),
                      round(len(blob) / dt_d / 1e6, 1)))
         rows.append((f"codec_bpp_{name}", 0.0, round(len(blob) / n_params, 4)))
+    return rows
+
+
+def scenario_table():
+    """Async T-FedAvg on the paper MLP under realistic fleet scenarios:
+    always-on vs diurnal churn vs 1% packet loss vs both (README table)."""
+    from benchmarks.common import SMOKE, mlp_task
+    from repro.comm import ChannelConfig
+    from repro.data import partition_iid
+    from repro.fed import AvailabilityConfig, FedConfig, run_federated
+    from repro.models.paper_models import mlp_mnist
+    from repro.optim import adam
+
+    x, y, params, eval_fn = mlp_task(seed=0, n_train=1500, n_test=400)
+    clients = partition_iid(x, y, 10)
+    rounds = 3 if SMOKE else 20
+    diurnal = AvailabilityConfig(kind="diurnal", period_s=120.0, floor=0.2,
+                                 n_cohorts=4)
+    lossy = ChannelConfig(loss_rate=0.01, chunk_bytes=4096)
+    scenarios = {
+        "alwayson": dict(),
+        "diurnal": dict(availability=diurnal),
+        "loss1pct": dict(channel=lossy),
+        "churn_loss": dict(availability=diurnal, channel=lossy,
+                           max_staleness=4),
+    }
+    rows = []
+    for name, kw in scenarios.items():
+        cfg = FedConfig(algorithm="tfedavg", mode="async", participation=0.5,
+                        local_epochs=1 if SMOKE else 2, batch_size=32,
+                        rounds=rounds, buffer_k=3, seed=0, **kw)
+        res = run_federated(mlp_mnist, params, clients, cfg, adam(2e-3),
+                            eval_fn, eval_every=rounds)
+        rows.append((f"scenario_{name}_acc", 0.0, round(res.accuracy[-1], 4)))
+        rows.append((f"scenario_{name}_upMB", 0.0,
+                     round(res.upload_bytes / 1e6, 3)))
+        rows.append((f"scenario_{name}_time", 0.0,
+                     round(res.total_time_s, 2)))
+        rows.append((f"scenario_{name}_goodput", 0.0,
+                     round(res.telemetry["goodput_fraction"], 4)))
     return rows

@@ -1,0 +1,125 @@
+"""CI bench regression gate.
+
+Compares the smoke-mode bench records the CI job just produced
+(``BENCH_aggregate.json`` / ``BENCH_encode.json`` in the repo root)
+against the committed baselines in ``benchmarks/baselines/`` and fails on
+a >THRESHOLD× slowdown of any timing metric (keys ending in ``_s``), or on
+a metric that silently disappeared from the record.
+
+    PYTHONPATH=src python -m benchmarks.run --only aggregate,encode --smoke
+    python benchmarks/check_regression.py              # gate (exit 1 = fail)
+    python benchmarks/check_regression.py --update     # re-baseline
+
+CI-runner noise swamps microsecond effects, so the gate is deliberately
+coarse: 2× on wall-clock smoke timings catches real structural regressions
+(a kernel falling back to the reference path, an accidental O(C) retrace)
+while shrugging off runner jitter. ``BENCH_*.json`` records in the repo
+root remain the human-readable perf trajectory; the ``baselines/`` copies
+exist only for this gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
+RECORDS = ("BENCH_aggregate.json", "BENCH_encode.json")
+THRESHOLD = 2.0
+# Sub-5ms timings are runner-speed lottery (a dev-machine baseline vs a CI
+# runner can legitimately differ >2x at the 100µs scale); the structural
+# regressions this gate exists for — a kernel falling back to the
+# reference path, an accidental retrace — all show up in the 10ms–10s
+# metrics, so only those are gated.
+MIN_SECONDS = 5e-3
+
+
+def _is_seconds_key(k: str) -> bool:
+    # '..._s' names a wall-clock duration; '..._per_s' / '..._gb_s' are
+    # throughputs (higher = better) and must NOT be gated as slowdowns.
+    return k.endswith("_s") and not (k.endswith("per_s") or k.endswith("gb_s"))
+
+
+def _timing_leaves(obj, prefix=""):
+    """Flatten {path: seconds} for every numeric leaf whose key ends '_s'."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, (dict, list)):
+                out.update(_timing_leaves(v, p))
+            elif isinstance(v, (int, float)) and _is_seconds_key(str(k)):
+                out[p] = float(v)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(_timing_leaves(v, f"{prefix}[{i}]"))
+    return out
+
+
+def check(threshold: float = THRESHOLD) -> int:
+    failures = []
+    compared = 0
+    for name in RECORDS:
+        cur_path = ROOT / name
+        base_path = BASELINE_DIR / name
+        if not base_path.exists():
+            print(f"[gate] no baseline for {name} — run with --update first")
+            return 1
+        if not cur_path.exists():
+            failures.append(f"{name}: record missing (bench did not run?)")
+            continue
+        base = _timing_leaves(json.loads(base_path.read_text()))
+        cur = _timing_leaves(json.loads(cur_path.read_text()))
+        for key, b in sorted(base.items()):
+            if b < MIN_SECONDS:
+                continue
+            if key not in cur:
+                failures.append(f"{name}:{key}: metric vanished from record")
+                continue
+            ratio = cur[key] / b
+            compared += 1
+            marker = "REGRESSION" if ratio > threshold else "ok"
+            print(f"[gate] {name}:{key}: {b:.4g}s -> {cur[key]:.4g}s "
+                  f"({ratio:.2f}x) {marker}")
+            if ratio > threshold:
+                failures.append(
+                    f"{name}:{key}: {ratio:.2f}x slower "
+                    f"({b:.4g}s -> {cur[key]:.4g}s, threshold {threshold}x)"
+                )
+    if failures:
+        print(f"\n[gate] FAIL — {len(failures)} regression(s):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\n[gate] OK — {compared} timing metrics within {threshold}x "
+          "of baseline")
+    return 0
+
+
+def update() -> int:
+    BASELINE_DIR.mkdir(exist_ok=True)
+    for name in RECORDS:
+        cur = ROOT / name
+        if not cur.exists():
+            print(f"[gate] cannot re-baseline: {cur} missing")
+            return 1
+        shutil.copyfile(cur, BASELINE_DIR / name)
+        print(f"[gate] baselined {name}")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="copy the current records over the baselines")
+    ap.add_argument("--threshold", type=float, default=THRESHOLD)
+    args = ap.parse_args()
+    sys.exit(update() if args.update else check(args.threshold))
+
+
+if __name__ == "__main__":
+    main()

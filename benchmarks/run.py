@@ -21,6 +21,7 @@ from benchmarks import (
 SECTIONS = {
     "wire": bench_wire.wire_codec,
     "codecs": bench_wire.codec_table,
+    "scenario": bench_wire.scenario_table,
     "aggregate": bench_aggregate.fused_aggregation,
     "encode": bench_encode.fused_encode,
     "table2": bench_tables.table2_iid_accuracy,

@@ -7,6 +7,8 @@ channel model. ``--mode async`` runs the buffered-asynchronous server.
     PYTHONPATH=src python examples/federated_training.py --noniid 2
     PYTHONPATH=src python examples/federated_training.py --mode async --buffer-k 3
     PYTHONPATH=src python examples/federated_training.py --deadline 0.3
+    PYTHONPATH=src python examples/federated_training.py --mode async \\
+        --availability diurnal --loss-rate 0.01 --max-staleness 4
 """
 
 import argparse
@@ -19,7 +21,7 @@ from repro.core import FTTQConfig
 from repro.data import (
     partition_iid, partition_noniid, synthetic_classification,
 )
-from repro.fed import FedConfig, run_federated
+from repro.fed import AvailabilityConfig, FedConfig, run_federated
 from repro.models.paper_models import init_mlp_mnist, mlp_mnist
 from repro.optim import adam
 
@@ -40,6 +42,18 @@ def main():
                     help="sync-only round deadline in seconds (0 = none); "
                          "slow clients become emergent stragglers. The async "
                          "server has no barrier, so no deadline applies.")
+    # --- scenario layer ---------------------------------------------------
+    ap.add_argument("--availability", choices=("always_on", "diurnal", "trace"),
+                    default="always_on",
+                    help="client availability trace (diurnal = sinusoidal "
+                         "timezone cohorts, trace = seeded on/off sessions)")
+    ap.add_argument("--loss-rate", type=float, default=0.0,
+                    help="per-chunk packet loss probability; lost chunks "
+                         "retransmit with timeout backoff and are metered")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="async: drop updates staler than this (0 = no cap)")
+    ap.add_argument("--adaptive-buffer", action="store_true",
+                    help="async: auto-tune buffer_k from the arrival rate")
     args = ap.parse_args()
     if args.mode == "async" and args.deadline > 0:
         ap.error("--deadline applies to --mode sync only "
@@ -64,7 +78,9 @@ def main():
     chan = ChannelConfig(
         mean_bandwidth_bytes_s=args.bandwidth_mbps * 1e6 / 8,
         deadline_s=args.deadline if args.deadline > 0 else float("inf"),
+        loss_rate=args.loss_rate,
     )
+    avail = AvailabilityConfig(kind=args.availability)
     print(f"{'algo':10s} {'acc':>7s} {'upload':>10s} {'download':>10s} "
           f"{'sim-time':>9s} {'p95-xfer':>9s}")
     results = {}
@@ -73,7 +89,9 @@ def main():
                         participation=args.participation,
                         local_epochs=2, batch_size=32, rounds=args.rounds,
                         fttq=FTTQConfig(), channel=chan,
-                        buffer_k=args.buffer_k)
+                        buffer_k=args.buffer_k, availability=avail,
+                        max_staleness=args.max_staleness,
+                        adaptive_buffer=args.adaptive_buffer)
         res = run_federated(mlp_mnist, params, clients, cfg, adam(1e-3),
                             eval_fn, eval_every=args.rounds)
         results[algo] = res
@@ -84,6 +102,18 @@ def main():
         if res.dropped_per_round and sum(res.dropped_per_round):
             print(f"{'':10s} stragglers dropped per round: "
                   f"{res.dropped_per_round}")
+        tel = res.telemetry
+        if tel.get("retrans_bytes") or tel.get("dropped_updates"):
+            # sync drops stragglers at the deadline; async drops over-stale
+            # arrivals whose bytes were already paid for.
+            what = "stale" if args.mode == "async" else "straggler"
+            print(f"{'':10s} scenario: retrans "
+                  f"{tel.get('retrans_bytes', 0) / 1e3:.1f}kB "
+                  f"(goodput {tel.get('goodput_fraction', 1.0):.3f}), "
+                  f"{what}-dropped {tel.get('dropped_updates', 0)} "
+                  f"({tel.get('dropped_update_bytes', 0) / 1e3:.1f}kB wasted)")
+        if args.adaptive_buffer and tel.get("buffer_k_per_agg"):
+            print(f"{'':10s} buffer_k trajectory: {tel['buffer_k_per_agg']}")
     r = results["fedavg"].upload_bytes / results["tfedavg"].upload_bytes
     t = results["fedavg"].total_time_s / max(results["tfedavg"].total_time_s, 1e-9)
     print(f"\ncommunication compression: {r:.1f}×  wall-clock speedup: {t:.1f}×  "

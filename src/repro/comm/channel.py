@@ -19,6 +19,21 @@ server's capacity (each still capped by its own client link), so a
 broadcast to N clients through a saturated NIC takes ~N× longer than a
 single download — the shared-bottleneck effect a per-link model misses.
 The default cap is infinite, which reduces exactly to independent links.
+``transfer_timed`` applies the same NIC cap to event-driven ASYNC uploads:
+transfers registered with absolute start times degrade each other's rate
+by their overlap count, so a burst of simultaneous async arrivals shares
+the server ingress instead of each enjoying the full pipe.
+
+Lossy links (``loss_rate`` > 0): a transfer moves in ``chunk_bytes``
+chunks, each lost independently with probability ``loss_rate`` and
+retransmitted after a timeout with exponential backoff until it lands.
+Retransmissions cost real wire bytes and real seconds; the ledger keeps
+*goodput* (``TransferEvent.nbytes``, the payload the receiver decodes) and
+*overhead* (``TransferEvent.retrans_bytes``) separate, so effective
+goodput under loss reads directly out of ``summary()``. With
+``loss_rate == 0`` no loss randomness is drawn at all — byte counts,
+times, AND the rng stream are identical to the loss-free model, so seeded
+runs reproduce bit-exactly.
 """
 
 from __future__ import annotations
@@ -47,7 +62,15 @@ class ChannelConfig:
       server_bandwidth_bytes_s: total server NIC capacity shared by
         SIMULTANEOUS transfers (0 or inf → no shared bottleneck, like
         ``deadline_s``). Applied by ``transfer_concurrent`` with max-min
-        fairness.
+        fairness and by ``transfer_timed`` via overlap counting.
+      loss_rate: per-chunk Bernoulli loss probability (0 → lossless and
+        rng-stream-identical to the pre-loss model).
+      chunk_bytes: loss granularity — payloads move as ceil(n/chunk)
+        chunks, each lost/retransmitted independently.
+      retransmit_timeout_s: wait before the first retransmission of a lost
+        chunk; consecutive losses of the same chunk back off by
+        ``retransmit_backoff``×.
+      retransmit_backoff: exponential backoff factor (≥ 1).
     """
 
     mean_bandwidth_bytes_s: float = 1e6
@@ -57,6 +80,10 @@ class ChannelConfig:
     deadline_s: float = float("inf")
     compute_speed_sigma: float = 0.3
     server_bandwidth_bytes_s: float = float("inf")
+    loss_rate: float = 0.0
+    chunk_bytes: int = 64 * 1024
+    retransmit_timeout_s: float = 0.05
+    retransmit_backoff: float = 2.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,12 +101,19 @@ class ClientLink:
 
 @dataclasses.dataclass
 class TransferEvent:
-    """Log entry for one wire transfer (used by FedResult.transfer_log)."""
+    """Log entry for one wire transfer (used by FedResult.transfer_log).
+
+    ``nbytes`` is GOODPUT — the payload the receiver decodes; lost-chunk
+    retransmissions add ``retrans_bytes`` of overhead on top (``retries``
+    chunk retransmissions), all inside ``seconds``.
+    """
 
     client_id: int
     direction: str  # "down" | "up"
     nbytes: int
     seconds: float
+    retrans_bytes: int = 0
+    retries: int = 0
 
 
 def _fair_share_completion(
@@ -156,12 +190,54 @@ class Channel:
         ]
         self._rng = rng
         self.log: list[TransferEvent] = []
+        # in-flight (data_start, data_end) windows per direction, used by
+        # ``transfer_timed`` for the async-upload overlap count. Only
+        # populated when the NIC cap is finite.
+        self._inflight: dict[str, list[tuple[float, float]]] = {}
+
+    # -- loss / retransmission --------------------------------------------
+
+    def _loss_penalty(self, nbytes: int) -> tuple[int, float, int]:
+        """(retrans_bytes, timeout_delay_s, retries) for one transfer.
+
+        Chunked Bernoulli loss: each of the ceil(n/chunk) chunks needs a
+        geometric number of transmissions; every failed attempt of a chunk
+        waits ``retransmit_timeout_s`` growing by ``retransmit_backoff``×.
+        Draws NOTHING when loss is off — the rng stream (and therefore any
+        seeded run) is identical to the pre-loss channel.
+        """
+        p = self.cfg.loss_rate
+        if p <= 0.0 or nbytes == 0:
+            return 0, 0.0, 0
+        if not p < 1.0:
+            raise ValueError(f"loss_rate must be < 1, got {p}")
+        chunk = max(1, int(self.cfg.chunk_bytes))
+        n_chunks = (nbytes + chunk - 1) // chunk
+        sizes = np.full(n_chunks, chunk, dtype=np.int64)
+        sizes[-1] = nbytes - chunk * (n_chunks - 1)
+        # transmissions per chunk ~ Geometric(success = 1-p), support ≥ 1
+        tx = self._rng.geometric(1.0 - p, size=n_chunks)
+        extra = tx - 1
+        retrans_bytes = int(np.sum(extra * sizes))
+        retries = int(extra.sum())
+        if retries == 0:
+            return 0, 0.0, 0
+        t0, b = self.cfg.retransmit_timeout_s, self.cfg.retransmit_backoff
+        if b == 1.0:
+            delay = t0 * retries
+        else:
+            # per chunk: t0·(b^extra − 1)/(b − 1), summed over chunks
+            delay = float(t0 * np.sum((b ** extra[extra > 0] - 1.0) / (b - 1.0)))
+        return retrans_bytes, delay, retries
 
     def transfer(self, client_id: int, nbytes: int, direction: str) -> float:
         """Seconds to move ``nbytes`` over this client's link (logged)."""
         jitter = float(self._rng.uniform(0.0, self.cfg.latency_jitter_s))
-        dt = self.links[client_id].transfer_time(nbytes, jitter)
-        self.log.append(TransferEvent(client_id, direction, nbytes, dt))
+        retrans, delay, retries = self._loss_penalty(nbytes)
+        dt = self.links[client_id].transfer_time(nbytes + retrans, jitter) + delay
+        self.log.append(
+            TransferEvent(client_id, direction, nbytes, dt, retrans, retries)
+        )
         return dt
 
     def transfer_concurrent(
@@ -171,24 +247,79 @@ class Channel:
 
         Each flow starts after its own link latency (+jitter), then the data
         phases share ``cfg.server_bandwidth_bytes_s`` max-min fairly, each
-        flow still capped by its client link. Per-client times are logged
-        and returned in ``client_ids`` order. With an infinite server cap
-        this is numerically identical to N independent ``transfer`` calls.
+        flow still capped by its client link; lost chunks re-enter the pipe
+        (wire bytes = goodput + retransmissions) and their timeouts extend
+        the flow. Per-client times are logged and returned in
+        ``client_ids`` order. With an infinite server cap and no loss this
+        is numerically identical to N independent ``transfer`` calls.
         """
         jitters = [
             float(self._rng.uniform(0.0, self.cfg.latency_jitter_s))
             for _ in client_ids
         ]
+        penalties = [self._loss_penalty(b) for b in nbytes]
         starts = [self.links[k].latency_s + j for k, j in zip(client_ids, jitters)]
         caps = [self.links[k].bandwidth_bytes_s for k in client_ids]
+        wire = [b + pen[0] for b, pen in zip(nbytes, penalties)]
         # 0-or-inf = uncapped, matching the deadline_s convention above
         nic = self.cfg.server_bandwidth_bytes_s
         done = _fair_share_completion(
-            starts, nbytes, caps, nic if nic > 0 else float("inf")
+            starts, wire, caps, nic if nic > 0 else float("inf")
         )
-        for k, b, dt in zip(client_ids, nbytes, done):
-            self.log.append(TransferEvent(k, direction, b, dt))
+        done = [d + pen[1] for d, pen in zip(done, penalties)]
+        for k, b, dt, pen in zip(client_ids, nbytes, done, penalties):
+            self.log.append(TransferEvent(k, direction, b, dt, pen[0], pen[2]))
         return done
+
+    def transfer_timed(self, client_id: int, nbytes: int, start_s: float,
+                       direction: str, *, now_s: float | None = None) -> float:
+        """One transfer STARTING at absolute simulated time ``start_s``,
+        contending with other in-flight ``transfer_timed`` flows in the
+        same direction for the server NIC (async-upload contention).
+
+        Event-driven servers discover transfers one at a time, so the exact
+        fluid solution is not computable at dispatch; instead the flow's
+        rate is degraded by its overlap count — rate = min(link,
+        NIC / (1 + #overlapping flows)), iterated to a fixed point — which
+        captures the burst-of-arrivals slowdown while staying causal.
+        ``now_s`` is the caller's event clock (non-decreasing across calls;
+        defaults to ``start_s``): flows finished before it are pruned, so
+        pass it when transfer start times may arrive out of order. With an
+        infinite NIC cap and no loss this is numerically identical to
+        ``transfer``. Returns the DURATION from ``start_s`` to completion
+        (logged).
+        """
+        jitter = float(self._rng.uniform(0.0, self.cfg.latency_jitter_s))
+        retrans, delay, retries = self._loss_penalty(nbytes)
+        link = self.links[client_id]
+        wire = nbytes + retrans
+        nic = self.cfg.server_bandwidth_bytes_s
+        if nic <= 0 or nic == float("inf"):
+            # bit-identical to ``transfer`` (same float expression), so an
+            # uncapped async run reproduces the per-link model exactly.
+            dt = link.transfer_time(wire, jitter) + delay
+            self.log.append(
+                TransferEvent(client_id, direction, nbytes, dt, retrans, retries)
+            )
+            return dt
+        data_start = start_s + link.latency_s + jitter
+        flows = self._inflight.setdefault(direction, [])
+        # the event clock is non-decreasing: flows already finished by now
+        # can never overlap this or any later transfer.
+        prune_t = now_s if now_s is not None else data_start
+        flows[:] = [f for f in flows if f[1] > prune_t]
+        dur = wire / min(link.bandwidth_bytes_s, nic)
+        for _ in range(2):  # fixed point on the overlap count
+            end = data_start + dur
+            overlap = sum(1 for s, e in flows if s < end and e > data_start)
+            rate = min(link.bandwidth_bytes_s, nic / (1 + overlap))
+            dur = wire / rate
+        flows.append((data_start, data_start + dur))
+        dt = (data_start + dur + delay) - start_s
+        self.log.append(
+            TransferEvent(client_id, direction, nbytes, dt, retrans, retries)
+        )
+        return dt
 
     def compute_time(self, client_id: int, n_examples: int,
                      nominal_examples_per_s: float = 5000.0) -> float:
@@ -196,15 +327,23 @@ class Channel:
         return n_examples / (nominal_examples_per_s * self.links[client_id].compute_speed)
 
     def summary(self) -> dict:
-        """Aggregate transfer statistics for reporting."""
+        """Aggregate transfer statistics for reporting. ``total_bytes`` is
+        goodput; retransmission overhead is reported separately so the
+        effective-goodput fraction under loss is a one-line division."""
         if not self.log:
             return {"n_transfers": 0, "total_bytes": 0, "total_seconds": 0.0,
-                    "mean_seconds": 0.0, "p95_seconds": 0.0}
+                    "mean_seconds": 0.0, "p95_seconds": 0.0,
+                    "retrans_bytes": 0, "retries": 0, "goodput_fraction": 1.0}
         secs = np.array([e.seconds for e in self.log])
+        goodput = int(sum(e.nbytes for e in self.log))
+        retrans = int(sum(e.retrans_bytes for e in self.log))
         return {
             "n_transfers": len(self.log),
-            "total_bytes": int(sum(e.nbytes for e in self.log)),
+            "total_bytes": goodput,
             "total_seconds": float(secs.sum()),
             "mean_seconds": float(secs.mean()),
             "p95_seconds": float(np.percentile(secs, 95)),
+            "retrans_bytes": retrans,
+            "retries": int(sum(e.retries for e in self.log)),
+            "goodput_fraction": goodput / max(goodput + retrans, 1),
         }

@@ -1,0 +1,94 @@
+"""JAX cross-version shims (0.4.x ↔ ≥0.5 API drift).
+
+The mesh/shard_map surface moved between JAX releases: ≥0.5 exposes
+``jax.shard_map(..., axis_names=..., check_vma=...)`` and the
+``jax.set_mesh`` context, while 0.4.x has
+``jax.experimental.shard_map.shard_map(..., auto=..., check_rep=...)`` and
+the legacy ``with mesh:`` resource context. Every call site in this repo
+(and its tests) goes through these wrappers so the same code runs on both.
+
+  - ``shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+    check_vma=False)`` — the ≥0.5 calling convention. On 0.4.x,
+    ``axis_names`` translates to ``auto`` (the complement over the mesh
+    axes), ``check_vma`` to ``check_rep``, and a ``None`` mesh falls back
+    to the mesh installed by ``set_mesh``.
+  - ``set_mesh(mesh)`` — context manager; delegates to ``jax.set_mesh``
+    when present, else records the active mesh for ``shard_map`` and
+    enters the legacy mesh resource context.
+  - ``cost_analysis(compiled)`` — ``Compiled.cost_analysis()`` returned a
+    one-element list on 0.4.x and a dict on ≥0.5; always returns the dict.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_ACTIVE_MESH: list = []  # stack of meshes installed by the 0.4.x set_mesh
+
+
+def _fallback_mesh(mesh):
+    if mesh is not None:
+        return mesh
+    if _ACTIVE_MESH:
+        return _ACTIVE_MESH[-1]
+    raise ValueError(
+        "shard_map needs a mesh: pass mesh=... or enter repro.compat.set_mesh"
+    )
+
+
+if hasattr(jax, "shard_map"):  # ≥ 0.5: the new API, passed through
+
+    def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+                  check_vma=False):
+        kw = dict(in_specs=in_specs, out_specs=out_specs, check_vma=check_vma)
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+
+else:  # 0.4.x: experimental shard_map with auto/check_rep spelling
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+                  check_vma=False):
+        m = _fallback_mesh(mesh)
+        kw = dict(mesh=m, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=bool(check_vma))
+        if axis_names is not None:
+            auto = frozenset(m.axis_names) - set(axis_names)
+            if auto:
+                kw["auto"] = auto
+        return _legacy_shard_map(f, **kw)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``with set_mesh(mesh):`` — the ≥0.5 ``jax.set_mesh`` everywhere."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    _ACTIVE_MESH.append(mesh)
+    try:
+        with mesh:  # legacy resource-env context (harmless under jit)
+            yield mesh
+    finally:
+        _ACTIVE_MESH.pop()
+
+
+def axis_size(name) -> int:
+    """``jax.lax.axis_size`` (≥0.5); on 0.4.x the constant-folded psum(1)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict on every JAX version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)

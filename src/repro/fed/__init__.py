@@ -5,6 +5,14 @@ event-driven buffered-asynchronous server (FedBuf-style). ``run_federated``
 is the unified entry point; ``cfg.mode`` picks "sync" or "async"."""
 
 from repro.fed.aggregator import Aggregator
+from repro.fed.availability import (
+    AlwaysOn,
+    AvailabilityConfig,
+    ClientAvailability,
+    DiurnalChurn,
+    TraceReplay,
+    make_availability,
+)
 from repro.fed.async_server import run_federated_async
 from repro.fed.simulation import (
     FedConfig,
@@ -16,4 +24,6 @@ from repro.fed.simulation import (
 __all__ = [
     "Aggregator", "FedConfig", "FedResult",
     "run_federated", "run_federated_sync", "run_federated_async",
+    "AvailabilityConfig", "ClientAvailability", "AlwaysOn", "DiurnalChurn",
+    "TraceReplay", "make_availability",
 ]

@@ -120,8 +120,20 @@ class Aggregator:
         self._n_clients = 0
         self._total_weight = 0.0
         self.peak_intermediate_bytes = 0
+        # drop-path ledger: updates the server PAID wire bytes for but chose
+        # not to fold in (staleness cap, policy drops). Cumulative across
+        # resets — it is run-level waste accounting, not per-mix state.
+        self.dropped_updates = 0
+        self.dropped_bytes = 0
 
     # -- ingest ------------------------------------------------------------
+
+    def note_dropped(self, nbytes: int) -> None:
+        """Record one received-but-discarded update (e.g. past the async
+        staleness cap): its wire bytes were spent, its weights never enter
+        the mean. Feeds the scenario telemetry's waste accounting."""
+        self.dropped_updates += 1
+        self.dropped_bytes += int(nbytes)
 
     def add(self, blob: bytes, weight: float) -> None:
         """Decode one client's wire buffer (zero-copy) and buffer/accumulate

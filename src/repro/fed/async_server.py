@@ -7,7 +7,14 @@ the throughput ceiling, so this server removes it:
   - ``max_concurrency`` clients are always in flight. Each one downloads
     the current global model (serialized through ``repro.comm.wire``),
     trains locally, and uploads; its arrival time is download + compute +
-    upload from the ``repro.comm.channel`` model.
+    upload from the ``repro.comm.channel`` model. Uploads go through
+    ``Channel.transfer_timed``, so simultaneous async arrivals contend for
+    the server NIC instead of each enjoying the full pipe.
+  - Refill draws sample from the clients ONLINE at dispatch time
+    (``FedConfig.availability`` — diurnal churn, trace replay, or the
+    always-on fleet, which reproduces pre-scenario runs bit-exactly). If
+    nobody is reachable, simulated time advances to the next availability
+    change before dispatching.
   - Arrivals are processed from an event queue in simulated-time order.
     The server BUFFERS them and aggregates every ``buffer_k`` arrivals —
     never blocking on any individual client.
@@ -18,6 +25,16 @@ the throughput ceiling, so this server removes it:
         θ ← (1-η)·θ + η·Σ ŵ_i·θ_i .
     With fresh updates (staleness 0), η = 1 and K = concurrency this
     reduces exactly to the synchronous weighted average.
+  - A hard staleness cap (``max_staleness``, 0 = off) bounds how old an
+    update may be: past the cap it is DROPPED (``staleness_policy="drop"``
+    — its bytes were still paid for and are accounted as waste) or
+    down-weighted by an extra ``(1+excess)^(-α)`` factor ("downweight").
+  - ``adaptive_buffer`` turns the fixed ``buffer_k`` into a controller:
+    an EWMA of inter-arrival gaps estimates the arrival rate and
+    ``buffer_k ← clamp(round(target_mix_latency_s / gap), 1, concurrency)``
+    retunes after every mix, holding the time-per-aggregation near the
+    target as churn moves the arrival rate. ``target_mix_latency_s = 0``
+    locks the target to the initial K's observed latency on first mix.
 
 Bytes are measured from the serialized buffers on both directions; transfer
 times are logged per client, so the async-vs-sync comparison reads out in
@@ -32,7 +49,9 @@ ACROSS mixes (``finalize(reset=True)`` every ``buffer_k`` arrivals), so
 asymmetric up/down codecs meter correctly, the buffer is never expanded to
 per-client dense trees, and nothing is re-allocated per aggregation
 (``cfg.fused_aggregation=False`` restores the reference dequant loop over
-a buffered blob list).
+a buffered blob list). Per-mix telemetry — staleness histogram, dropped /
+retransmitted bytes, the buffer_k trajectory — lands in
+``FedResult.telemetry``.
 """
 
 from __future__ import annotations
@@ -47,12 +66,12 @@ from repro.comm import Channel
 from repro.comm.wire import decode_update
 from repro.data.federated import ClientDataset
 from repro.fed.aggregator import Aggregator
+from repro.fed.availability import draw_one, draw_participants, make_availability
 from repro.fed.simulation import (
     FedConfig,
     FedResult,
     _make_local_steps,
     broadcast_blob,
-    client_round_time,
     dequantize_tree,
     receive_broadcast,
     train_client,
@@ -110,12 +129,19 @@ def run_federated_async(
     rng = np.random.default_rng(cfg.seed)
     fp_step, qat_step = _make_local_steps(apply_fn, optimizer, cfg)
     channel = Channel(cfg.channel, len(clients), seed=cfg.seed + 1)
+    avail = make_availability(cfg.availability, len(clients), seed=cfg.seed)
 
     n_conc = cfg.max_concurrency or max(
         int(np.ceil(cfg.participation * len(clients))), 1
     )
     n_conc = min(n_conc, len(clients))
     buffer_k = max(1, min(cfg.buffer_k, n_conc))
+    max_stale = cfg.max_staleness if cfg.max_staleness > 0 else float("inf")
+    if cfg.staleness_policy not in ("drop", "downweight"):
+        raise ValueError(
+            f"unknown staleness_policy {cfg.staleness_policy!r} "
+            "(expected 'drop' or 'downweight')"
+        )
 
     version = 0
     up_bytes = 0
@@ -130,7 +156,15 @@ def run_federated_async(
     n_buffered = 0
     acc_hist, loss_hist = [], []
     agg_times, staleness_hist, parts_hist = [], [], []
+    # drop-path ledger for the reference (non-fused) path; the fused path
+    # books waste on the long-lived Aggregator itself (note_dropped).
+    dropped_updates = 0
+    dropped_update_bytes = 0
     last_agg_t = 0.0
+    # adaptive buffer_k controller state: EWMA of inter-arrival gaps.
+    ewma_gap: float | None = None
+    last_arrival = 0.0
+    auto_target = 0.0             # resolved target when target_mix_latency_s=0
 
     # the broadcast only changes when an aggregation bumps `version`, so
     # serialize (requantize + encode) and decode once per version, not per
@@ -144,23 +178,55 @@ def run_federated_async(
             blob_cache["version"] = version
         return blob_cache["blob"], blob_cache["params"]
 
-    def dispatch(k: int, t0: float) -> None:
-        """Send the CURRENT global to client k; enqueue its arrival."""
+    def dispatch(k: int, t0: float, clock: float | None = None) -> None:
+        """Send the CURRENT global to client k; enqueue its arrival.
+
+        ``clock`` is the event-loop pop time (monotonic across dispatches)
+        — the safe prune horizon for the NIC contention window. ``t0`` may
+        run ahead of it when an empty fleet forced a wait.
+        """
         nonlocal seq, down_bytes
         blob, start_params = current_broadcast()
         down_bytes += len(blob)
         up_blob = train_client(
             clients[k], start_params, cfg, optimizer, fp_step, qat_step, rng
         )
-        total = client_round_time(
-            channel, k, len(blob), len(up_blob), len(clients[k]) * cfg.local_epochs
+        t_down = channel.transfer(k, len(blob), "down")
+        t_comp = channel.compute_time(k, len(clients[k]) * cfg.local_epochs)
+        # async uploads share the server NIC: the upload's absolute start
+        # time lets in-flight arrivals degrade each other's rate.
+        t_up = channel.transfer_timed(
+            k, len(up_blob), t0 + t_down + t_comp, "up",
+            now_s=t0 if clock is None else clock,
         )
+        total = t_down + t_comp + t_up
         heapq.heappush(events, (t0 + total, seq, k, up_blob, version))
         seq += 1
 
-    start = rng.choice(len(clients), size=n_conc, replace=False)
+    def refill(now: float) -> None:
+        """Dispatch one ONLINE client; advance time if nobody is reachable.
+        The availability clock ``t`` may run ahead of ``now``, but pending
+        heap events can still pop before it — so ``now`` (monotonic across
+        refills) stays the channel's prune horizon."""
+        t = now
+        while True:
+            k = draw_one(avail, t, len(clients), rng)
+            if k >= 0:
+                dispatch(k, t, clock=now)
+                return
+            t = avail.next_change(t)
+            if not np.isfinite(t):
+                raise RuntimeError("no client is ever available")
+
+    t0 = 0.0
+    start = draw_participants(avail, t0, n_conc, len(clients), rng)
+    while start.size == 0:
+        t0 = avail.next_change(t0)
+        if not np.isfinite(t0):
+            raise RuntimeError("no client is ever available")
+        start = draw_participants(avail, t0, n_conc, len(clients), rng)
     for k in start:
-        dispatch(int(k), 0.0)
+        dispatch(int(k), t0, clock=0.0)
 
     while version < cfg.rounds:
         if not events:  # pragma: no cover - dispatch() always refills
@@ -168,13 +234,31 @@ def run_federated_async(
         now, _, k, up_blob, born = heapq.heappop(events)
         up_bytes += len(up_blob)
         staleness = version - born
-        weight = len(clients[k]) * (1.0 + staleness) ** (-cfg.staleness_exponent)
-        if agg is not None:
-            agg.add(up_blob, weight=weight)  # streams into the live aggregator
-        else:
-            buffered.append((weight, up_blob))  # decoded in the reference mix
-        n_buffered += 1
         staleness_hist.append(staleness)
+        gap = now - last_arrival
+        last_arrival = now
+        ewma_gap = gap if ewma_gap is None else 0.8 * ewma_gap + 0.2 * gap
+
+        if staleness > max_stale and cfg.staleness_policy == "drop":
+            # the bytes were transferred and paid for; the update is waste.
+            if agg is not None:
+                agg.note_dropped(len(up_blob))
+            else:
+                dropped_updates += 1
+                dropped_update_bytes += len(up_blob)
+        else:
+            weight = len(clients[k]) * (
+                (1.0 + staleness) ** (-cfg.staleness_exponent)
+            )
+            if staleness > max_stale:  # "downweight": extra excess discount
+                weight *= (1.0 + staleness - max_stale) ** (
+                    -cfg.staleness_exponent
+                )
+            if agg is not None:
+                agg.add(up_blob, weight=weight)  # streams into the aggregator
+            else:
+                buffered.append((weight, up_blob))
+            n_buffered += 1
 
         if n_buffered >= buffer_k:
             global_params = _weighted_mix(
@@ -186,16 +270,42 @@ def run_federated_async(
             parts_hist.append(buffer_k)
             agg_times.append(now - last_agg_t)
             last_agg_t = now
+            if cfg.adaptive_buffer and ewma_gap and ewma_gap > 0:
+                target = cfg.target_mix_latency_s
+                if target <= 0:
+                    if auto_target == 0.0:  # lock the initial K's latency
+                        auto_target = ewma_gap * buffer_k
+                    target = auto_target
+                buffer_k = int(np.clip(round(target / ewma_gap), 1, n_conc))
             if version % eval_every == 0 or version == cfg.rounds:
                 acc, ls = eval_fn(global_params)
                 acc_hist.append(float(acc))
                 loss_hist.append(float(ls))
 
-        # keep the fleet saturated: replace the arrival with a fresh client
-        # (sampled uniformly — fleet churn), carrying the newest global.
+        # keep the fleet saturated: replace the arrival with a fresh ONLINE
+        # client, carrying the newest global.
         if version < cfg.rounds:
-            dispatch(int(rng.integers(len(clients))), now)
+            refill(now)
 
+    summary = channel.summary()
+    if agg is not None:  # the fused path's waste ledger lives on the agg
+        dropped_updates, dropped_update_bytes = (
+            agg.dropped_updates, agg.dropped_bytes
+        )
+    telemetry = {
+        "staleness_hist": np.bincount(
+            np.asarray(staleness_hist, dtype=np.int64)
+        ).tolist() if staleness_hist else [],
+        "dropped_updates": dropped_updates,
+        "dropped_update_bytes": dropped_update_bytes,
+        # every mix fires at exactly buffer_k accepted arrivals, so the
+        # participants history IS the adaptive-K trajectory.
+        "buffer_k_per_agg": parts_hist,
+        "retrans_bytes": summary.get("retrans_bytes", 0),
+        "retries": summary.get("retries", 0),
+        "goodput_fraction": summary.get("goodput_fraction", 1.0),
+        "availability": cfg.availability.kind,
+    }
     return FedResult(
         accuracy=acc_hist,
         loss=loss_hist,
@@ -205,6 +315,7 @@ def run_federated_async(
         participants_per_round=parts_hist,
         round_times=agg_times,
         dropped_per_round=[0] * version,
-        transfer_summary=channel.summary(),
+        transfer_summary=summary,
         staleness_per_agg=staleness_hist,
+        telemetry=telemetry,
     )

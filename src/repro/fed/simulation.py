@@ -49,6 +49,11 @@ from repro.core.tfedavg import (
 )
 from repro.data.federated import ClientDataset
 from repro.fed.aggregator import Aggregator
+from repro.fed.availability import (
+    AvailabilityConfig,
+    draw_participants,
+    make_availability,
+)
 from repro.optim import Optimizer
 
 Pytree = Any
@@ -86,6 +91,21 @@ class FedConfig:
     max_concurrency: int = 0            # in-flight clients (0 → ⌈λN⌉)
     staleness_exponent: float = 0.5     # arrival weight ∝ (1+staleness)^-α
     mixing_rate: float = 1.0            # η: global ← (1-η)·global + η·buffer avg
+    # --- scenario layer ---------------------------------------------------
+    # who is reachable when (always_on reproduces pre-scenario runs
+    # bit-exactly; "diurnal"/"trace" feed both servers' participant draws).
+    availability: AvailabilityConfig = dataclasses.field(
+        default_factory=AvailabilityConfig
+    )
+    # hard staleness cap for async arrivals (0 → no cap). Past the cap an
+    # update is dropped ("drop") or extra-discounted ("downweight").
+    max_staleness: int = 0
+    staleness_policy: str = "drop"
+    # adaptive buffer_k: retune K after every mix so the time between
+    # aggregations tracks target_mix_latency_s as arrival rates drift
+    # (0 → lock the target to the initial K's observed latency).
+    adaptive_buffer: bool = False
+    target_mix_latency_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -101,6 +121,9 @@ class FedResult:
     dropped_per_round: list = dataclasses.field(default_factory=list)
     transfer_summary: dict = dataclasses.field(default_factory=dict)
     staleness_per_agg: list = dataclasses.field(default_factory=list)
+    # scenario telemetry: staleness histogram, dropped/retransmitted bytes,
+    # adaptive buffer_k trajectory, availability kind (see the servers).
+    telemetry: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_time_s(self) -> float:
@@ -241,17 +264,6 @@ def train_client(
     return encode_update(payload)
 
 
-def client_round_time(
-    channel: Channel, k: int, down_nbytes: int, up_nbytes: int,
-    n_examples: int,
-) -> float:
-    """Simulated wall-clock for one client's full round trip."""
-    t_down = channel.transfer(k, down_nbytes, "down")
-    t_comp = channel.compute_time(k, n_examples)
-    t_up = channel.transfer(k, up_nbytes, "up")
-    return t_down + t_comp + t_up
-
-
 # --------------------------------------------------------------------------
 # Synchronous server (paper Algorithm 2).
 # --------------------------------------------------------------------------
@@ -270,17 +282,28 @@ def run_federated_sync(
     rng = np.random.default_rng(cfg.seed)
     fp_step, qat_step = _make_local_steps(apply_fn, optimizer, cfg)
     channel = Channel(cfg.channel, len(clients), seed=cfg.seed + 1)
+    avail = make_availability(cfg.availability, len(clients), seed=cfg.seed)
     deadline = cfg.channel.deadline_s if cfg.channel.deadline_s > 0 else float("inf")
 
     up_bytes = 0
     down_bytes = 0
+    dropped_blob_bytes = 0     # uploads that arrived past the deadline
     acc_hist, loss_hist, parts_hist = [], [], []
     round_times, dropped_hist = [], []
     n_sel = max(int(np.ceil(cfg.participation * len(clients))), 1)
+    t_now = 0.0                # cumulative simulated time (availability clock)
 
     for r in range(cfg.rounds):
-        # ---- selection --------------------------------------------------
-        selected = rng.choice(len(clients), size=n_sel, replace=False)
+        # ---- selection (from the clients ONLINE right now) --------------
+        wait_s = 0.0
+        selected = draw_participants(avail, t_now, n_sel, len(clients), rng)
+        while selected.size == 0:   # fleet empty: wait for the next arrival
+            t_next = avail.next_change(t_now + wait_s)
+            if not np.isfinite(t_next):
+                raise RuntimeError("no client is ever available")
+            wait_s = t_next - t_now
+            selected = draw_participants(avail, t_next, n_sel,
+                                         len(clients), rng)
 
         # ---- configuration (downstream broadcast, one serialized buffer) -
         blob = broadcast_blob(global_params, cfg)
@@ -319,6 +342,11 @@ def run_federated_sync(
         survivors = [a for a in arrivals if a[0] <= deadline]
         if not survivors:            # never lose a round: keep the fastest one
             survivors = [arrivals[0]]
+        # uploads that arrived but missed the barrier: paid-for waste.
+        # survivors is always a prefix of the time-sorted arrivals.
+        dropped_blob_bytes += sum(
+            len(a[2]) for a in arrivals[len(survivors):]
+        )
         n_dropped = len(pre) - len(survivors)
         dropped_hist.append(n_dropped)
         parts_hist.append(len(survivors))
@@ -327,8 +355,10 @@ def run_federated_sync(
         # all-dropped fallback, for the fastest client beyond it).
         last_survivor = max(a[0] for a in survivors)
         round_times.append(
-            max(deadline, last_survivor) if n_dropped else last_survivor
+            wait_s + (max(deadline, last_survivor) if n_dropped
+                      else last_survivor)
         )
+        t_now += round_times[-1]
 
         # ---- aggregation (server decodes the real upstream buffers) -----
         if cfg.fused_aggregation:
@@ -356,6 +386,7 @@ def run_federated_sync(
             acc_hist.append(float(acc))
             loss_hist.append(float(ls))
 
+    summary = channel.summary()
     return FedResult(
         accuracy=acc_hist,
         loss=loss_hist,
@@ -365,7 +396,18 @@ def run_federated_sync(
         participants_per_round=parts_hist,
         round_times=round_times,
         dropped_per_round=dropped_hist,
-        transfer_summary=channel.summary(),
+        transfer_summary=summary,
+        telemetry={
+            # every straggler (pre-skipped before training OR arrived past
+            # the deadline); the bytes cover only the latter — pre-skipped
+            # clients never uploaded, so they waste no wire bytes.
+            "dropped_updates": int(sum(dropped_hist)),
+            "dropped_update_bytes": dropped_blob_bytes,
+            "retrans_bytes": summary.get("retrans_bytes", 0),
+            "retries": summary.get("retries", 0),
+            "goodput_fraction": summary.get("goodput_fraction", 1.0),
+            "availability": cfg.availability.kind,
+        },
     )
 
 

@@ -44,13 +44,16 @@ def ternary_deploy(
     packed: bool = False,
     residual: str = "none",
     link: ClientLink | None = None,
+    loss_rate: float = 0.0,
 ):
     """Compress → serialize → decode the deployment artifact.
 
     Returns (served_params, wire_bytes, est_download_s, link). With
     ``packed=False`` the artifact dequantizes to dense arrays (reference
     path); with ``packed=True`` ternary records repack straight into the
-    ``(K//4, N)`` kernel layout and stay 2-bit in HBM.
+    ``(K//4, N)`` kernel layout and stay 2-bit in HBM. ``loss_rate`` runs
+    the download estimate through the lossy channel model (chunk loss +
+    retransmission), the same scenario knob the federated servers use.
     """
     spec = CodecSpec(kind="ternary", residual=residual, fttq=cfg)
     wire_tree, _ = comp.compress_pytree(params, spec)
@@ -63,6 +66,16 @@ def ternary_deploy(
     if link is None:
         c = ChannelConfig()
         link = ClientLink(0, c.mean_bandwidth_bytes_s, c.base_latency_s, 1.0)
+    if loss_rate > 0.0:
+        from repro.comm import Channel
+
+        chan = Channel(
+            ChannelConfig(latency_jitter_s=0.0, loss_rate=loss_rate,
+                          chunk_bytes=4096),
+            1, seed=0,
+        )
+        chan.links[0] = link   # meter over THIS link, not a fresh draw
+        return served, len(blob), chan.transfer(0, len(blob), "down"), link
     return served, len(blob), link.transfer_time(len(blob)), link
 
 
@@ -80,6 +93,9 @@ def main():
     ap.add_argument("--residual-codec", default="none",
                     choices=["none", "fp16", "bf16", "topk"],
                     help="codec for the non-quantizable wire leaves")
+    ap.add_argument("--loss-rate", type=float, default=0.0,
+                    help="edge-link packet loss for the download estimate "
+                         "(chunk retransmission through comm.channel)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
     if args.packed and not args.ternary:
@@ -102,7 +118,7 @@ def main():
         fp_bytes = len(encode_update(params))
         served, wire_bytes, dl_s, link = ternary_deploy(
             params, FTTQConfig(), packed=args.packed,
-            residual=args.residual_codec,
+            residual=args.residual_codec, loss_rate=args.loss_rate,
         )
         print(f"edge checkpoint: {wire_bytes / 1e6:.2f} MB on the wire "
               f"(fp32 {fp_bytes / 1e6:.2f} MB, {fp_bytes / wire_bytes:.1f}× "

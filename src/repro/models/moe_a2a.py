@@ -114,7 +114,8 @@ def moe_a2a(
     b, s, d = x.shape
     t = b * s
     xt = x.reshape(t, d)
-    n_ep = jax.lax.axis_size(ep_axis)
+    from repro.compat import axis_size
+    n_ep = axis_size(ep_axis)
     e_loc = n_experts // n_ep
 
     # ---- 1. local routing (router weights are replicated) ----------------

@@ -101,3 +101,111 @@ def test_unknown_mode_rejected(task):
     with pytest.raises(ValueError, match="unknown federated mode"):
         run_federated(mlp_mnist, params, clients, _cfg("bogus"),
                       adam(1e-3), eval_fn)
+
+
+# ---------------------------------------------------------------------------
+# Scenario layer: availability, staleness cap, adaptive buffer_k, loss.
+# ---------------------------------------------------------------------------
+
+
+def test_async_under_diurnal_churn_and_loss(task):
+    """The acceptance scenario: buffered-async T-FedAvg completes under
+    diurnal churn + 1% packet loss and reports the scenario telemetry."""
+    from repro.fed import AvailabilityConfig
+
+    clients, params, eval_fn = task
+    chan = ChannelConfig(loss_rate=0.01, chunk_bytes=1024)
+    cfg = _cfg("async", rounds=6, buffer_k=2, local_epochs=1, channel=chan,
+               availability=AvailabilityConfig(kind="diurnal", period_s=20.0,
+                                               floor=0.2, n_cohorts=2))
+    res = run_federated(mlp_mnist, params, clients, cfg, adam(1e-3),
+                        eval_fn, eval_every=6)
+    assert res.rounds_run == 6
+    tel = res.telemetry
+    assert tel["availability"] == "diurnal"
+    assert tel["retrans_bytes"] > 0                  # 1% loss left a trail
+    assert 0 < tel["goodput_fraction"] < 1
+    assert sum(tel["staleness_hist"]) == len(res.staleness_per_agg)
+    # deterministic replay: the same seeds give the same run
+    res2 = run_federated(mlp_mnist, params, clients, cfg, adam(1e-3),
+                         eval_fn, eval_every=6)
+    assert res2.upload_bytes == res.upload_bytes
+    assert res2.accuracy == res.accuracy
+    assert res2.telemetry["retrans_bytes"] == tel["retrans_bytes"]
+
+
+def test_async_staleness_cap_drops_and_accounts(task):
+    """With a hard cap of 1 on a very heterogeneous fleet, over-stale
+    arrivals are dropped — and their wasted bytes are accounted."""
+    clients, params, eval_fn = task
+    chan = ChannelConfig(mean_bandwidth_bytes_s=3e5, bandwidth_sigma=2.0,
+                         compute_speed_sigma=1.5)
+    base = dict(rounds=10, buffer_k=1, local_epochs=1, channel=chan,
+                staleness_exponent=0.5)
+    uncapped = run_federated(
+        mlp_mnist, params, clients, _cfg("async", **base), adam(1e-3),
+        eval_fn, eval_every=10)
+    assert max(uncapped.staleness_per_agg) > 1   # the fleet really is stale
+    capped = run_federated(
+        mlp_mnist, params, clients, _cfg("async", max_staleness=1, **base),
+        adam(1e-3), eval_fn, eval_every=10)
+    tel = capped.telemetry
+    assert tel["dropped_updates"] > 0
+    assert tel["dropped_update_bytes"] > 0
+    assert capped.rounds_run == 10               # progress despite drops
+    # dropped arrivals still appear in the staleness histogram and ledger
+    assert sum(tel["staleness_hist"]) == len(capped.staleness_per_agg)
+
+
+def test_async_staleness_downweight_policy(task):
+    clients, params, eval_fn = task
+    chan = ChannelConfig(mean_bandwidth_bytes_s=3e5, bandwidth_sigma=2.0,
+                         compute_speed_sigma=1.5)
+    cfg = _cfg("async", rounds=6, buffer_k=1, local_epochs=1, channel=chan,
+               max_staleness=1, staleness_policy="downweight")
+    res = run_federated(mlp_mnist, params, clients, cfg, adam(1e-3),
+                        eval_fn, eval_every=6)
+    assert res.rounds_run == 6
+    assert res.telemetry["dropped_updates"] == 0  # down-weighted, not dropped
+
+
+def test_async_invalid_staleness_policy_rejected(task):
+    clients, params, eval_fn = task
+    with pytest.raises(ValueError, match="staleness_policy"):
+        run_federated(mlp_mnist, params, clients,
+                      _cfg("async", staleness_policy="bogus"),
+                      adam(1e-3), eval_fn)
+
+
+def test_async_adaptive_buffer_tracks_target(task):
+    """The controller retunes buffer_k from the observed arrival rate and
+    records its trajectory; an explicit target with slow arrivals should
+    push K up toward concurrency."""
+    clients, params, eval_fn = task
+    cfg = _cfg("async", rounds=8, buffer_k=1, local_epochs=1,
+               adaptive_buffer=True, target_mix_latency_s=10.0)
+    res = run_federated(mlp_mnist, params, clients, cfg, adam(1e-3),
+                        eval_fn, eval_every=8)
+    traj = res.telemetry["buffer_k_per_agg"]
+    assert len(traj) == res.rounds_run
+    assert traj[0] == 1                      # starts at the configured K
+    assert max(traj) > 1                     # 10 s ≫ inter-arrival gap: K grows
+    assert all(1 <= k <= 5 for k in traj)    # clamped to [1, concurrency]
+
+
+def test_async_nic_cap_slows_uploads_but_not_bytes(task):
+    """Async uploads now contend for the server NIC: capping it stretches
+    simulated time while every byte count stays identical."""
+    clients, params, eval_fn = task
+    base = dict(rounds=4, buffer_k=2, local_epochs=1)
+    wide = run_federated(
+        mlp_mnist, params, clients, _cfg("async", **base), adam(1e-3),
+        eval_fn, eval_every=4)
+    chan = ChannelConfig(server_bandwidth_bytes_s=2e4)
+    narrow = run_federated(
+        mlp_mnist, params, clients, _cfg("async", channel=chan, **base),
+        adam(1e-3), eval_fn, eval_every=4)
+    assert narrow.upload_bytes == wide.upload_bytes
+    assert narrow.download_bytes == wide.download_bytes
+    assert narrow.transfer_summary["total_seconds"] > \
+        wide.transfer_summary["total_seconds"]

@@ -1,0 +1,145 @@
+"""Availability-trace tests: determinism, churn structure, trace replay,
+and the rng-stream compatibility contract of the participant draws."""
+
+import numpy as np
+import pytest
+
+from repro.fed.availability import (
+    AlwaysOn,
+    AvailabilityConfig,
+    DiurnalChurn,
+    TraceReplay,
+    draw_one,
+    draw_participants,
+    make_availability,
+)
+
+
+def test_always_on_everyone_forever():
+    a = AlwaysOn(7)
+    assert a.available_mask(0.0).all()
+    assert a.available_mask(1e9).all()
+    assert a.next_change(123.0) == float("inf")
+
+
+def test_diurnal_is_deterministic_and_churns():
+    a = DiurnalChurn(200, period_s=100.0, floor=0.1, n_cohorts=4, seed=3)
+    b = DiurnalChurn(200, period_s=100.0, floor=0.1, n_cohorts=4, seed=3)
+    ts = np.linspace(0.0, 200.0, 17)
+    for t in ts:
+        np.testing.assert_array_equal(a.available_mask(t), b.available_mask(t))
+    counts = [int(a.available_mask(t).sum()) for t in ts]
+    assert min(counts) < max(counts)          # the fleet actually churns
+    assert min(counts) > 0                    # floor keeps a tail online
+    # a different seed permutes the propensities
+    c = DiurnalChurn(200, period_s=100.0, floor=0.1, n_cohorts=4, seed=4)
+    assert any(
+        not np.array_equal(a.available_mask(t), c.available_mask(t)) for t in ts
+    )
+
+
+def test_diurnal_cohorts_peak_at_phase_offsets():
+    """Each timezone cohort's online count peaks when its sinusoid does:
+    cohort c's peak sits a quarter period after cohort c+1's (phase
+    2πc/n)."""
+    av = DiurnalChurn(400, period_s=100.0, floor=0.0, n_cohorts=4, seed=0)
+    cohort0 = av._cohort == 0
+
+    def frac_online(t):
+        return av.available_mask(t)[cohort0].mean()
+
+    peak_t = 25.0   # sin(2πt/T) = 1 at t = T/4 for phase 0
+    trough_t = 75.0
+    assert frac_online(peak_t) > 0.95
+    assert frac_online(trough_t) < 0.10
+
+
+def test_diurnal_expected_online_tracks_level():
+    av = DiurnalChurn(1000, period_s=60.0, floor=0.2, n_cohorts=3, seed=1)
+    lvl = av.expected_online(10.0)
+    online = av.available_mask(10.0).mean()
+    assert abs(lvl - online) < 0.07   # propensity thresholding ≈ its mean
+
+
+def test_trace_replay_schedule_membership():
+    # one client: online on [0, 10) and [20, 30), horizon 40
+    tr = TraceReplay([np.array([0.0, 10.0, 20.0, 30.0])], horizon_s=40.0)
+    assert tr.available_mask(5.0)[0]
+    assert not tr.available_mask(15.0)[0]
+    assert tr.available_mask(25.0)[0]
+    assert not tr.available_mask(35.0)[0]
+    assert tr.available_mask(45.0)[0]          # tiles past the horizon
+    nxt = tr.next_change(5.0)
+    assert 5.0 < nxt <= 10.0 + 1e-6
+    # wrap regression: from t=35 (offline) the next change is the horizon
+    # fold at t=40 (back online), not a boundary a whole horizon later
+    assert tr.next_change(35.0) == pytest.approx(40.0)
+    assert tr.available_mask(tr.next_change(35.0) + 1e-9)[0]
+
+
+def test_trace_replay_generate_deterministic():
+    a = TraceReplay.generate(20, mean_on_s=30, mean_off_s=20, horizon_s=500,
+                             seed=9)
+    b = TraceReplay.generate(20, mean_on_s=30, mean_off_s=20, horizon_s=500,
+                             seed=9)
+    for t in np.linspace(0, 600, 23):
+        np.testing.assert_array_equal(a.available_mask(t), b.available_mask(t))
+    # sessions exist and end: some client toggles within the horizon
+    m0 = a.available_mask(0.0)
+    assert any(
+        not np.array_equal(m0, a.available_mask(t)) for t in (50.0, 150.0, 350.0)
+    )
+
+
+def test_trace_replay_rejects_bad_schedules():
+    with pytest.raises(ValueError, match="ascending"):
+        TraceReplay([np.array([5.0, 1.0])], horizon_s=10.0)
+    with pytest.raises(ValueError, match="horizon"):
+        TraceReplay([np.array([0.0, 1.0])], horizon_s=0.0)
+
+
+def test_make_availability_kinds_and_unknown():
+    cfgs = {
+        "always_on": AlwaysOn,
+        "diurnal": DiurnalChurn,
+        "trace": TraceReplay,
+    }
+    for kind, cls in cfgs.items():
+        av = make_availability(AvailabilityConfig(kind=kind), 10, seed=0)
+        assert isinstance(av, cls)
+        assert av.available_mask(0.0).shape == (10,)
+    with pytest.raises(ValueError, match="unknown availability"):
+        make_availability(AvailabilityConfig(kind="bogus"), 10)
+
+
+def test_draw_participants_rng_stream_matches_historical_uniform():
+    """The bit-exactness contract: with everyone online, the draws consume
+    the rng stream EXACTLY like the pre-scenario uniform sampling."""
+    av = AlwaysOn(50)
+    r1 = np.random.default_rng(42)
+    r2 = np.random.default_rng(42)
+    got = draw_participants(av, 0.0, 5, 50, r1)
+    want = r2.choice(50, size=5, replace=False)
+    np.testing.assert_array_equal(got, want)
+    assert draw_one(av, 0.0, 50, r1) == int(r2.integers(50))
+    # and the streams are still aligned afterwards
+    assert r1.uniform() == r2.uniform()
+
+
+def test_draw_participants_only_online_clients():
+    av = DiurnalChurn(100, period_s=100.0, floor=0.05, n_cohorts=2, seed=0)
+    rng = np.random.default_rng(0)
+    for t in (0.0, 30.0, 60.0, 90.0):
+        online = set(np.flatnonzero(av.available_mask(t)).tolist())
+        picked = draw_participants(av, t, 10, 100, rng)
+        assert set(picked.tolist()) <= online
+        assert len(set(picked.tolist())) == len(picked)  # no repeats
+        k = draw_one(av, t, 100, rng)
+        assert k in online
+
+
+def test_draw_empty_fleet():
+    tr = TraceReplay([np.array([10.0, 20.0])], horizon_s=30.0)  # offline at 0
+    rng = np.random.default_rng(0)
+    assert draw_participants(tr, 0.0, 3, 1, rng).size == 0
+    assert draw_one(tr, 0.0, 1, rng) == -1

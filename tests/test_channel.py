@@ -1,8 +1,10 @@
 """Channel model tests: the shared server-NIC bottleneck (max-min fair
-share across concurrent transfers) and its reduction to independent links
-when the cap is infinite."""
+share across concurrent transfers), its reduction to independent links
+when the cap is infinite, and the lossy-link model (chunked Bernoulli
+loss, retransmission accounting, async-upload contention)."""
 
 import numpy as np
+import pytest
 
 from repro.comm import Channel, ChannelConfig
 
@@ -94,3 +96,155 @@ def test_sync_server_broadcast_contends(tmp_path):
     narrow = run(1e6)
     assert narrow.download_bytes == wide.download_bytes
     assert narrow.total_time_s > wide.total_time_s * 1.5
+
+
+# ---------------------------------------------------------------------------
+# Lossy links: Bernoulli chunk loss + retransmission (scenario layer).
+# ---------------------------------------------------------------------------
+
+
+def test_zero_loss_is_bytewise_and_streamwise_identical():
+    """loss_rate=0 must not change ANYTHING — times, logged bytes, or the
+    rng stream — vs a channel that never heard of the loss model."""
+    a = Channel(_flat_cfg(latency_jitter_s=0.01), 8, seed=5)
+    b = Channel(_flat_cfg(latency_jitter_s=0.01, loss_rate=0.0,
+                          chunk_bytes=777, retransmit_timeout_s=9.9), 8, seed=5)
+    for ch in (a, b):
+        ch.transfer(0, 100_000, "down")
+        ch.transfer_timed(1, 50_000, 3.0, "up")
+        ch.transfer_concurrent([2, 3], [10_000, 20_000], "down")
+    assert [(e.nbytes, e.seconds, e.retrans_bytes) for e in a.log] == \
+           [(e.nbytes, e.seconds, e.retrans_bytes) for e in b.log]
+    # and the rng streams stayed in lock-step
+    assert a._rng.uniform() == b._rng.uniform()
+
+
+def test_seeded_loss_is_deterministic():
+    cfg = _flat_cfg(loss_rate=0.05, chunk_bytes=4096)
+    logs = []
+    for _ in range(2):
+        ch = Channel(cfg, 4, seed=11)
+        for k in range(4):
+            ch.transfer(k, 500_000, "up")
+        logs.append([(e.seconds, e.retrans_bytes, e.retries) for e in ch.log])
+    assert logs[0] == logs[1]
+    assert sum(r for _, r, _ in logs[0]) > 0  # 5% × ~122 chunks × 4: losses
+
+
+def test_retransmission_accounting_sums_to_goodput_plus_overhead():
+    """Wire time decomposes exactly: latency + (goodput+retrans)/bw +
+    backoff timeouts; the summary ledger splits goodput from overhead."""
+    cfg = _flat_cfg(loss_rate=0.1, chunk_bytes=8192,
+                    retransmit_timeout_s=0.02, retransmit_backoff=2.0)
+    ch = Channel(cfg, 2, seed=3)
+    n = 400_000
+    dt = ch.transfer(0, n, "up")
+    e = ch.log[-1]
+    assert e.nbytes == n and e.retrans_bytes > 0 and e.retries > 0
+    # lower bound: timeouts are ≥ retries × base timeout (backoff ≥ 1)
+    wire_t = (n + e.retrans_bytes) / 1e6
+    assert dt >= 1e-4 + wire_t + e.retries * 0.02 - 1e-9
+    # retransmitted bytes are whole chunks from this payload
+    assert e.retrans_bytes % 8192 in (0, n % 8192)
+    s = ch.summary()
+    assert s["total_bytes"] == n                      # goodput ledger
+    assert s["retrans_bytes"] == e.retrans_bytes      # overhead ledger
+    assert 0 < s["goodput_fraction"] < 1
+    assert s["goodput_fraction"] == n / (n + e.retrans_bytes)
+
+
+def test_loss_rate_one_rejected():
+    ch = Channel(_flat_cfg(loss_rate=1.0), 1, seed=0)
+    with pytest.raises(ValueError, match="loss_rate"):
+        ch.transfer(0, 1000, "up")
+
+
+def test_concurrent_transfers_carry_loss_overhead():
+    """Retransmitted chunks re-enter the shared pipe: lossy concurrent
+    flows finish no earlier than lossless ones and log their overhead."""
+    lossless = Channel(_flat_cfg(server_bandwidth_bytes_s=2e6), 4, seed=7)
+    lossy = Channel(_flat_cfg(server_bandwidth_bytes_s=2e6, loss_rate=0.08,
+                              chunk_bytes=16384), 4, seed=7)
+    t0 = lossless.transfer_concurrent([0, 1, 2, 3], [400_000] * 4, "down")
+    t1 = lossy.transfer_concurrent([0, 1, 2, 3], [400_000] * 4, "down")
+    assert sum(e.retrans_bytes for e in lossy.log) > 0
+    assert all(b >= a - 1e-12 for a, b in zip(t0, t1))
+    assert sum(t1) > sum(t0)
+
+
+def test_loss_stretches_sync_round_and_drops_stragglers():
+    """Deadline interaction: the same fleet under loss pays retransmission
+    time, so a deadline that everyone met now drops stragglers (bytes
+    accounting unchanged — goodput is goodput)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import partition_iid, synthetic_classification
+    from repro.fed import FedConfig, run_federated
+    from repro.models.paper_models import init_mlp_mnist, mlp_mnist
+    from repro.optim import adam
+
+    x, y, xt, yt = synthetic_classification(
+        jax.random.PRNGKey(0), 400, 10, 784, noise=3.0, n_test=80)
+    clients = partition_iid(x, y, 4)
+    params = init_mlp_mnist(jax.random.PRNGKey(1))
+
+    def eval_fn(p):
+        return 0.5, 0.0
+
+    def run(loss):
+        chan = _flat_cfg(mean_bandwidth_bytes_s=2e5, deadline_s=0.75,
+                         loss_rate=loss, chunk_bytes=2048,
+                         retransmit_timeout_s=0.1)
+        cfg = FedConfig(algorithm="fedavg", participation=1.0, local_epochs=1,
+                        batch_size=32, rounds=2, channel=chan, seed=0)
+        return run_federated(mlp_mnist, params, clients, cfg, adam(1e-3),
+                             eval_fn, eval_every=2)
+
+    clean = run(0.0)
+    lossy = run(0.2)
+    assert lossy.download_bytes == clean.download_bytes
+    assert lossy.total_time_s > clean.total_time_s
+    assert sum(lossy.dropped_per_round) >= sum(clean.dropped_per_round)
+    assert lossy.telemetry["retrans_bytes"] > 0
+    assert lossy.telemetry["goodput_fraction"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Async-upload NIC contention (transfer_timed).
+# ---------------------------------------------------------------------------
+
+
+def test_timed_uncapped_matches_plain_transfer():
+    a = Channel(_flat_cfg(latency_jitter_s=0.02), 3, seed=9)
+    b = Channel(_flat_cfg(latency_jitter_s=0.02), 3, seed=9)
+    for k in range(3):
+        ta = a.transfer(k, 123_456, "up")
+        tb = b.transfer_timed(k, 123_456, float(k), "up")
+        assert ta == tb  # bit-identical, not just close
+
+
+def test_timed_overlapping_uploads_contend():
+    """Bursty async arrivals share the server NIC: four overlapping uploads
+    each take ~4× the solo time; spread-out uploads do not."""
+    cfg = _flat_cfg(server_bandwidth_bytes_s=1e6)
+    ch = Channel(cfg, 8, seed=0)
+    solo = ch.transfer_timed(0, 1_000_000, 0.0, "up", now_s=0.0)
+    assert 0.99 < solo < 1.01
+    burst = Channel(cfg, 8, seed=0)
+    times = [burst.transfer_timed(k, 1_000_000, 100.0, "up", now_s=100.0)
+             for k in range(4)]
+    assert times[0] < times[-1]          # later joiners see more contention
+    assert times[-1] > 2.0               # far from the uncontended 1 s
+    spread = Channel(cfg, 8, seed=0)
+    apart = [spread.transfer_timed(k, 1_000_000, k * 50.0, "up",
+                                   now_s=k * 50.0) for k in range(4)]
+    assert all(0.99 < t < 1.01 for t in apart)
+
+
+def test_timed_contention_isolated_per_direction():
+    cfg = _flat_cfg(server_bandwidth_bytes_s=1e6)
+    ch = Channel(cfg, 4, seed=0)
+    ch.transfer_timed(0, 1_000_000, 0.0, "up", now_s=0.0)
+    down = ch.transfer_timed(1, 1_000_000, 0.0, "down", now_s=0.0)
+    assert 0.99 < down < 1.01  # the up flow does not slow the down flow

@@ -81,6 +81,7 @@ def test_reduced_mesh_dryrun_integration():
     import jax, jax.numpy as jnp, json
     from jax.sharding import NamedSharding, PartitionSpec as P
     import repro.configs as C
+    from repro.compat import set_mesh
     from repro.launch.hlo_analysis import analyze_hlo
     from repro.launch.steps import make_decode_step
     from repro.models.transformer import init_params, init_cache
@@ -106,7 +107,7 @@ def test_reduced_mesh_dryrun_integration():
              "pos": jax.ShapeDtypeStruct((), jnp.int32,
                  sharding=NamedSharding(mesh, P()))}
     step = make_decode_step(cfg)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = jax.jit(step, donate_argnums=(1,)).lower(params_sh, batch).compile()
     ma = compiled.memory_analysis()
     r = analyze_hlo(compiled.as_text())
@@ -132,9 +133,11 @@ def test_hlo_analyzer_against_xla_cost_analysis():
     w1 = jax.ShapeDtypeStruct((128, 512), jnp.float32)
     w2 = jax.ShapeDtypeStruct((512, 128), jnp.float32)
     x = jax.ShapeDtypeStruct((256, 128), jnp.float32)
+    from repro.compat import cost_analysis
+
     comp = jax.jit(f).lower(w1, w2, x).compile()
     mine = analyze_hlo(comp.as_text())["flops_per_device"]
-    xla = comp.cost_analysis()["flops"]
+    xla = cost_analysis(comp)["flops"]
     assert abs(mine - xla) / xla < 0.05
 
 
