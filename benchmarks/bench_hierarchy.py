@@ -1,0 +1,127 @@
+"""Fleet-scale hierarchy bench: flat vs 2-tier aggregation topology.
+
+One ``run_fleet`` round per (clients, topology) cell under DiurnalChurn —
+the vectorized cohort simulator (``fed/fleet.py``) moving real wire blobs
+through the real channel/availability/aggregation stack with local SGD
+stubbed by a pre-encoded payload pool. The claim under test is the tier's
+whole point: ROOT ingress bytes scale with the EDGE count in the 2-tier
+topology and with the PARTICIPANT count in the flat one, while memory
+stays flat (chunk-bounded aggregator staging + O(n_clients) float arrays,
+no per-client Python objects).
+
+Rows (name, us_per_call, derived):
+  fleet_flat_n<N>   wall µs for one flat round, derived = participants
+  fleet_tier_n<N>   wall µs for one 2-tier round (E edges), derived =
+                    root upstream bytes (the edge→root hop)
+  fleet_root_ratio_n<N>   derived = flat root ingress / tier root ingress
+
+``BENCH_hierarchy.json`` (repo root) records wall-clock, current/peak RSS,
+and the per-tier byte ledger per cell; the byte-ledger balance invariant
+is asserted on every tier run (CI smoke runs the 10k-client 2-tier cell).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import resource
+import time
+
+import jax
+import numpy as np
+
+from repro.fed import FedConfig, HierarchyConfig, run_fleet
+from repro.fed.availability import AvailabilityConfig
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_hierarchy.json")
+N_EDGES = 64
+PARTICIPATION = 0.1
+
+
+def _rss_mib() -> float:
+    with open("/proc/self/status") as f:
+        for line in f:
+            if line.startswith("VmRSS:"):
+                return int(line.split()[1]) / 1024.0
+    return 0.0  # pragma: no cover - /proc always has VmRSS on linux
+
+
+def _peak_rss_mib() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _params(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "dense1": {"w": rng.standard_normal((784, 128)).astype(np.float32),
+                   "b": np.zeros(128, np.float32)},
+        "dense2": {"w": rng.standard_normal((128, 10)).astype(np.float32),
+                   "b": np.zeros(10, np.float32)},
+    }
+
+
+def _run(n_clients: int, n_edges: int):
+    cfg = FedConfig(
+        n_clients=n_clients, rounds=1, participation=PARTICIPATION,
+        availability=AvailabilityConfig(kind="diurnal"),
+        hierarchy=HierarchyConfig(n_edges=n_edges),
+    )
+    t0 = time.perf_counter()
+    res = run_fleet(_params(), cfg)
+    jax.block_until_ready(res.final_update)
+    wall = time.perf_counter() - t0
+    return res, wall
+
+
+def fleet_scaling():
+    from benchmarks.common import SMOKE
+
+    # CI smoke keeps the 10k 2-tier cell (the byte-ledger gate) and skips
+    # the 100k/1M fan-ins; smoke sizes are a SUBSET of the full ladder so
+    # the committed full record always carries every gated baseline key.
+    sizes = (1_000, 10_000) if SMOKE else (1_000, 10_000, 100_000, 1_000_000)
+    rows, record = [], {
+        "n_edges": N_EDGES, "participation": PARTICIPATION,
+        "availability": "diurnal", "smoke": SMOKE, "results": {},
+    }
+    for n in sizes:
+        cell: dict = {}
+        flat_res, flat_wall = _run(n, 0)
+        cell["flat"] = {
+            "wall_s": flat_wall,
+            "rss_mib": round(_rss_mib(), 1),
+            "peak_rss_mib": round(_peak_rss_mib(), 1),
+            "participants": flat_res.participants_per_round[0],
+            "upload_bytes": flat_res.upload_bytes,
+            # flat topology: every client blob lands on the root.
+            "root_ingress_bytes": flat_res.upload_bytes,
+        }
+        tier_res, tier_wall = _run(n, N_EDGES)
+        hier = tier_res.telemetry["hierarchy"]
+        assert hier["ledger_balanced"], (
+            f"byte ledger out of balance at n={n}: {hier}"
+        )
+        cell["tier2"] = {
+            "wall_s": tier_wall,
+            "rss_mib": round(_rss_mib(), 1),
+            "peak_rss_mib": round(_peak_rss_mib(), 1),
+            "participants": tier_res.participants_per_round[0],
+            "upload_bytes": tier_res.upload_bytes,
+            "client_to_edge_bytes": hier["client_to_edge_bytes"],
+            "root_ingress_bytes": hier["edge_to_root_bytes"],
+            "edges_active": sum(1 for c in hier["clients_per_edge"] if c),
+        }
+        ratio = (cell["flat"]["root_ingress_bytes"]
+                 / max(cell["tier2"]["root_ingress_bytes"], 1))
+        cell["root_ingress_ratio"] = round(ratio, 2)
+        record["results"][str(n)] = cell
+        rows.append((f"fleet_flat_n{n}", round(flat_wall * 1e6, 1),
+                     cell["flat"]["participants"]))
+        rows.append((f"fleet_tier_n{n}", round(tier_wall * 1e6, 1),
+                     cell["tier2"]["root_ingress_bytes"]))
+        rows.append((f"fleet_root_ratio_n{n}", 0.0, round(ratio, 2)))
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    return rows

@@ -14,8 +14,15 @@ import sys
 import time
 import traceback
 
-from benchmarks import (
-    bench_aggregate, bench_encode, bench_kernels, bench_tables, bench_wire,
+from repro.launch.env import pin_runtime
+
+# pinned fast runtime (tcmalloc preload when present, quiet XLA logs) —
+# must run before the section modules import jax.
+pin_runtime()
+
+from benchmarks import (  # noqa: E402
+    bench_aggregate, bench_encode, bench_hierarchy, bench_kernels,
+    bench_tables, bench_wire,
 )
 
 SECTIONS = {
@@ -24,6 +31,7 @@ SECTIONS = {
     "scenario": bench_wire.scenario_table,
     "aggregate": bench_aggregate.fused_aggregation,
     "encode": bench_encode.fused_encode,
+    "hierarchy": bench_hierarchy.fleet_scaling,
     "table2": bench_tables.table2_iid_accuracy,
     "table3": bench_tables.table3_noniid,
     "table4": bench_tables.table4_comm_costs,

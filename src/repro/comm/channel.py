@@ -170,26 +170,67 @@ def _fair_share_completion(
     return done
 
 
+class _LinkView:
+    """O(1) mutable sequence facade over the channel's per-client ARRAYS.
+
+    The fleet's links are stored as three numpy arrays (bandwidth, latency,
+    compute speed) so a million-client channel costs ~24 MB instead of a
+    million ``ClientLink`` objects; this view keeps the historical
+    ``channel.links[k]`` API alive — reads build a ``ClientLink`` on the
+    fly, writes (``channel.links[0] = ClientLink(...)``, used by
+    ``launch.serve`` and the tests) store back into the arrays.
+    """
+
+    def __init__(self, channel: "Channel"):
+        self._ch = channel
+
+    def __len__(self) -> int:
+        return self._ch.n_clients
+
+    def __getitem__(self, k: int) -> ClientLink:
+        ch = self._ch
+        return ClientLink(int(k), float(ch._bw[k]), float(ch._lat[k]),
+                          float(ch._speed[k]))
+
+    def __setitem__(self, k: int, link: ClientLink) -> None:
+        ch = self._ch
+        ch._bw[k] = link.bandwidth_bytes_s
+        ch._lat[k] = link.latency_s
+        ch._speed[k] = link.compute_speed
+
+    def __iter__(self):
+        return (self[k] for k in range(len(self)))
+
+
 class Channel:
     """Holds the fleet's links and meters transfers through them."""
 
     def __init__(self, cfg: ChannelConfig, n_clients: int, seed: int = 0):
         self.cfg = cfg
+        self.n_clients = int(n_clients)
         rng = np.random.default_rng(seed)
-        bw = cfg.mean_bandwidth_bytes_s * rng.lognormal(
+        # the SAME vectorized draws as ever (stream-identical): the fleet's
+        # links live as arrays, not per-client Python objects — O(10⁶)
+        # clients cost three float64 arrays.
+        self._bw = cfg.mean_bandwidth_bytes_s * rng.lognormal(
             mean=0.0, sigma=cfg.bandwidth_sigma, size=n_clients
         )
-        lat = np.maximum(
+        self._lat = np.maximum(
             rng.normal(cfg.base_latency_s, cfg.base_latency_s * 0.2, size=n_clients),
             1e-4,
         )
-        speed = rng.lognormal(mean=0.0, sigma=cfg.compute_speed_sigma, size=n_clients)
-        self.links = [
-            ClientLink(k, float(bw[k]), float(lat[k]), float(speed[k]))
-            for k in range(n_clients)
-        ]
+        self._speed = rng.lognormal(
+            mean=0.0, sigma=cfg.compute_speed_sigma, size=n_clients
+        )
+        self.links = _LinkView(self)
         self._rng = rng
         self.log: list[TransferEvent] = []
+        # batched-transfer ledger (``transfer_batch`` meters counters plus a
+        # per-batch seconds array instead of one TransferEvent per client).
+        self._batch_secs: list[np.ndarray] = []
+        self._batch_bytes = 0
+        self._batch_retrans = 0
+        self._batch_retries = 0
         # in-flight (data_start, data_end) windows per direction, used by
         # ``transfer_timed`` for the async-upload overlap count. Only
         # populated when the NIC cap is finite.
@@ -239,6 +280,102 @@ class Channel:
             TransferEvent(client_id, direction, nbytes, dt, retrans, retries)
         )
         return dt
+
+    def _loss_penalty_batch(
+        self, nbytes: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized ``_loss_penalty`` over a batch of transfers: ONE
+        geometric draw covering every chunk of every transfer (the batched
+        draw produces the same value stream as per-transfer draws laid end
+        to end), segment-summed back per transfer. Draws NOTHING when loss
+        is off, like the scalar path."""
+        n = len(nbytes)
+        zeros = np.zeros(n, dtype=np.int64)
+        p = self.cfg.loss_rate
+        if p <= 0.0 or n == 0:
+            return zeros, np.zeros(n), zeros
+        if not p < 1.0:
+            raise ValueError(f"loss_rate must be < 1, got {p}")
+        chunk = max(1, int(self.cfg.chunk_bytes))
+        nb = np.asarray(nbytes, dtype=np.int64)
+        n_chunks = (nb + chunk - 1) // chunk          # 0 chunks for 0 bytes
+        total = int(n_chunks.sum())
+        if total == 0:
+            return zeros, np.zeros(n), zeros
+        tx = self._rng.geometric(1.0 - p, size=total)
+        extra = tx - 1
+        sizes = np.full(total, chunk, dtype=np.int64)
+        ends = np.cumsum(n_chunks)
+        starts = ends - n_chunks
+        nz = n_chunks > 0
+        sizes[ends[nz] - 1] = nb[nz] - chunk * (n_chunks[nz] - 1)
+        csum_b = np.concatenate([[0], np.cumsum(extra * sizes)])
+        retrans = csum_b[ends] - csum_b[starts]
+        csum_r = np.concatenate([[0], np.cumsum(extra)])
+        retries = csum_r[ends] - csum_r[starts]
+        t0, b = self.cfg.retransmit_timeout_s, self.cfg.retransmit_backoff
+        if b == 1.0:
+            delay = t0 * retries.astype(np.float64)
+        else:
+            term = np.where(extra > 0, (b ** extra - 1.0) / (b - 1.0), 0.0)
+            csum_d = np.concatenate([[0.0], np.cumsum(term)])
+            delay = t0 * (csum_d[ends] - csum_d[starts])
+        return retrans, delay, retries
+
+    def transfer_batch(
+        self, client_ids: np.ndarray, nbytes: np.ndarray, direction: str,
+        *, share_nic: bool = False, compat: bool = False,
+    ) -> np.ndarray:
+        """Vectorized per-link transfers for FLEET-scale batches.
+
+        One rng fold per batch (uniform jitters + one geometric array),
+        one closed-form seconds vector — no per-client Python objects.
+        With ``loss_rate == 0`` the jitter draw consumes the rng stream
+        EXACTLY like ``len(client_ids)`` sequential ``transfer`` calls
+        (numpy's batched uniforms equal scalar draws laid end to end), so
+        lossless fleet runs are stream-compatible with the scalar path by
+        construction; under loss the batched geometric draw is folded once
+        per batch instead of interleaved per transfer, so ``compat=True``
+        forces the scalar call order (bit-exact legacy streams, small
+        fleets only).
+
+        ``share_nic=True`` applies the causal fleet approximation of the
+        server NIC cap — every flow in the batch is simultaneous, so each
+        runs at min(link, NIC / batch) — the closed-form stand-in for
+        ``transfer_concurrent``'s O(flows²) water-filling, which a 10⁵-flow
+        broadcast cannot afford. The ledger meters counters plus one
+        seconds array per batch (``summary()`` merges both ledgers).
+        """
+        ids = np.asarray(client_ids, dtype=np.int64)
+        nb = np.broadcast_to(np.asarray(nbytes, dtype=np.int64), ids.shape)
+        if compat:
+            return np.array([
+                self.transfer(int(k), int(b), direction)
+                for k, b in zip(ids, nb)
+            ])
+        jitter = self._rng.uniform(0.0, self.cfg.latency_jitter_s, size=ids.size)
+        retrans, delay, retries = self._loss_penalty_batch(nb)
+        wire = nb + retrans
+        rate = self._bw[ids]
+        nic = self.cfg.server_bandwidth_bytes_s
+        if share_nic and 0 < nic < float("inf") and ids.size:
+            rate = np.minimum(rate, nic / ids.size)
+        secs = self._lat[ids] + jitter + wire / rate + delay
+        self._batch_secs.append(secs)
+        self._batch_bytes += int(nb.sum())
+        self._batch_retrans += int(retrans.sum())
+        self._batch_retries += int(retries.sum())
+        return secs
+
+    def compute_time_batch(
+        self, client_ids: np.ndarray, n_examples: np.ndarray,
+        nominal_examples_per_s: float = 5000.0,
+    ) -> np.ndarray:
+        """Vectorized ``compute_time`` (same expression, batched)."""
+        ids = np.asarray(client_ids, dtype=np.int64)
+        return np.asarray(n_examples) / (
+            nominal_examples_per_s * self._speed[ids]
+        )
 
     def transfer_concurrent(
         self, client_ids: list[int], nbytes: list[int], direction: str
@@ -329,21 +466,28 @@ class Channel:
     def summary(self) -> dict:
         """Aggregate transfer statistics for reporting. ``total_bytes`` is
         goodput; retransmission overhead is reported separately so the
-        effective-goodput fraction under loss is a one-line division."""
-        if not self.log:
+        effective-goodput fraction under loss is a one-line division.
+        Merges the per-event log with the batched-transfer ledger."""
+        n_batch = sum(a.size for a in self._batch_secs)
+        if not self.log and n_batch == 0:
             return {"n_transfers": 0, "total_bytes": 0, "total_seconds": 0.0,
                     "mean_seconds": 0.0, "p95_seconds": 0.0,
                     "retrans_bytes": 0, "retries": 0, "goodput_fraction": 1.0}
-        secs = np.array([e.seconds for e in self.log])
-        goodput = int(sum(e.nbytes for e in self.log))
-        retrans = int(sum(e.retrans_bytes for e in self.log))
+        parts = []
+        if self.log:
+            parts.append(np.array([e.seconds for e in self.log]))
+        parts.extend(self._batch_secs)
+        secs = np.concatenate(parts)
+        goodput = int(sum(e.nbytes for e in self.log)) + self._batch_bytes
+        retrans = (int(sum(e.retrans_bytes for e in self.log))
+                   + self._batch_retrans)
         return {
-            "n_transfers": len(self.log),
+            "n_transfers": len(self.log) + n_batch,
             "total_bytes": goodput,
             "total_seconds": float(secs.sum()),
             "mean_seconds": float(secs.mean()),
             "p95_seconds": float(np.percentile(secs, 95)),
             "retrans_bytes": retrans,
-            "retries": int(sum(e.retries for e in self.log)),
+            "retries": int(sum(e.retries for e in self.log)) + self._batch_retries,
             "goodput_fraction": goodput / max(goodput + retrans, 1),
         }

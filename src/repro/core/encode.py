@@ -28,10 +28,11 @@ computed by the very same jnp expressions, and the w_q reduction follows the
 canonical tile order defined in ``kernels.quantize_pack`` on both sides.
 Property-tested in ``tests/test_encode.py``.
 
-Fallback: a stacked leaf whose per-layer size is not a multiple of 4 packs
-bytes ACROSS layer boundaries on the wire, which no per-layer staging can
-reproduce — those (test-corner) leaves take the reference path, still inside
-the fused API.
+Ragged stacked leaves (per-layer size % 4 ≠ 0) pack bytes ACROSS layer
+boundaries on the wire, which no per-layer staging can emit directly; the
+kernel still does all the fp work and a cheap host pass re-aligns the 2-bit
+codes across the boundaries (``_repack_ragged``) — so "one launch per
+client update" holds unconditionally, with byte-identical wire output.
 """
 
 from __future__ import annotations
@@ -87,40 +88,49 @@ def _n_elements(shape: tuple) -> int:
     return int(np.prod(shape)) if shape else 1
 
 
-def _segment_stats(leaf: jax.Array, m: _Meta) -> tuple[jax.Array, jax.Array]:
-    """(denom, Δ) for one segment — the EXACT jnp expressions of the
-    reference path (``fttq.scale_layer`` divides by this denom; Δ is
-    computed on the materialized scaled weights), so the scalars the kernel
-    re-applies carry the reference's fp bits."""
-    denom = jnp.max(jnp.abs(leaf)) + _EPS
-    if m.mode == "server":
-        delta = jnp.asarray(m.server_delta, leaf.dtype)
-    else:
-        delta = fttq.fttq_threshold(fttq.scale_layer(leaf), m.t_k, m.rule)
-    return denom, delta
-
-
 @functools.partial(jax.jit, static_argnames=("meta", "block_s", "interpret"))
 def _encode_flat_group(
     leaves: tuple, meta: tuple, block_s: int, interpret: bool
 ) -> tuple[jax.Array, tuple]:
     """All single-segment leaves of one dtype → one fused kernel launch.
 
+    Per-leaf denominators come from ONE batched |·|-max over the whole
+    group's staging (one reduction per dtype group, not one per leaf): max
+    is order-invariant and the staging's zero padding cannot move an
+    abs-max, so each per-leaf slice reproduces the reference's
+    ``jnp.max(jnp.abs(leaf))`` bit-exactly. The threshold MEAN stays a
+    per-leaf reduction on purpose — fp summation order is part of the wire
+    bytes, and batching it would break the byte-identity invariant.
+
     Returns (packed (S_total//4, LANES) uint8 — the concatenated wire byte
     streams, segment-aligned — and a per-leaf tuple of w_q scales, None
     where the caller supplies the trained factor)."""
-    staged_parts, scal_parts, denoms = [], [], []
-    for leaf, m in zip(leaves, meta):
-        denom, delta = _segment_stats(leaf, m)
+    staged_parts, rows = [], []
+    for leaf in leaves:
         staged, _ = stage_encode(leaf, block_s)
-        g = staged.shape[0] // block_s
+        staged_parts.append(staged)
+        rows.append(staged.shape[0])
+    staged_all = (staged_parts[0] if len(staged_parts) == 1
+                  else jnp.concatenate(staged_parts, axis=0))
+    row_max = jnp.max(jnp.abs(staged_all), axis=1)
+    scal_parts, denoms = [], []
+    off = 0
+    for leaf, m, r in zip(leaves, meta, rows):
+        denom = jnp.max(row_max[off:off + r]).astype(leaf.dtype) + _EPS
+        off += r
+        if m.mode == "server":
+            delta = jnp.asarray(m.server_delta, leaf.dtype)
+        else:
+            # the same jnp expressions as the reference path, with the
+            # batched denom substituted for scale_layer's internal max.
+            delta = fttq.fttq_threshold(
+                fttq.scale_layer(leaf, denom=denom), m.t_k, m.rule
+            )
+        g = r // block_s
         scal_parts.append(jnp.broadcast_to(
             jnp.stack([denom, delta]).astype(jnp.float32)[None, :], (g, 2)
         ))
-        staged_parts.append(staged)
         denoms.append(denom)
-    staged_all = (staged_parts[0] if len(staged_parts) == 1
-                  else jnp.concatenate(staged_parts, axis=0))
     scal_all = (scal_parts[0] if len(scal_parts) == 1
                 else jnp.concatenate(scal_parts, axis=0))
     packed, moments = quantize_pack_segments(
@@ -131,7 +141,7 @@ def _encode_flat_group(
         g = staged_rows(_n_elements(m.shape), block_s) // block_s
         scales.append(
             None if m.has_wq
-            else scale_from_moments(moments[off:off + g], denom)
+            else scale_from_moments(moments[off:off + g], denom).astype(m.dtype)
         )
         off += g
     return packed, tuple(scales)
@@ -143,17 +153,21 @@ def _encode_stacked_leaf(
 ) -> tuple[jax.Array, jax.Array | None]:
     """One stacked (L, ...) scan leaf through the vmapped kernel: per-layer
     (denom, Δ) scalars, per-layer packed streams, per-layer w_q where the
-    mode computes it. Layer size must be a multiple of 4 (caller checks)."""
+    mode computes it. Ragged layer sizes are repacked host-side."""
     n_layers = leaf.shape[0]
-    denoms = jax.vmap(lambda t: jnp.max(jnp.abs(t)) + _EPS)(leaf)
+    # ONE batched reduction for all layers' denominators (max is
+    # order-invariant → bit-identical to the per-layer reference max).
+    denoms = jnp.max(jnp.abs(leaf.reshape(n_layers, -1)), axis=1) + _EPS
     if meta.mode == "server":
         deltas = jnp.broadcast_to(
             jnp.asarray(meta.server_delta, leaf.dtype), (n_layers,)
         )
     else:
         deltas = jax.vmap(
-            lambda t: fttq.fttq_threshold(fttq.scale_layer(t), meta.t_k, meta.rule)
-        )(leaf)
+            lambda t, d: fttq.fttq_threshold(
+                fttq.scale_layer(t, denom=d), meta.t_k, meta.rule
+            )
+        )(leaf, denoms)
     packed, moments, _ = quantize_pack_stacked(
         leaf, denoms, deltas, block_s=block_s, interpret=interpret
     )
@@ -161,7 +175,7 @@ def _encode_stacked_leaf(
         return packed, None
     scales = jnp.stack([
         scale_from_moments(moments[i], denoms[i]) for i in range(n_layers)
-    ])
+    ]).astype(leaf.dtype)
     return packed, scales
 
 
@@ -178,54 +192,99 @@ class _Item:
     stacked: bool = False
 
 
+def _repack_ragged(packed_np: np.ndarray, n_layers: int,
+                   layer_n: int) -> np.ndarray:
+    """Rebuild the flat wire stream of a RAGGED stacked leaf (layer size %
+    4 ≠ 0) from the kernel's per-layer packed planes.
+
+    The wire format packs the CONCATENATED per-layer codes 4-per-byte, so
+    layer boundaries land mid-byte — no per-layer staging can emit those
+    bytes directly. The kernel still does all the fp work (scale →
+    threshold → ternarize → per-layer pack); this host pass just re-aligns
+    the 2-bit codes across layer boundaries: unpack each layer's first
+    ``layer_n`` codes, concatenate, pad the tail with code 1 (= value 0,
+    ``pack2bit``'s padding), and repack. Byte-identical to packing the
+    concatenated codes, i.e. to the reference wire stream."""
+    per = packed_np.reshape(n_layers, -1)[:, : (layer_n + 3) // 4]
+    codes = np.empty((n_layers, per.shape[1] * 4), dtype=np.uint8)
+    for j in range(4):
+        codes[:, j::4] = (per >> (2 * j)) & 3
+    codes = codes[:, :layer_n].reshape(-1)
+    pad = (-codes.size) % 4
+    if pad:
+        codes = np.concatenate([codes, np.ones(pad, dtype=np.uint8)])
+    q = codes.reshape(-1, 4)
+    return (q[:, 0] | (q[:, 1] << 2) | (q[:, 2] << 4)
+            | (q[:, 3] << 6)).astype(np.uint8)
+
+
 def _encode_items(
     items: Sequence[_Item], *, block_s: int | None = None,
     interpret: bool | None = None,
 ) -> list[TernaryTensor]:
     """Encode a batch of quantizable leaves; one flat-group launch per dtype
-    plus one vmapped launch per stacked leaf. Output order matches input."""
+    plus one vmapped launch per stacked leaf, then ONE device→host transfer
+    for every packed stream and kernel-computed w_q scale of the whole
+    batch. Output order matches input."""
     bs = BLOCK_S if block_s is None else block_s
     interp = _interp(interpret)
     out: list[TernaryTensor | None] = [None] * len(items)
 
     # stacked leaves: vmapped per-layer path
-    for i, it in enumerate(items):
-        if not it.stacked:
-            continue
-        packed, scales = _encode_stacked_leaf(it.leaf, it.meta, bs, interp)
-        layer_bytes = _n_elements(it.meta.shape[1:]) // 4
-        packed_np = np.asarray(packed)          # one transfer per stacked leaf
-        stream = np.concatenate(
-            [packed_np[layer].reshape(-1)[:layer_bytes]
-             for layer in range(it.leaf.shape[0])]
-        )
-        if it.meta.has_wq:
-            wq = it.wq
-        else:
-            wq = scales.reshape(
-                (it.leaf.shape[0],) + (1,) * (it.leaf.ndim - 1)
-            ).astype(it.leaf.dtype)
-        out[i] = TernaryTensor(
-            packed=stream, w_q=wq, shape=it.meta.shape, dtype=it.meta.dtype
-        )
+    stacked_res = [
+        (i, *_encode_stacked_leaf(it.leaf, it.meta, bs, interp))
+        for i, it in enumerate(items) if it.stacked
+    ]
 
     # flat leaves: one launch per dtype group
     flat_ids = [i for i, it in enumerate(items) if not it.stacked]
     by_dtype: dict[str, list[int]] = {}
     for i in flat_ids:
         by_dtype.setdefault(items[i].meta.dtype, []).append(i)
+    flat_res = []
     for ids in by_dtype.values():
         leaves = tuple(items[i].leaf for i in ids)
         meta = tuple(items[i].meta for i in ids)
-        packed, scales = _encode_flat_group(leaves, meta, bs, interp)
-        packed_np = np.asarray(packed).reshape(-1)   # ONE transfer per group
+        flat_res.append((ids, *_encode_flat_group(leaves, meta, bs, interp)))
+
+    # ONE batched host sync for the whole update (the per-leaf np.asarray
+    # calls this replaces each blocked on its own transfer).
+    sp, ss, fp, fs = jax.device_get((
+        [p for _, p, _ in stacked_res],
+        [s for _, _, s in stacked_res],
+        [p for _, p, _ in flat_res],
+        [list(s) for _, _, s in flat_res],
+    ))
+
+    for (i, _, _), packed_np, scales in zip(stacked_res, sp, ss):
+        it = items[i]
+        layer_n = _n_elements(it.meta.shape[1:])
+        if layer_n % 4 == 0:
+            stream = np.concatenate(
+                [packed_np[layer].reshape(-1)[: layer_n // 4]
+                 for layer in range(it.leaf.shape[0])]
+            )
+        else:
+            stream = _repack_ragged(packed_np, it.leaf.shape[0], layer_n)
+        if it.meta.has_wq:
+            wq = it.wq
+        else:
+            wq = scales.reshape(
+                (it.leaf.shape[0],) + (1,) * (it.leaf.ndim - 1)
+            )
+        out[i] = TernaryTensor(
+            packed=stream, w_q=wq, shape=it.meta.shape, dtype=it.meta.dtype
+        )
+
+    for (ids, _, _), packed_np, scales in zip(flat_res, fp, fs):
+        flat_bytes = packed_np.reshape(-1)
         off_rows = 0
         for i, scale in zip(ids, scales):
             it = items[i]
             n = _n_elements(it.meta.shape)
             byte_off = (off_rows // 4) * LANES
-            stream = packed_np[byte_off:byte_off + packed_nbytes(n)]
-            wq = it.wq if it.meta.has_wq else scale.astype(it.leaf.dtype)
+            stream = flat_bytes[byte_off:byte_off + packed_nbytes(n)]
+            wq = it.wq if it.meta.has_wq else scale
             out[i] = TernaryTensor(
                 packed=stream, w_q=wq, shape=it.meta.shape, dtype=it.meta.dtype
             )
@@ -237,12 +296,6 @@ def _is_stacked(leaf, wq) -> bool:
     """Per-layer treatment mirrors the reference dispatch: ndim ≥ 3 with a
     broadcast-shaped per-layer factor tree."""
     return leaf.ndim >= 3 and hasattr(wq, "ndim") and wq.ndim == leaf.ndim
-
-
-def _stacked_is_clean(leaf) -> bool:
-    """Per-layer byte streams concatenate to the flat wire stream only when
-    the layer size packs to whole bytes."""
-    return _n_elements(leaf.shape[1:]) % 4 == 0
 
 
 # --------------------------------------------------------------------------
@@ -264,11 +317,6 @@ def client_payload_fused(
         if wq is None:
             continue
         stacked = _is_stacked(leaf, wq)
-        if stacked and not _stacked_is_clean(leaf):
-            from repro.core.tfedavg import _reference_payload_leaf  # lazy: cycle
-
-            out[i] = _reference_payload_leaf(leaf, wq, cfg)
-            continue
         meta = _Meta(
             shape=tuple(int(s) for s in leaf.shape), dtype=str(leaf.dtype),
             mode="payload", rule=cfg.threshold_rule, t_k=cfg.t_k, has_wq=True,
@@ -297,11 +345,6 @@ def requantize_fused(
         if wq is None:
             continue
         stacked = _is_stacked(leaf, wq)
-        if stacked and not _stacked_is_clean(leaf):
-            from repro.core.tfedavg import _reference_requantize_leaf  # lazy
-
-            out[i] = _reference_requantize_leaf(leaf, wq, cfg)
-            continue
         meta = _Meta(
             shape=tuple(int(s) for s in leaf.shape), dtype=str(leaf.dtype),
             mode="server", server_delta=cfg.server_delta, has_wq=False,

@@ -64,14 +64,19 @@ class FTTQConfig:
     min_ndim: int = 2
 
 
-def scale_layer(theta: jax.Array) -> jax.Array:
+def scale_layer(theta: jax.Array, denom: jax.Array | None = None) -> jax.Array:
     """g(θ): scale one layer's weights into [-1, 1] (eq. 6), layer-wise.
 
     Layer-wise (not global) scaling avoids the magnitude-imbalance problem the
     paper points out (§III.A): scaling the whole network pushes most weights
     of small-magnitude layers to zero.
+
+    ``denom`` lets a caller that already holds max|θ| + ε (e.g. the fused
+    encoder's ONE batched reduction per dtype group) reuse it; max is
+    order-invariant, so a precomputed denom carries the same fp bits.
     """
-    denom = jnp.max(jnp.abs(theta)) + _EPS
+    if denom is None:
+        denom = jnp.max(jnp.abs(theta)) + _EPS
     return theta / denom
 
 

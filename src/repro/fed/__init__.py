@@ -14,6 +14,8 @@ from repro.fed.availability import (
     make_availability,
 )
 from repro.fed.async_server import run_federated_async
+from repro.fed.fleet import EventHeap, FleetConfig, FleetResult, run_fleet
+from repro.fed.hierarchy import EdgeTier, HierarchyConfig, edge_of, edges_of
 from repro.fed.simulation import (
     FedConfig,
     FedResult,
@@ -26,4 +28,6 @@ __all__ = [
     "run_federated", "run_federated_sync", "run_federated_async",
     "AvailabilityConfig", "ClientAvailability", "AlwaysOn", "DiurnalChurn",
     "TraceReplay", "make_availability",
+    "HierarchyConfig", "EdgeTier", "edge_of", "edges_of",
+    "FleetConfig", "FleetResult", "EventHeap", "run_fleet",
 ]

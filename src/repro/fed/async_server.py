@@ -56,7 +56,6 @@ retransmitted bytes, the buffer_k trajectory — lands in
 
 from __future__ import annotations
 
-import heapq
 from typing import Any, Callable
 
 import jax
@@ -67,6 +66,8 @@ from repro.comm.wire import decode_update
 from repro.data.federated import ClientDataset
 from repro.fed.aggregator import Aggregator
 from repro.fed.availability import draw_one, draw_participants, make_availability
+from repro.fed.fleet import EventHeap
+from repro.fed.hierarchy import EdgeTier
 from repro.fed.simulation import (
     FedConfig,
     FedResult,
@@ -146,13 +147,21 @@ def run_federated_async(
     version = 0
     up_bytes = 0
     down_bytes = 0
-    seq = 0                       # tie-breaker for the heap
-    events: list = []             # (arrival_time, seq, client_id, blob, version)
+    # arrival events: array-backed min-heap keyed (arrival_time, seq) —
+    # the internal seq is assigned in push order, so pops come out in the
+    # EXACT order the old (time, seq, ...) tuple heapq produced.
+    events = EventHeap(capacity=max(2 * n_conc, 16))
     buffered: list = []           # (weight, wire blob) — reference path only
+    # hierarchical tier (when enabled): arrivals fan into regional edges,
+    # each shipping one re-quantized record to the root per mix.
+    tier = (EdgeTier(cfg.hierarchy, cfg.fttq, len(clients),
+                     fused_encode=cfg.fused_encode)
+            if cfg.hierarchy.enabled else None)
     # ONE long-lived aggregator for the whole run: arrivals stream into it
     # as they land and `finalize(reset=True)` every buffer_k keeps its
     # staging buffers + leaf plans alive across mixes (ROADMAP item).
-    agg = Aggregator(chunk_c=cfg.agg_chunk_c) if cfg.fused_aggregation else None
+    agg = (Aggregator(chunk_c=cfg.agg_chunk_c)
+           if cfg.fused_aggregation and tier is None else None)
     n_buffered = 0
     acc_hist, loss_hist = [], []
     agg_times, staleness_hist, parts_hist = [], [], []
@@ -185,7 +194,7 @@ def run_federated_async(
         — the safe prune horizon for the NIC contention window. ``t0`` may
         run ahead of it when an empty fleet forced a wait.
         """
-        nonlocal seq, down_bytes
+        nonlocal down_bytes
         blob, start_params = current_broadcast()
         down_bytes += len(blob)
         up_blob = train_client(
@@ -200,8 +209,7 @@ def run_federated_async(
             now_s=t0 if clock is None else clock,
         )
         total = t_down + t_comp + t_up
-        heapq.heappush(events, (t0 + total, seq, k, up_blob, version))
-        seq += 1
+        events.push(t0 + total, (k, up_blob, version))
 
     def refill(now: float) -> None:
         """Dispatch one ONLINE client; advance time if nobody is reachable.
@@ -229,9 +237,9 @@ def run_federated_async(
         dispatch(int(k), t0, clock=0.0)
 
     while version < cfg.rounds:
-        if not events:  # pragma: no cover - dispatch() always refills
+        if len(events) == 0:  # pragma: no cover - dispatch() always refills
             raise RuntimeError("async server starved: no in-flight clients")
-        now, _, k, up_blob, born = heapq.heappop(events)
+        now, _, (k, up_blob, born) = events.pop()
         up_bytes += len(up_blob)
         staleness = version - born
         staleness_hist.append(staleness)
@@ -254,16 +262,29 @@ def run_federated_async(
                 weight *= (1.0 + staleness - max_stale) ** (
                     -cfg.staleness_exponent
                 )
-            if agg is not None:
+            if tier is not None:
+                tier.add(k, up_blob, weight, staleness=float(staleness))
+            elif agg is not None:
                 agg.add(up_blob, weight=weight)  # streams into the aggregator
             else:
                 buffered.append((weight, up_blob))
             n_buffered += 1
 
         if n_buffered >= buffer_k:
-            global_params = _weighted_mix(
-                global_params, buffered, cfg.mixing_rate, cfg, agg=agg
-            )
+            if tier is not None:
+                # edges flush ONE record each to the root; that hop is real
+                # upstream wire traffic, booked alongside the client hop.
+                mean, fold_info = tier.fold()
+                up_bytes += fold_info["edge_to_root_bytes"]
+                eta = cfg.mixing_rate
+                global_params = jax.tree_util.tree_map(
+                    lambda g, m: (1.0 - eta) * g + eta * m,
+                    global_params, mean,
+                )
+            else:
+                global_params = _weighted_mix(
+                    global_params, buffered, cfg.mixing_rate, cfg, agg=agg
+                )
             buffered = []
             n_buffered = 0
             version += 1
@@ -306,6 +327,8 @@ def run_federated_async(
         "goodput_fraction": summary.get("goodput_fraction", 1.0),
         "availability": cfg.availability.kind,
     }
+    if tier is not None:
+        telemetry["hierarchy"] = tier.telemetry()
     return FedResult(
         accuracy=acc_hist,
         loss=loss_hist,

@@ -23,8 +23,9 @@ Three trace models behind one tiny protocol:
   - ``TraceReplay``   — explicit per-client (on, off) interval schedules,
                         either handed in directly (a recorded trace) or
                         generated once from seeded exponential on/off
-                        durations. Membership is a searchsorted, so
-                        replays are deterministic and cheap.
+                        durations. Membership is one vectorized pass over
+                        the flattened boundary array, so replays are
+                        deterministic and cheap even for 10⁶ clients.
 
 ``AvailabilityConfig`` is the serializable knob surface
 (``FedConfig.availability``); ``make_availability`` builds the model for a
@@ -150,6 +151,14 @@ class TraceReplay:
         for k, s in enumerate(self.schedules):
             if s.ndim != 1 or (s.size and np.any(np.diff(s) < 0)):
                 raise ValueError(f"schedule {k} is not an ascending 1-D array")
+        # flattened bounds + per-client segment offsets: mask queries are
+        # ONE vectorized pass over all boundaries instead of a Python loop
+        # of per-client searchsorteds (the fleet-scale requirement).
+        lens = np.array([s.size for s in self.schedules], dtype=np.int64)
+        self._seg_end = np.cumsum(lens)
+        self._seg_start = self._seg_end - lens
+        self._flat = (np.concatenate(self.schedules) if self.schedules
+                      else np.empty(0, dtype=np.float64))
 
     @classmethod
     def generate(cls, n_clients: int, *, mean_on_s: float = 120.0,
@@ -175,22 +184,25 @@ class TraceReplay:
 
     def available_mask(self, t: float) -> np.ndarray:
         tf = self._fold(t)
-        mask = np.empty(len(self.schedules), dtype=bool)
-        for k, s in enumerate(self.schedules):
-            # schedules start with an ON edge, so an ODD number of passed
-            # boundaries means the client is inside an ON span.
-            mask[k] = bool(np.searchsorted(s, tf, side="right") % 2)
-        return mask
+        # schedules start with an ON edge, so an ODD number of passed
+        # boundaries means the client is inside an ON span. Counting the
+        # passed boundaries per client via a cumulative sum over the
+        # flattened bounds is bit-identical to a per-client searchsorted
+        # (side="right" counts elements ≤ tf, exactly what ``<=`` counts).
+        passed = np.concatenate([[0], np.cumsum(self._flat <= tf)])
+        counts = passed[self._seg_end] - passed[self._seg_start]
+        return (counts % 2) == 1
 
     def next_change(self, t: float) -> float:
         tf = self._fold(t)
         # the schedule tiles at horizon_s, so the wrap itself is a change
         # point (folded time jumps back to 0 and the mask re-evaluates).
         best = self.horizon_s - tf
-        for s in self.schedules:
-            i = int(np.searchsorted(s, tf, side="right"))
-            if i < len(s) and s[i] < self.horizon_s:
-                best = min(best, float(s[i] - tf))
+        # each client's candidate is its first boundary > tf (ascending),
+        # so the global candidate is just the min boundary in (tf, horizon).
+        m = (self._flat > tf) & (self._flat < self.horizon_s)
+        if m.any():
+            best = min(best, float(self._flat[m].min() - tf))
         return t + max(best, 1e-9)
 
 

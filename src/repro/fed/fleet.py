@@ -1,0 +1,561 @@
+"""Vectorized cohort simulation for million-client fleets.
+
+``fed/simulation.py`` and ``fed/async_server.py`` are faithful protocol
+simulators: every client is a Python object, every transfer a scalar rng
+draw, every arrival a tuple on a ``heapq``. That is the right tool for
+O(10²) clients with real local SGD — and three orders of magnitude short
+of the deployed fleets the hierarchy tier targets. This module is the
+fleet-scale counterpart: the SAME protocol (wire format, channel model,
+availability traces, edge tier, byte ledger) with the per-client work
+batched into array ops.
+
+What gets vectorized, and what each approximation means:
+
+  - **Availability + selection** — ``DiurnalChurn``/``TraceReplay`` masks
+    are already array ops; the participant draw is the shared
+    ``draw_participants`` (one ``rng.choice`` per round).
+  - **Channel draws** — ``Channel.transfer_batch`` folds the rng ONCE per
+    batch (one uniform jitter vector, one geometric loss vector) and
+    returns closed-form seconds. Lossless batches are stream-compatible
+    with the scalar path by construction; ``FleetConfig.compat`` forces
+    the scalar call order so small-fleet seeds reproduce the legacy
+    channel bit-exactly under loss too.
+  - **Client updates** — fleet rounds measure COMMUNICATION and
+    AGGREGATION, not SGD: clients ship payloads from a pre-encoded pool of
+    ``FleetConfig.update_pool`` distinct ternary wire blobs (client k
+    ships ``pool[k % P]``). Clients sharing a payload form a COHORT: the
+    server folds one weighted ``Aggregator`` add per (edge, cohort) with
+    the cohort's summed weight — exactly Σ w_k·θ_k since the θs are
+    byte-identical — while the ledger books every client's wire bytes.
+    A 10⁶-client round therefore costs O(edges × pool) kernel launches
+    and O(participants) array arithmetic, nothing per-client in Python.
+  - **Async arrivals** — the event queue is ``EventHeap``, an array-backed
+    binary min-heap keyed (time, seq): O(log n) push/pop with three numpy
+    arrays instead of a tuple object per in-flight client, plus a
+    vectorized bulk ``push_many`` for batch dispatches. Pop order is
+    identical to ``heapq`` on (time, seq) tuples (unique seq → total
+    order). Refills happen in fold-sized batches (the cohort
+    approximation of the per-arrival refill).
+
+Memory stays flat in the client count: the fleet state is a handful of
+float64/int64 arrays (links, masks, times) plus the chunk-bounded
+aggregator staging buffers — no per-client Python objects anywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.comm import Channel
+from repro.core import fttq as fttq_mod
+from repro.core.tfedavg import client_update_payload
+from repro.comm.wire import encode_update
+from repro.fed.aggregator import Aggregator
+from repro.fed.availability import draw_participants, make_availability
+from repro.fed.hierarchy import EdgeTier, edges_of
+from repro.fed.simulation import FedConfig, broadcast_blob
+
+Pytree = Any
+
+
+class EventHeap:
+    """Array-backed binary min-heap keyed by (time, seq).
+
+    The async server's event queue holds one entry per in-flight client.
+    ``heapq`` stores each as a Python tuple — fine at 10², hostile at 10⁶.
+    Here keys live in two numpy arrays (float64 time, int64 seq) and
+    payloads in a slot list indexed by a third array, so a million pending
+    arrivals cost three arrays + one list. ``seq`` is assigned internally
+    (monotonic), making every key unique — pop order is therefore the
+    EXACT total order ``heapq`` would produce on (time, seq) tuples.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        cap = max(int(capacity), 1)
+        self._time = np.empty(cap, dtype=np.float64)
+        self._seq = np.empty(cap, dtype=np.int64)
+        self._slot = np.empty(cap, dtype=np.int64)
+        self._n = 0
+        self._payload: list[Any] = []
+        self._free: list[int] = []
+        self._next_seq = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    # -- internals ---------------------------------------------------------
+
+    def _grow(self, need: int) -> None:
+        cap = self._time.size
+        if need <= cap:
+            return
+        new = max(need, 2 * cap)
+        for name in ("_time", "_seq", "_slot"):
+            arr = getattr(self, name)
+            grown = np.empty(new, dtype=arr.dtype)
+            grown[: self._n] = arr[: self._n]
+            setattr(self, name, grown)
+
+    def _less(self, i: int, j: int) -> bool:
+        if self._time[i] != self._time[j]:
+            return bool(self._time[i] < self._time[j])
+        return bool(self._seq[i] < self._seq[j])
+
+    def _swap(self, i: int, j: int) -> None:
+        for arr in (self._time, self._seq, self._slot):
+            arr[i], arr[j] = arr[j], arr[i]
+
+    def _sift_up(self, i: int) -> None:
+        while i > 0:
+            parent = (i - 1) // 2
+            if not self._less(i, parent):
+                break
+            self._swap(i, parent)
+            i = parent
+
+    def _sift_down(self, i: int) -> None:
+        n = self._n
+        while True:
+            left = 2 * i + 1
+            if left >= n:
+                return
+            child = left
+            right = left + 1
+            if right < n and self._less(right, left):
+                child = right
+            if not self._less(child, i):
+                return
+            self._swap(i, child)
+            i = child
+
+    def _store(self, payload: Any) -> int:
+        if self._free:
+            slot = self._free.pop()
+            self._payload[slot] = payload
+        else:
+            slot = len(self._payload)
+            self._payload.append(payload)
+        return slot
+
+    # -- api ---------------------------------------------------------------
+
+    def push(self, t: float, payload: Any) -> int:
+        """Insert one event; returns its (unique, monotonic) seq."""
+        self._grow(self._n + 1)
+        seq = self._next_seq
+        self._next_seq += 1
+        i = self._n
+        self._time[i] = t
+        self._seq[i] = seq
+        self._slot[i] = self._store(payload)
+        self._n += 1
+        self._sift_up(i)
+        return seq
+
+    def push_many(self, times: np.ndarray, payloads: list[Any]) -> None:
+        """Vectorized bulk insert: merge the pending keys with the new
+        batch and re-establish the heap by lexsort — a sorted array IS a
+        valid binary min-heap, and one O((n+k)·log) vectorized sort beats
+        k sift-ups in Python."""
+        ts = np.asarray(times, dtype=np.float64)
+        k = ts.size
+        if k != len(payloads):
+            raise ValueError(f"{k} times for {len(payloads)} payloads")
+        if k == 0:
+            return
+        self._grow(self._n + k)
+        n = self._n
+        seqs = np.arange(self._next_seq, self._next_seq + k, dtype=np.int64)
+        self._next_seq += k
+        self._time[n:n + k] = ts
+        self._seq[n:n + k] = seqs
+        self._slot[n:n + k] = [self._store(p) for p in payloads]
+        self._n = n + k
+        order = np.lexsort((self._seq[: self._n], self._time[: self._n]))
+        self._time[: self._n] = self._time[order]
+        self._seq[: self._n] = self._seq[order]
+        self._slot[: self._n] = self._slot[order]
+
+    def peek_time(self) -> float:
+        if self._n == 0:
+            raise IndexError("peek on empty EventHeap")
+        return float(self._time[0])
+
+    def pop(self) -> tuple[float, int, Any]:
+        """Remove and return the earliest event as (time, seq, payload)."""
+        if self._n == 0:
+            raise IndexError("pop from empty EventHeap")
+        t = float(self._time[0])
+        seq = int(self._seq[0])
+        slot = int(self._slot[0])
+        payload = self._payload[slot]
+        self._payload[slot] = None
+        self._free.append(slot)
+        self._n -= 1
+        if self._n:
+            last = self._n
+            for arr in (self._time, self._seq, self._slot):
+                arr[0] = arr[last]
+            self._sift_down(0)
+        return t, seq, payload
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet-only knobs layered on top of ``FedConfig``.
+
+    Attributes:
+      update_pool: number of distinct pre-encoded client payloads (client k
+        ships ``pool[k % update_pool]``; clients sharing one form a cohort).
+      examples_per_client: uniform |D_k| — the aggregation weight and the
+        compute-time workload per client.
+      compat: route transfers through the scalar channel path in legacy
+        call order (bit-exact rng streams vs the per-client servers; small
+        fleets only — O(participants) Python calls).
+      share_nic: apply the closed-form NIC sharing approximation to the
+        broadcast batch (each flow at min(link, NIC/batch)) instead of the
+        O(flows²) water-filling the small-fleet server runs.
+      heap_capacity: initial EventHeap allocation (grows as needed).
+    """
+
+    update_pool: int = 8
+    examples_per_client: int = 50
+    compat: bool = False
+    share_nic: bool = True
+    heap_capacity: int = 1024
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """What a fleet run reports (communication/aggregation view)."""
+
+    rounds_run: int
+    participants_per_round: list
+    dropped_per_round: list
+    round_times: list
+    upload_bytes: int
+    download_bytes: int
+    final_update: Any
+    telemetry: dict
+
+    @property
+    def total_time_s(self) -> float:
+        return float(sum(self.round_times))
+
+
+def _payload_pool(
+    params: Pytree, cfg: FedConfig, fleet: FleetConfig
+) -> tuple[list[bytes], np.ndarray]:
+    """``update_pool`` distinct client payloads, pre-encoded once.
+
+    Each is the template perturbed by seeded noise, pushed through the
+    REAL upstream encode path (FTTQ quantize → fused pack → wire), so
+    fleet bytes and aggregation exercise the same kernels and codecs as
+    the per-client servers — only local SGD is stubbed out.
+    """
+    rng = np.random.default_rng(cfg.seed + 17)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    pool: list[bytes] = []
+    for _ in range(max(1, fleet.update_pool)):
+        perturbed = [
+            np.asarray(leaf)
+            + 0.1 * rng.standard_normal(np.shape(leaf)).astype(np.float32)
+            for leaf in leaves
+        ]
+        tree = jax.tree_util.tree_unflatten(treedef, perturbed)
+        if cfg.algorithm == "tfedavg":
+            wq = fttq_mod.init_wq_tree(tree, cfg.fttq)
+            tree = client_update_payload(tree, wq, cfg.fttq,
+                                         fused=cfg.fused_encode)
+        pool.append(encode_update(tree))
+    sizes = np.array([len(b) for b in pool], dtype=np.int64)
+    return pool, sizes
+
+
+def _draw_or_wait(avail, t_now, n_sel, n_clients, rng):
+    """Participant draw that advances time while the fleet is empty
+    (same contract as the per-client servers)."""
+    wait = 0.0
+    ids = draw_participants(avail, t_now, n_sel, n_clients, rng)
+    while ids.size == 0:
+        t_next = avail.next_change(t_now + wait)
+        if not np.isfinite(t_next):
+            raise RuntimeError("no client is ever available")
+        wait = t_next - t_now
+        ids = draw_participants(avail, t_next, n_sel, n_clients, rng)
+    return ids, wait
+
+
+def _ingest_grouped(
+    surv: np.ndarray,
+    pool_idx: np.ndarray,
+    weights: np.ndarray,
+    pool: list[bytes],
+    cfg: FedConfig,
+    tier: EdgeTier | None,
+    agg: Aggregator | None,
+    *,
+    staleness: np.ndarray | None = None,
+    compat: bool = False,
+):
+    """Cohort-grouped server ingest: one weighted add per (edge, payload)
+    group — the weights sum exactly because cohort payloads are
+    byte-identical. ``compat`` keeps the legacy one-add-per-client order."""
+    P = len(pool)
+    stale = staleness if staleness is not None else np.zeros(surv.size)
+    if compat:
+        for k, j, w, s in zip(surv, pool_idx, weights, stale):
+            if tier is not None:
+                tier.add(int(k), pool[int(j)], float(w), staleness=float(s))
+            else:
+                agg.add(pool[int(j)], weight=float(w))
+        return
+    if tier is not None:
+        e = edges_of(surv, cfg.n_clients, cfg.hierarchy)
+        key = e * P + pool_idx
+    else:
+        key = pool_idx
+    uniq, inv = np.unique(key, return_inverse=True)
+    wsum = np.bincount(inv, weights=weights, minlength=uniq.size)
+    count = np.bincount(inv, minlength=uniq.size)
+    ssum = np.bincount(inv, weights=stale, minlength=uniq.size)
+    for g, ke in enumerate(uniq):
+        if tier is not None:
+            tier.add_cohort(int(ke // P), pool[int(ke % P)],
+                            weight=float(wsum[g]), n_clients=int(count[g]),
+                            staleness_sum=float(ssum[g]))
+        else:
+            agg.add(pool[int(ke)], weight=float(wsum[g]))
+
+
+def run_fleet(
+    params: Pytree, cfg: FedConfig, fleet: FleetConfig | None = None
+) -> FleetResult:
+    """Run ``cfg.rounds`` fleet-scale rounds (sync) or folds (async).
+
+    Dispatches on ``cfg.mode`` like ``run_federated``; the hierarchy tier
+    engages behind ``cfg.hierarchy`` exactly as in the per-client servers.
+    The byte ledger is asserted balanced before returning.
+    """
+    fleet = fleet or FleetConfig()
+    if cfg.mode == "async":
+        return _run_fleet_async(params, cfg, fleet)
+    if cfg.mode != "sync":
+        raise ValueError(f"unknown federated mode {cfg.mode!r}")
+    return _run_fleet_sync(params, cfg, fleet)
+
+
+def _setup(params, cfg, fleet):
+    rng = np.random.default_rng(cfg.seed)
+    channel = Channel(cfg.channel, cfg.n_clients, seed=cfg.seed + 1)
+    avail = make_availability(cfg.availability, cfg.n_clients, seed=cfg.seed)
+    pool, sizes = _payload_pool(params, cfg, fleet)
+    bcast = broadcast_blob(params, cfg)
+    tier = (EdgeTier(cfg.hierarchy, cfg.fttq, cfg.n_clients,
+                     fused_encode=cfg.fused_encode)
+            if cfg.hierarchy.enabled else None)
+    agg = Aggregator(chunk_c=cfg.agg_chunk_c) if tier is None else None
+    return rng, channel, avail, pool, sizes, bcast, tier, agg
+
+
+def _telemetry(channel, tier, cfg, *, extra=None):
+    summary = channel.summary()
+    out = {
+        "availability": cfg.availability.kind,
+        "retrans_bytes": summary.get("retrans_bytes", 0),
+        "retries": summary.get("retries", 0),
+        "goodput_fraction": summary.get("goodput_fraction", 1.0),
+        "transfer_summary": summary,
+    }
+    if tier is not None:
+        hier = tier.telemetry()
+        if not hier["ledger_balanced"]:
+            raise AssertionError(
+                "hierarchy byte ledger out of balance: "
+                f"edges shipped {hier['edge_to_root_bytes']} B, root "
+                f"ingested {hier['root_ingest_bytes']} B"
+            )
+        out["hierarchy"] = hier
+    if extra:
+        out.update(extra)
+    return out
+
+
+def _run_fleet_sync(params, cfg, fleet) -> FleetResult:
+    rng, channel, avail, pool, sizes, bcast, tier, agg = _setup(
+        params, cfg, fleet
+    )
+    P = len(pool)
+    deadline = (cfg.channel.deadline_s
+                if cfg.channel.deadline_s > 0 else float("inf"))
+    n_sel = max(int(np.ceil(cfg.participation * cfg.n_clients)), 1)
+    w_k = float(fleet.examples_per_client)
+
+    up_bytes = down_bytes = 0
+    parts_hist, dropped_hist, round_times = [], [], []
+    mean = None
+    t_now = 0.0
+    for _ in range(cfg.rounds):
+        ids, wait_s = _draw_or_wait(avail, t_now, n_sel, cfg.n_clients, rng)
+        pool_idx = ids % P
+        down = channel.transfer_batch(
+            ids, len(bcast), "down",
+            share_nic=fleet.share_nic, compat=fleet.compat,
+        )
+        comp = channel.compute_time_batch(
+            ids, fleet.examples_per_client * cfg.local_epochs
+        )
+        up = channel.transfer_batch(ids, sizes[pool_idx], "up",
+                                    compat=fleet.compat)
+        total = down + comp + up
+        ok = total <= deadline
+        if not ok.any():          # never lose a round: keep the fastest
+            ok[np.argmin(total)] = True
+        surv, sj = ids[ok], pool_idx[ok]
+        n_dropped = int(ids.size - surv.size)
+
+        down_bytes += len(bcast) * int(ids.size)
+        up_bytes += int(sizes[sj].sum())
+        weights = np.full(surv.size, w_k)
+        _ingest_grouped(surv, sj, weights, pool, cfg, tier, agg,
+                        compat=fleet.compat)
+        if tier is not None:
+            mean, info = tier.fold()
+            up_bytes += info["edge_to_root_bytes"]
+        else:
+            mean = agg.finalize(reset=True)
+
+        last = float(total[ok].max())
+        round_times.append(
+            wait_s + (max(deadline, last) if n_dropped else last)
+        )
+        t_now += round_times[-1]
+        parts_hist.append(int(surv.size))
+        dropped_hist.append(n_dropped)
+
+    return FleetResult(
+        rounds_run=cfg.rounds,
+        participants_per_round=parts_hist,
+        dropped_per_round=dropped_hist,
+        round_times=round_times,
+        upload_bytes=up_bytes,
+        download_bytes=down_bytes,
+        final_update=mean,
+        telemetry=_telemetry(channel, tier, cfg),
+    )
+
+
+def _run_fleet_async(params, cfg, fleet) -> FleetResult:
+    rng, channel, avail, pool, sizes, bcast, tier, agg = _setup(
+        params, cfg, fleet
+    )
+    P = len(pool)
+    n_conc = cfg.max_concurrency or max(
+        int(np.ceil(cfg.participation * cfg.n_clients)), 1
+    )
+    n_conc = min(n_conc, cfg.n_clients)
+    buffer_k = max(1, min(cfg.buffer_k, n_conc))
+    max_stale = cfg.max_staleness if cfg.max_staleness > 0 else float("inf")
+    w_k = float(fleet.examples_per_client)
+    heap = EventHeap(capacity=max(fleet.heap_capacity, n_conc))
+
+    version = 0
+    up_bytes = down_bytes = 0
+    dropped = 0
+    dropped_bytes = 0
+    staleness_hist: list[int] = []
+    fold_times, parts_hist = [], []
+    mean = None
+
+    def dispatch(ids: np.ndarray, t0: float) -> None:
+        nonlocal down_bytes
+        pool_idx = ids % P
+        down = channel.transfer_batch(ids, len(bcast), "down",
+                                      share_nic=fleet.share_nic,
+                                      compat=fleet.compat)
+        comp = channel.compute_time_batch(
+            ids, fleet.examples_per_client * cfg.local_epochs
+        )
+        up = channel.transfer_batch(ids, sizes[pool_idx], "up",
+                                    compat=fleet.compat)
+        down_bytes += len(bcast) * int(ids.size)
+        heap.push_many(
+            t0 + down + comp + up,
+            [(int(k), int(j), version) for k, j in zip(ids, pool_idx)],
+        )
+
+    ids0, wait0 = _draw_or_wait(avail, 0.0, n_conc, cfg.n_clients, rng)
+    dispatch(ids0, wait0)
+
+    buf_k: list[int] = []
+    buf_j: list[int] = []
+    buf_w: list[float] = []
+    buf_s: list[float] = []
+    last_fold_t = 0.0
+    while version < cfg.rounds:
+        if len(heap) == 0:  # pragma: no cover - dispatch always refills
+            raise RuntimeError("fleet starved: no in-flight clients")
+        now, _seq, (k, j, born) = heap.pop()
+        staleness = version - born
+        staleness_hist.append(staleness)
+        up_bytes += int(sizes[j])
+        if staleness > max_stale and cfg.staleness_policy == "drop":
+            dropped += 1
+            dropped_bytes += int(sizes[j])
+        else:
+            w = w_k * (1.0 + staleness) ** (-cfg.staleness_exponent)
+            if staleness > max_stale:     # "downweight"
+                w *= (1.0 + staleness - max_stale) ** (
+                    -cfg.staleness_exponent
+                )
+            buf_k.append(k)
+            buf_j.append(j)
+            buf_w.append(w)
+            buf_s.append(float(staleness))
+
+        if len(buf_k) >= buffer_k:
+            _ingest_grouped(
+                np.asarray(buf_k), np.asarray(buf_j), np.asarray(buf_w),
+                pool, cfg, tier, agg,
+                staleness=np.asarray(buf_s), compat=fleet.compat,
+            )
+            if tier is not None:
+                mean, info = tier.fold()
+                up_bytes += info["edge_to_root_bytes"]
+            else:
+                mean = agg.finalize(reset=True)
+            parts_hist.append(len(buf_k))
+            buf_k, buf_j, buf_w, buf_s = [], [], [], []
+            version += 1
+            fold_times.append(now - last_fold_t)
+            last_fold_t = now
+            # batch refill at the fold boundary (the cohort approximation
+            # of the per-arrival refill): top the fleet back up to n_conc.
+            if version < cfg.rounds:
+                need = n_conc - len(heap)
+                if need > 0:
+                    ids, wait = _draw_or_wait(avail, now, need,
+                                              cfg.n_clients, rng)
+                    dispatch(ids, now + wait)
+
+    extra = {
+        "staleness_hist": np.bincount(
+            np.asarray(staleness_hist, dtype=np.int64)
+        ).tolist() if staleness_hist else [],
+        "dropped_updates": dropped,
+        "dropped_update_bytes": dropped_bytes,
+    }
+    return FleetResult(
+        rounds_run=version,
+        participants_per_round=parts_hist,
+        dropped_per_round=[0] * version,
+        round_times=fold_times,
+        upload_bytes=up_bytes,
+        download_bytes=down_bytes,
+        final_update=mean,
+        telemetry=_telemetry(channel, tier, cfg, extra=extra),
+    )

@@ -1,0 +1,237 @@
+"""Hierarchical edge-aggregation tier (client → edge → root).
+
+A flat T-FedAvg server fans every client blob into one aggregator, so the
+root's ingress bytes grow with the PARTICIPANT count. Deployed-scale FL
+(the Le et al. survey's main lever) splits the fan-in: clients upload to a
+regional EDGE aggregator, each edge folds its region with the existing
+streaming ``fed.aggregator.Aggregator`` (fused packed fan-in kernel,
+O(chunk) memory), and ships ONE record upstream — so the root's ingress
+scales with the number of edges, not clients.
+
+Two upstream modes per ``HierarchyConfig.requantize_at_edge``:
+
+  - True (default): the edge re-quantizes its regional mean with the
+    server-side FTTQ path (``core.tfedavg.server_requantize`` — fixed
+    Δ = server_delta, Prop-4.1 optimal scale, fused one-pass encode), so
+    the edge→root hop ships 2-bit ternary + per-layer scales: the SAME
+    ~16× byte cut the paper's client→server hop gets, now on both hops.
+    Requantization is lossy (one extra ternary round per tier), which is
+    exactly the trade the tier buys bytes with.
+  - False: the edge ships its dense regional mean as raw fp32 wire
+    records. Lossless — 2-tier aggregation computes the same weighted
+    mean as a flat ``Aggregator`` over the union of clients (bit-identical
+    when the per-edge partial sums are exact, property-tested in
+    ``tests/test_hierarchy.py``) — but the edge→root hop pays fp32 bytes.
+
+Every hop stays on the versioned ``repro.comm.wire`` format, and the tier
+keeps an exact BYTE LEDGER: Σ client blob bytes ingested by edges ==
+client_to_edge_bytes, Σ edge blob bytes ingested by the root ==
+edge_to_root_bytes, and the two tiers' ledgers must balance against the
+server's metered upload bytes (asserted by the bench smoke run and the
+telemetry consumers).
+
+Weights compose exactly: an edge's upstream record carries weight
+W_e = Σ_{k∈e} w_k, so the root mean Σ_e W_e·mean_e / Σ_e W_e equals the
+flat mean Σ_k w_k·θ_k / Σ_k w_k whenever the edge hop is lossless.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.comm.wire import encode_update
+from repro.core import fttq as fttq_mod
+from repro.core.tfedavg import server_requantize
+from repro.fed.aggregator import Aggregator
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchyConfig:
+    """Serializable tier knobs (``FedConfig.hierarchy``).
+
+    Attributes:
+      n_edges: number of edge aggregators; 0 = flat (no tier — every
+        pre-hierarchy run reproduces bit-exactly).
+      requantize_at_edge: True → edges re-quantize their regional mean to
+        ternary before the upstream hop (lossy, ~16× fewer edge→root
+        bytes); False → edges ship the dense regional mean (lossless).
+      assignment: "mod" → client k reports to edge k % n_edges (interleaves
+        the DiurnalChurn timezone cohorts across edges); "block" → edge
+        k·E // N (contiguous regions, cohort-aligned when E divides the
+        cohort count).
+      edge_chunk_c: clients per fused kernel launch at each edge.
+      root_chunk_c: edge records per fused kernel launch at the root.
+    """
+
+    n_edges: int = 0
+    requantize_at_edge: bool = True
+    assignment: str = "mod"
+    edge_chunk_c: int = 16
+    root_chunk_c: int = 16
+
+    @property
+    def enabled(self) -> bool:
+        return self.n_edges > 0
+
+
+def edge_of(client_id: int, n_clients: int, cfg: HierarchyConfig) -> int:
+    """The edge client ``client_id`` reports to."""
+    if cfg.assignment == "mod":
+        return int(client_id) % cfg.n_edges
+    if cfg.assignment == "block":
+        return (int(client_id) * cfg.n_edges) // max(int(n_clients), 1)
+    raise ValueError(f"unknown edge assignment {cfg.assignment!r}")
+
+
+def edges_of(client_ids: np.ndarray, n_clients: int,
+             cfg: HierarchyConfig) -> np.ndarray:
+    """Vectorized ``edge_of`` for a batch of client ids (fleet path)."""
+    ids = np.asarray(client_ids, dtype=np.int64)
+    if cfg.assignment == "mod":
+        return ids % cfg.n_edges
+    if cfg.assignment == "block":
+        return (ids * cfg.n_edges) // max(int(n_clients), 1)
+    raise ValueError(f"unknown edge assignment {cfg.assignment!r}")
+
+
+class EdgeTier:
+    """One tier of edge aggregators plus the root fan-in.
+
+    Long-lived like ``Aggregator``: per-edge and root staging buffers and
+    leaf plans persist across rounds (``fold`` resets the accumulated
+    state, not the plans). The cumulative byte ledger survives resets —
+    it is run-level accounting, mirroring ``Aggregator.dropped_bytes``.
+    """
+
+    def __init__(self, cfg: HierarchyConfig, fttq: fttq_mod.FTTQConfig,
+                 n_clients: int, *, fused_encode: bool = True,
+                 interpret: bool | None = None):
+        if cfg.n_edges < 1:
+            raise ValueError(f"EdgeTier needs n_edges ≥ 1, got {cfg.n_edges}")
+        self.cfg = cfg
+        self.fttq = fttq
+        self.n_clients = int(n_clients)
+        self.fused_encode = fused_encode
+        self.interpret = interpret
+        # edge aggregators materialize lazily: a million-client fleet with
+        # sparse participation only pays for the edges that see traffic.
+        self._edges: dict[int, Aggregator] = {}
+        self._edge_weight = np.zeros(cfg.n_edges, dtype=np.float64)
+        self._edge_clients = np.zeros(cfg.n_edges, dtype=np.int64)
+        self._edge_staleness = np.zeros(cfg.n_edges, dtype=np.float64)
+        self._root = Aggregator(chunk_c=cfg.root_chunk_c, interpret=interpret)
+        # cumulative ledger (never reset): bytes per tier, per edge.
+        self.ingest_bytes = np.zeros(cfg.n_edges, dtype=np.int64)
+        self.upstream_bytes = np.zeros(cfg.n_edges, dtype=np.int64)
+        self.clients_seen = np.zeros(cfg.n_edges, dtype=np.int64)
+        self.root_ingest_bytes = 0
+        self.folds = 0
+
+    # -- ingest ------------------------------------------------------------
+
+    def _edge_agg(self, e: int) -> Aggregator:
+        agg = self._edges.get(e)
+        if agg is None:
+            agg = Aggregator(chunk_c=self.cfg.edge_chunk_c,
+                             interpret=self.interpret)
+            self._edges[e] = agg
+        return agg
+
+    def add(self, client_id: int, blob: bytes, weight: float,
+            staleness: float = 0.0) -> None:
+        """Route one client's wire blob to its edge (zero-copy ingest)."""
+        e = edge_of(client_id, self.n_clients, self.cfg)
+        self._edge_agg(e).add(blob, weight=weight)
+        self._edge_weight[e] += float(weight)
+        self._edge_clients[e] += 1
+        self._edge_staleness[e] += float(staleness)
+        self.ingest_bytes[e] += len(blob)
+        self.clients_seen[e] += 1
+
+    def add_cohort(self, edge: int, blob: bytes, weight: float,
+                   n_clients: int, staleness_sum: float = 0.0) -> None:
+        """Vectorized-fleet ingest: ``n_clients`` clients of one edge
+        shipped byte-identical payloads (a cohort), so the edge folds ONE
+        weighted add (``weight`` = the cohort's summed client weights —
+        exactly Σ w_k·θ over the cohort since the θs are identical) while
+        the ledger books every client's wire bytes individually."""
+        self._edge_agg(edge).add(blob, weight=weight)
+        self._edge_weight[edge] += float(weight)
+        self._edge_clients[edge] += int(n_clients)
+        self._edge_staleness[edge] += float(staleness_sum)
+        self.ingest_bytes[edge] += int(n_clients) * len(blob)
+        self.clients_seen[edge] += int(n_clients)
+
+    @property
+    def pending_clients(self) -> int:
+        return int(self._edge_clients.sum())
+
+    # -- the edge→root hop -------------------------------------------------
+
+    def collect(self) -> list[tuple[int, bytes, float]]:
+        """Flush every edge with pending clients into ONE upstream wire
+        blob each: (edge, blob, regional weight W_e). Resets the per-round
+        edge state; the cumulative ledger keeps counting."""
+        out = []
+        for e in sorted(self._edges):
+            if self._edge_clients[e] == 0:
+                continue
+            mean = self._edges[e].finalize(reset=True)
+            if self.cfg.requantize_at_edge:
+                mean = server_requantize(mean, self.fttq,
+                                         fused=self.fused_encode)
+            blob = encode_update(mean)
+            w = float(self._edge_weight[e])
+            self.upstream_bytes[e] += len(blob)
+            out.append((e, blob, w))
+        self._edge_weight[:] = 0.0
+        self._edge_clients[:] = 0
+        return out
+
+    def fold(self) -> tuple[Pytree, dict]:
+        """One full tier round: edges flush upstream, the root aggregates
+        the edge records (weighted by W_e), and the global mean comes back
+        with the round's per-tier telemetry."""
+        records = self.collect()
+        if not records:
+            raise ValueError("EdgeTier.fold: no client updates were added")
+        round_up = 0
+        for _e, blob, w in records:
+            self._root.add(blob, weight=w)
+            self.root_ingest_bytes += len(blob)
+            round_up += len(blob)
+        mean = self._root.finalize(reset=True)
+        self.folds += 1
+        return mean, {
+            "edges_active": len(records),
+            "edge_to_root_bytes": round_up,
+        }
+
+    # -- ledger ------------------------------------------------------------
+
+    def telemetry(self) -> dict:
+        """Cumulative per-tier breakdown. The ledger invariant — what the
+        edges shipped is exactly what the root ingested — is checked here
+        and surfaced so smoke runs can assert it."""
+        c2e = int(self.ingest_bytes.sum())
+        e2r = int(self.upstream_bytes.sum())
+        return {
+            "n_edges": self.cfg.n_edges,
+            "requantize_at_edge": self.cfg.requantize_at_edge,
+            "client_to_edge_bytes": c2e,
+            "edge_to_root_bytes": e2r,
+            "root_ingest_bytes": self.root_ingest_bytes,
+            "ledger_balanced": e2r == self.root_ingest_bytes,
+            "clients_per_edge": self.clients_seen.tolist(),
+            "bytes_per_edge": self.ingest_bytes.tolist(),
+            "upstream_bytes_per_edge": self.upstream_bytes.tolist(),
+            "mean_staleness_per_edge": (
+                self._edge_staleness / np.maximum(self.clients_seen, 1)
+            ).tolist(),
+            "folds": self.folds,
+        }

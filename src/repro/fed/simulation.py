@@ -54,6 +54,7 @@ from repro.fed.availability import (
     draw_participants,
     make_availability,
 )
+from repro.fed.hierarchy import EdgeTier, HierarchyConfig
 from repro.optim import Optimizer
 
 Pytree = Any
@@ -96,6 +97,14 @@ class FedConfig:
     # bit-exactly; "diurnal"/"trace" feed both servers' participant draws).
     availability: AvailabilityConfig = dataclasses.field(
         default_factory=AvailabilityConfig
+    )
+    # hierarchical edge-aggregation tier (n_edges=0 → flat, the historical
+    # topology — pre-hierarchy runs reproduce bit-exactly). With edges on,
+    # survivors fan into regional edge aggregators that each ship ONE
+    # (optionally re-quantized) record to the root, so root ingress bytes
+    # scale with the edge count instead of the participant count.
+    hierarchy: HierarchyConfig = dataclasses.field(
+        default_factory=HierarchyConfig
     )
     # hard staleness cap for async arrivals (0 → no cap). Past the cap an
     # update is dropped ("drop") or extra-discounted ("downweight").
@@ -292,6 +301,11 @@ def run_federated_sync(
     round_times, dropped_hist = [], []
     n_sel = max(int(np.ceil(cfg.participation * len(clients))), 1)
     t_now = 0.0                # cumulative simulated time (availability clock)
+    # long-lived edge tier (when enabled): per-edge staging buffers, leaf
+    # plans and the cumulative byte ledger persist across rounds.
+    tier = (EdgeTier(cfg.hierarchy, cfg.fttq, len(clients),
+                     fused_encode=cfg.fused_encode)
+            if cfg.hierarchy.enabled else None)
 
     for r in range(cfg.rounds):
         # ---- selection (from the clients ONLINE right now) --------------
@@ -361,7 +375,16 @@ def run_federated_sync(
         t_now += round_times[-1]
 
         # ---- aggregation (server decodes the real upstream buffers) -----
-        if cfg.fused_aggregation:
+        if tier is not None:
+            # hierarchical: survivors fan into their regional edges; each
+            # edge ships one (optionally re-quantized) record to the root.
+            # The edge→root hop is real wire traffic, booked as upload.
+            for total, k, up_blob in survivors:
+                up_bytes += len(up_blob)
+                tier.add(k, up_blob, weight=len(clients[k]))
+            global_params, fold_info = tier.fold()
+            up_bytes += fold_info["edge_to_root_bytes"]
+        elif cfg.fused_aggregation:
             # streaming fused fan-in: zero-copy record decode into stacked
             # packed buffers, one Pallas launch per chunk_c clients — the
             # per-client dense trees of the reference loop never exist.
@@ -387,6 +410,19 @@ def run_federated_sync(
             loss_hist.append(float(ls))
 
     summary = channel.summary()
+    telemetry = {
+        # every straggler (pre-skipped before training OR arrived past
+        # the deadline); the bytes cover only the latter — pre-skipped
+        # clients never uploaded, so they waste no wire bytes.
+        "dropped_updates": int(sum(dropped_hist)),
+        "dropped_update_bytes": dropped_blob_bytes,
+        "retrans_bytes": summary.get("retrans_bytes", 0),
+        "retries": summary.get("retries", 0),
+        "goodput_fraction": summary.get("goodput_fraction", 1.0),
+        "availability": cfg.availability.kind,
+    }
+    if tier is not None:
+        telemetry["hierarchy"] = tier.telemetry()
     return FedResult(
         accuracy=acc_hist,
         loss=loss_hist,
@@ -397,17 +433,7 @@ def run_federated_sync(
         round_times=round_times,
         dropped_per_round=dropped_hist,
         transfer_summary=summary,
-        telemetry={
-            # every straggler (pre-skipped before training OR arrived past
-            # the deadline); the bytes cover only the latter — pre-skipped
-            # clients never uploaded, so they waste no wire bytes.
-            "dropped_updates": int(sum(dropped_hist)),
-            "dropped_update_bytes": dropped_blob_bytes,
-            "retrans_bytes": summary.get("retrans_bytes", 0),
-            "retries": summary.get("retries", 0),
-            "goodput_fraction": summary.get("goodput_fraction", 1.0),
-            "availability": cfg.availability.kind,
-        },
+        telemetry=telemetry,
     )
 
 

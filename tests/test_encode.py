@@ -170,6 +170,46 @@ def test_fused_bitexact_property_sweep():
         assert rr == rf, (m, n)
 
 
+@pytest.mark.parametrize("rows,cols", [
+    # every pad-boundary residue of the per-layer element count
+    # layer_n = rows·cols: % 4 ∈ {1, 2, 3} plus the clean case
+    (5, 5), (3, 6), (9, 3), (4, 4),
+])
+@pytest.mark.parametrize("n_layers", [1, 2, 3, 5])
+def test_ragged_stacked_fused_bitexact(n_layers, rows, cols):
+    """The stacked repack path (layer_n % 4 ≠ 0 → per-layer code streams
+    sliced, concatenated, re-padded with code 1): byte-identical to the
+    reference per-layer chain at every pad residue × layer count."""
+    key = jax.random.PRNGKey(n_layers * 100 + rows * 10 + cols)
+    params = {"stack": {"w": jax.random.normal(key, (n_layers, rows, cols))}}
+    wq = F.init_wq_tree(params, CFG)
+    ref = encode_update(client_update_payload(params, wq, CFG, fused=False))
+    fus = encode_update(client_update_payload(params, wq, CFG, fused=True))
+    assert ref == fus, (n_layers, rows, cols)
+    rr = encode_update(server_requantize(params, CFG, fused=False))
+    rf = encode_update(server_requantize(params, CFG, fused=True))
+    assert rr == rf, (n_layers, rows, cols)
+
+
+def test_ragged_stacked_mixed_tree_property_sweep():
+    """Randomized trees mixing clean and ragged stacks with 2-D leaves:
+    the fused encoder must never fall back or drift at any boundary."""
+    rng = np.random.default_rng(11)
+    for trial in range(6):
+        layers = int(rng.integers(1, 5))
+        r, c = int(rng.integers(2, 12)), int(rng.integers(2, 12))
+        key = jax.random.split(jax.random.PRNGKey(40 + trial), 3)
+        params = {
+            "stack": {"w": jax.random.normal(key[0], (layers, r, c))},
+            "clean": {"w": jax.random.normal(key[1], (2, 4, 8))},
+            "flat": {"w": jax.random.normal(key[2], (17, 3))},
+        }
+        wq = F.init_wq_tree(params, CFG)
+        ref = encode_update(client_update_payload(params, wq, CFG, fused=False))
+        fus = encode_update(client_update_payload(params, wq, CFG, fused=True))
+        assert ref == fus, (layers, r, c)
+
+
 def test_fused_payload_decodes_to_reference_codes():
     """Sanity beyond byte equality: decoded fused codes equal the reference
     ternarization."""

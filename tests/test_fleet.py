@@ -1,0 +1,309 @@
+"""Fleet-scale simulation: EventHeap vs heapq total-order parity, batched
+channel draws vs the scalar stream, vectorized TraceReplay vs a per-client
+reference, and end-to-end ``run_fleet`` rounds (flat / 2-tier / async /
+compat) with the byte ledger balanced."""
+
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.comm import Channel, ChannelConfig
+from repro.fed import FedConfig, FleetConfig, HierarchyConfig, run_fleet
+from repro.fed.availability import AvailabilityConfig, TraceReplay
+from repro.fed.fleet import EventHeap
+
+
+# --------------------------------------------------------------------------
+# EventHeap.
+# --------------------------------------------------------------------------
+
+
+def test_event_heap_matches_heapq_order():
+    """Random interleaving of push / push_many / pop: pop order is the
+    exact (time, seq) total order heapq produces — ties included."""
+    rng = np.random.default_rng(0)
+    heap = EventHeap(capacity=2)
+    ref: list = []
+    seq = 0
+    popped, popped_ref = [], []
+    for _ in range(300):
+        op = rng.integers(3)
+        if op == 0:
+            t = float(rng.integers(10))        # coarse times force seq ties
+            heap.push(t, ("p", seq))
+            heapq.heappush(ref, (t, seq, ("p", seq)))
+            seq += 1
+        elif op == 1:
+            k = int(rng.integers(1, 6))
+            ts = rng.integers(10, size=k).astype(np.float64)
+            heap.push_many(ts, [("m", seq + i) for i in range(k)])
+            for i, t in enumerate(ts):
+                heapq.heappush(ref, (float(t), seq + i, ("m", seq + i)))
+            seq += k
+        elif ref:
+            popped.append(heap.pop())
+            popped_ref.append(heapq.heappop(ref))
+    while ref:
+        popped.append(heap.pop())
+        popped_ref.append(heapq.heappop(ref))
+    assert popped == popped_ref
+    assert len(heap) == 0
+
+
+def test_event_heap_guards_and_growth():
+    heap = EventHeap(capacity=1)
+    with pytest.raises(IndexError):
+        heap.pop()
+    with pytest.raises(IndexError):
+        heap.peek_time()
+    with pytest.raises(ValueError, match="payloads"):
+        heap.push_many(np.array([1.0, 2.0]), ["only-one"])
+    heap.push_many(np.empty(0), [])        # no-op
+    for i in range(40):                    # grows far past capacity=1
+        heap.push(float(40 - i), i)
+    assert len(heap) == 40
+    assert heap.peek_time() == 1.0
+    assert [heap.pop()[2] for _ in range(40)] == list(range(40))[::-1]
+
+
+# --------------------------------------------------------------------------
+# Batched channel draws.
+# --------------------------------------------------------------------------
+
+
+def _chan(seed=0, n=16, **kw):
+    return Channel(ChannelConfig(**kw), n, seed=seed)
+
+
+def test_transfer_batch_lossless_stream_identical_to_scalar():
+    """With loss off, one batched call consumes the rng stream exactly like
+    N sequential scalar transfers — seconds bit-identical."""
+    ids = np.array([3, 0, 7, 7, 12])
+    nbytes = np.array([1000, 50_000, 0, 777, 123_456])
+    a, b = _chan(seed=5), _chan(seed=5)
+    scalar = np.array([a.transfer(int(k), int(n), "up")
+                       for k, n in zip(ids, nbytes)])
+    batched = b.transfer_batch(ids, nbytes, "up")
+    np.testing.assert_array_equal(scalar, batched)
+    # and the NEXT draw still agrees (stream position identical)
+    np.testing.assert_array_equal(
+        a.transfer(1, 10, "down"), b.transfer_batch([1], [10], "down")[0]
+    )
+
+
+def test_transfer_batch_compat_matches_scalar_under_loss():
+    """Under loss the batched geometric fold reorders the stream, so
+    compat=True routes through the scalar path — bit-exact legacy runs."""
+    kw = dict(loss_rate=0.3, chunk_bytes=1024)
+    ids = np.array([0, 2, 5])
+    nbytes = np.array([10_000, 3_000, 100_000])
+    a, b = _chan(seed=9, **kw), _chan(seed=9, **kw)
+    scalar = np.array([a.transfer(int(k), int(n), "up")
+                       for k, n in zip(ids, nbytes)])
+    np.testing.assert_array_equal(
+        scalar, b.transfer_batch(ids, nbytes, "up", compat=True)
+    )
+    sa, sb = a.summary(), b.summary()
+    assert sa["retrans_bytes"] == sb["retrans_bytes"]
+    assert sa["retries"] == sb["retries"]
+
+
+def test_transfer_batch_single_lossy_matches_scalar():
+    """A size-1 lossy batch draws the same chunks as one scalar transfer."""
+    kw = dict(loss_rate=0.4, chunk_bytes=512)
+    a, b = _chan(seed=3, **kw), _chan(seed=3, **kw)
+    for nb in (100, 512, 5000, 0):
+        np.testing.assert_array_equal(
+            a.transfer(4, nb, "up"),
+            b.transfer_batch([4], [nb], "up")[0],
+        )
+
+
+def test_transfer_batch_ledger_merges_into_summary():
+    ch = _chan(seed=1, loss_rate=0.2, chunk_bytes=256)
+    ch.transfer(0, 4096, "up")                       # scalar event
+    ch.transfer_batch([1, 2, 3], [4096] * 3, "up")   # batched ledger
+    s = ch.summary()
+    assert s["n_transfers"] == 4
+    assert s["total_bytes"] == 4 * 4096
+    assert 0 < s["goodput_fraction"] <= 1.0
+    assert s["p95_seconds"] >= s["mean_seconds"] > 0
+
+
+def test_transfer_batch_share_nic_caps_rate():
+    """share_nic splits the server NIC across the batch: N simultaneous
+    flows through a tight NIC take ~N× a lone transfer's data phase."""
+    kw = dict(server_bandwidth_bytes_s=1e6, bandwidth_sigma=0.0,
+              latency_jitter_s=0.0)
+    lone = _chan(seed=2, **kw).transfer_batch([0], [1_000_000], "down",
+                                              share_nic=True)[0]
+    ch = _chan(seed=2, **kw)
+    shared = ch.transfer_batch(np.arange(10), [1_000_000] * 10, "down",
+                               share_nic=True)
+    assert shared.min() > 5 * lone
+
+
+def test_compute_time_batch_matches_scalar():
+    ch = _chan(seed=7)
+    ids = np.array([0, 3, 9])
+    batched = ch.compute_time_batch(ids, np.array([100, 250, 400]))
+    scalar = [ch.compute_time(int(k), n)
+              for k, n in zip(ids, (100, 250, 400))]
+    np.testing.assert_array_equal(batched, np.array(scalar))
+
+
+# --------------------------------------------------------------------------
+# Vectorized TraceReplay.
+# --------------------------------------------------------------------------
+
+
+def _mask_reference(trace, t):
+    tf = t % trace.horizon_s
+    return np.array([
+        int(np.searchsorted(s, tf, side="right")) % 2 == 1
+        for s in trace.schedules
+    ])
+
+
+def test_trace_replay_mask_matches_per_client_reference():
+    trace = TraceReplay.generate(50, mean_on_s=30.0, mean_off_s=20.0,
+                                 horizon_s=500.0, seed=4)
+    for t in (0.0, 17.3, 250.0, 499.99, 731.4, 1500.0):
+        np.testing.assert_array_equal(
+            trace.available_mask(t), _mask_reference(trace, t), err_msg=str(t)
+        )
+
+
+def test_trace_replay_next_change_is_first_boundary():
+    trace = TraceReplay([np.array([5.0, 10.0]), np.array([2.0, 8.0, 12.0])],
+                        horizon_s=20.0)
+    assert trace.next_change(0.0) == 2.0
+    assert trace.next_change(2.0) == 5.0
+    assert trace.next_change(12.0) == 20.0          # wrap is a change point
+    assert trace.next_change(25.0) == 28.0          # folded: tf=5 → 8
+    # the mask genuinely flips at every reported change point
+    t = 0.0
+    for _ in range(12):
+        t2 = trace.next_change(t)
+        assert not np.array_equal(trace.available_mask(t2),
+                                  trace.available_mask(t2 - 1e-6)) or \
+            (t2 % trace.horizon_s) == 0.0
+        t = t2
+
+
+def test_trace_replay_empty_schedule_client_never_online():
+    trace = TraceReplay([np.array([1.0, 9.0]), np.empty(0)], horizon_s=10.0)
+    mask = trace.available_mask(5.0)
+    assert mask.tolist() == [True, False]
+
+
+# --------------------------------------------------------------------------
+# run_fleet end to end.
+# --------------------------------------------------------------------------
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "dense": {"w": rng.standard_normal((64, 32)).astype(np.float32),
+                  "b": np.zeros(32, np.float32)},
+        "head": {"w": rng.standard_normal((32, 10)).astype(np.float32)},
+    }
+
+
+def _fed(**kw):
+    base = dict(n_clients=2000, rounds=2, participation=0.05,
+                availability=AvailabilityConfig(kind="diurnal"))
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def test_fleet_sync_flat_round():
+    res = run_fleet(_params(), _fed())
+    assert res.rounds_run == 2
+    assert res.participants_per_round[0] + res.dropped_per_round[0] == 100
+    assert res.upload_bytes > 0 and res.download_bytes > 0
+    assert res.total_time_s > 0
+    assert res.final_update is not None
+    assert res.telemetry["transfer_summary"]["n_transfers"] > 0
+
+
+def test_fleet_sync_tier_ledger_and_root_bytes():
+    flat = run_fleet(_params(), _fed(seed=1))
+    tier = run_fleet(_params(), _fed(seed=1,
+                                     hierarchy=HierarchyConfig(n_edges=8)))
+    hier = tier.telemetry["hierarchy"]
+    assert hier["ledger_balanced"]
+    assert hier["folds"] == 2
+    # same seed → same participants/draws; the tier books the same
+    # client→edge bytes as the flat run's total upload.
+    assert hier["client_to_edge_bytes"] == flat.upload_bytes
+    assert tier.upload_bytes == (hier["client_to_edge_bytes"]
+                                 + hier["edge_to_root_bytes"])
+    # the root hop is one record per ACTIVE edge — far under the fan-in.
+    assert 0 < hier["edge_to_root_bytes"] < hier["client_to_edge_bytes"]
+    assert sum(1 for c in hier["clients_per_edge"] if c) <= 8
+
+
+def test_fleet_sync_compat_matches_vectorized_when_lossless():
+    """Lossless draws are stream-compatible: the compat (scalar call order)
+    fleet and the vectorized fleet produce identical rounds."""
+    a = run_fleet(_params(), _fed(n_clients=200, participation=0.1),
+                  FleetConfig(compat=False, share_nic=False))
+    b = run_fleet(_params(), _fed(n_clients=200, participation=0.1),
+                  FleetConfig(compat=True, share_nic=False))
+    assert a.round_times == b.round_times
+    assert a.upload_bytes == b.upload_bytes
+    assert a.participants_per_round == b.participants_per_round
+
+
+def test_fleet_sync_deadline_drops_stragglers():
+    res = run_fleet(
+        _params(),
+        _fed(channel=ChannelConfig(deadline_s=0.3, bandwidth_sigma=2.0,
+                                   compute_speed_sigma=1.0)),
+    )
+    assert sum(res.dropped_per_round) > 0
+    assert all(p >= 1 for p in res.participants_per_round)
+
+
+def test_fleet_async_folds_and_staleness():
+    res = run_fleet(
+        _params(),
+        _fed(mode="async", rounds=3, buffer_k=16, max_concurrency=64,
+             hierarchy=HierarchyConfig(n_edges=4)),
+    )
+    assert res.rounds_run == 3
+    assert res.participants_per_round == [16, 16, 16]
+    assert res.telemetry["hierarchy"]["ledger_balanced"]
+    assert len(res.telemetry["staleness_hist"]) >= 1
+    assert res.upload_bytes > 0
+
+
+def test_fleet_async_staleness_drop_policy():
+    res = run_fleet(
+        _params(),
+        _fed(mode="async", rounds=4, buffer_k=8, max_concurrency=128,
+             max_staleness=1, staleness_policy="drop"),
+    )
+    dropped = res.telemetry["dropped_updates"]
+    assert res.rounds_run == 4
+    # arrivals lagging more than one fold are dropped but their wire
+    # bytes are still billed
+    assert res.telemetry["dropped_update_bytes"] >= dropped > 0
+
+
+def test_fleet_trace_availability_runs():
+    res = run_fleet(
+        _params(),
+        _fed(n_clients=300, availability=AvailabilityConfig(
+            kind="trace", mean_on_s=60.0, mean_off_s=30.0, horizon_s=600.0)),
+    )
+    assert res.rounds_run == 2
+    assert all(p >= 1 for p in res.participants_per_round)
+
+
+def test_fleet_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="mode"):
+        run_fleet(_params(), _fed(mode="semi-sync"))

@@ -1,0 +1,311 @@
+"""Edge-aggregation tier: flat-equivalence (lossless 2-tier == one flat
+Aggregator — bit-identical under exact arithmetic), edge-requantize
+statistics, the byte ledger, and both servers running with the tier on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.wire import encode_update
+from repro.core import CodecSpec, FTTQConfig, compress_pytree
+from repro.core import fttq as F
+from repro.core.tfedavg import client_update_payload, server_requantize
+from repro.data import partition_iid, synthetic_classification
+from repro.fed import FedConfig, run_federated
+from repro.fed.aggregator import Aggregator
+from repro.fed.hierarchy import EdgeTier, HierarchyConfig, edge_of, edges_of
+from repro.models.paper_models import init_mlp_mnist, mlp_mnist
+from repro.optim import adam
+
+CFG = FTTQConfig()
+
+
+def _tree_equal(a, b, *, atol=0.0):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    for (pa, la), (pb, lb) in zip(fa, fb):
+        assert jax.tree_util.keystr(pa) == jax.tree_util.keystr(pb)
+        assert la.dtype == lb.dtype, (pa, la.dtype, lb.dtype)
+        if atol == 0.0:
+            np.testing.assert_array_equal(
+                np.asarray(la), np.asarray(lb), err_msg=str(pa)
+            )
+        else:
+            np.testing.assert_allclose(
+                np.asarray(la, np.float32), np.asarray(lb, np.float32),
+                atol=atol, rtol=1e-5, err_msg=str(pa),
+            )
+
+
+# --------------------------------------------------------------------------
+# Edge assignment.
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("assignment", ["mod", "block"])
+def test_edges_of_matches_scalar(assignment):
+    cfg = HierarchyConfig(n_edges=7, assignment=assignment)
+    ids = np.arange(100)
+    vec = edges_of(ids, 100, cfg)
+    assert vec.tolist() == [edge_of(int(k), 100, cfg) for k in ids]
+    assert vec.min() >= 0 and vec.max() < 7
+
+
+def test_hierarchy_config_guards():
+    assert not HierarchyConfig().enabled
+    assert HierarchyConfig(n_edges=4).enabled
+    with pytest.raises(ValueError, match="n_edges"):
+        EdgeTier(HierarchyConfig(n_edges=0), CFG, 10)
+    with pytest.raises(ValueError, match="assignment"):
+        edge_of(0, 10, HierarchyConfig(n_edges=2, assignment="nope"))
+
+
+# --------------------------------------------------------------------------
+# Tier equivalence: lossless 2-tier == flat.
+# --------------------------------------------------------------------------
+
+
+def _exact_tree(rng):
+    """Integer-valued fp32 leaves: every sum/mean below stays exact in fp32
+    (values bounded, counts powers of two), so flat-vs-tier equality can be
+    asserted BIT-IDENTICAL, not approximately. Ragged (n % 4 ≠ 0), stacked,
+    bias, and int-counter leaves cover every aggregation corner."""
+    def ints(shape):
+        return rng.integers(-8, 9, size=shape).astype(np.float32)
+
+    return {
+        "enc": {"w": jnp.asarray(ints((17, 9))), "b": jnp.asarray(ints((9,)))},
+        "stack": {"w": jnp.asarray(ints((3, 8, 12)))},
+        "head": {"w": jnp.asarray(ints((12, 5)))},
+        "steps": jnp.asarray(7, jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("n_edges,assignment", [
+    (1, "mod"), (2, "mod"), (4, "mod"), (2, "block"),
+])
+def test_lossless_tier_bit_identical_to_flat(n_edges, assignment):
+    """requantize_at_edge=False: the 2-tier weighted mean over exact
+    fp32 inputs equals one flat Aggregator over the union of clients,
+    bit for bit — weights compose as W_e = Σ_{k∈e} w_k."""
+    rng = np.random.default_rng(0)
+    n_clients = 8                        # power of two per edge for 1/2/4
+    blobs = [encode_update(_exact_tree(rng)) for _ in range(n_clients)]
+
+    flat = Aggregator(chunk_c=4)
+    tier = EdgeTier(
+        HierarchyConfig(n_edges=n_edges, requantize_at_edge=False,
+                        assignment=assignment, edge_chunk_c=4),
+        CFG, n_clients,
+    )
+    for k, b in enumerate(blobs):
+        flat.add(b, weight=1.0)
+        tier.add(k, b, weight=1.0)
+    mean_tier, info = tier.fold()
+    assert info["edges_active"] == n_edges
+    _tree_equal(flat.finalize(), mean_tier, atol=0.0)
+
+
+def test_lossless_tier_close_to_flat_general_inputs():
+    """General fp inputs + real ternary client payloads + a mixed-codec
+    (fp16 residual) variant: 2-tier mean within fp tolerance of flat."""
+    spec = CodecSpec(kind="ternary", residual="fp16", fttq=CFG)
+    blobs = []
+    for c in range(6):
+        k = jax.random.split(jax.random.PRNGKey(c), 3)
+        params = {
+            "enc": {"w": jax.random.normal(k[0], (17, 9))},
+            "stack": {"w": jax.random.normal(k[1], (3, 8, 12))},
+            "head": {"b": jax.random.normal(k[2], (5,))},
+        }
+        payload = client_update_payload(params, F.init_wq_tree(params, CFG),
+                                        CFG)
+        if c % 2:
+            payload, _ = compress_pytree(payload, spec)
+        blobs.append(encode_update(payload))
+
+    flat = Aggregator(chunk_c=4)
+    tier = EdgeTier(HierarchyConfig(n_edges=3, requantize_at_edge=False),
+                    CFG, len(blobs))
+    for k, b in enumerate(blobs):
+        flat.add(b, weight=10.0 + 3 * k)
+        tier.add(k, b, weight=10.0 + 3 * k)
+    _tree_equal(flat.finalize(), tier.fold()[0], atol=1e-5)
+
+
+def test_cohort_add_equals_individual_adds():
+    """add_cohort(w=Σw_k, n) folds exactly like n individual adds of the
+    byte-identical blob (power-of-two weights keep the sum exact), while
+    booking n× the wire bytes."""
+    rng = np.random.default_rng(3)
+    blob = encode_update(_exact_tree(rng))
+    other = encode_update(_exact_tree(rng))
+
+    a = EdgeTier(HierarchyConfig(n_edges=2), CFG, 8)
+    for k in (0, 2, 4, 6):
+        a.add(k, blob, weight=2.0)
+    a.add(1, other, weight=4.0)
+    b = EdgeTier(HierarchyConfig(n_edges=2), CFG, 8)
+    b.add_cohort(0, blob, weight=8.0, n_clients=4)
+    b.add(1, other, weight=4.0)
+
+    _tree_equal(a.fold()[0], b.fold()[0], atol=0.0)
+    ta, tb = a.telemetry(), b.telemetry()
+    assert ta["client_to_edge_bytes"] == tb["client_to_edge_bytes"]
+    assert ta["clients_per_edge"] == tb["clients_per_edge"] == [4, 1]
+
+
+# --------------------------------------------------------------------------
+# Edge requantization.
+# --------------------------------------------------------------------------
+
+
+def test_requantize_tier_single_edge_matches_server_requantize():
+    """One edge, requantize on: the tier's fold is exactly
+    server_requantize(edge mean) shipped over the wire and dequantized by
+    the root aggregator."""
+    rng = np.random.default_rng(1)
+    blobs = [encode_update(_exact_tree(rng)) for _ in range(4)]
+    flat = Aggregator(chunk_c=4)
+    tier = EdgeTier(HierarchyConfig(n_edges=1), CFG, 4)
+    for k, b in enumerate(blobs):
+        flat.add(b, weight=1.0)
+        tier.add(k, b, weight=1.0)
+    root = Aggregator(chunk_c=16)
+    root.add(encode_update(server_requantize(flat.finalize(), CFG)),
+             weight=4.0)
+    _tree_equal(root.finalize(), tier.fold()[0], atol=0.0)
+
+
+def test_requantize_shrinks_upstream_bytes():
+    """The edge→root hop ships 2-bit codes instead of fp32: upstream bytes
+    per edge come in far under the dense record."""
+    k = jax.random.split(jax.random.PRNGKey(5), 2)
+    params = {"w1": jax.random.normal(k[0], (64, 64)),
+              "w2": jax.random.normal(k[1], (64, 32))}
+    blob = encode_update(params)
+    outs = {}
+    for requant in (False, True):
+        tier = EdgeTier(HierarchyConfig(n_edges=1,
+                                        requantize_at_edge=requant),
+                        CFG, 4)
+        for c in range(4):
+            tier.add(c, blob, weight=1.0)
+        tier.fold()
+        outs[requant] = int(tier.upstream_bytes.sum())
+    assert outs[True] < outs[False] / 3, outs
+
+
+def test_requantize_unbiased_over_seeds():
+    """FTTQ requantization error is (approximately) zero-mean over seeds:
+    averaging edge-requantized regional means across many seeded fleets
+    does not drift from the average of the dense means. This is what keeps
+    a tier of lossy edges from biasing the global model."""
+    err_sum, dense_scale, n = 0.0, 0.0, 0
+    for seed in range(12):
+        k = jax.random.split(jax.random.PRNGKey(seed), 2)
+        params = {"a": jax.random.normal(k[0], (32, 24)),
+                  "b": jax.random.normal(k[1], (24, 16))}
+        blob = encode_update(params)
+        tier = EdgeTier(HierarchyConfig(n_edges=1), CFG, 2)
+        tier.add(0, blob, weight=1.0)
+        requant, _ = tier.fold()
+        for leaf_d, leaf_q in zip(jax.tree_util.tree_leaves(params),
+                                  jax.tree_util.tree_leaves(requant)):
+            d = np.asarray(leaf_d, np.float64)
+            q = np.asarray(leaf_q, np.float64)
+            err_sum += float((q - d).sum())
+            dense_scale += float(np.abs(d).sum())
+            n += d.size
+    # |mean signed error| ≪ mean magnitude — no systematic drift.
+    assert abs(err_sum / n) < 0.02 * (dense_scale / n), (err_sum / n)
+
+
+# --------------------------------------------------------------------------
+# Byte ledger.
+# --------------------------------------------------------------------------
+
+
+def test_ledger_balances_and_accumulates_across_folds():
+    rng = np.random.default_rng(2)
+    blob = encode_update(_exact_tree(rng))
+    tier = EdgeTier(HierarchyConfig(n_edges=2), CFG, 8)
+    for round_ in range(3):
+        for k in range(6):
+            tier.add(k, blob, weight=1.0, staleness=float(round_))
+        tier.fold()
+    t = tier.telemetry()
+    assert t["ledger_balanced"]
+    assert t["client_to_edge_bytes"] == 3 * 6 * len(blob)
+    assert t["edge_to_root_bytes"] == t["root_ingest_bytes"] > 0
+    assert t["folds"] == 3
+    assert sum(t["clients_per_edge"]) == 18
+    assert sum(t["bytes_per_edge"]) == t["client_to_edge_bytes"]
+    assert sum(t["upstream_bytes_per_edge"]) == t["edge_to_root_bytes"]
+    # mod assignment over k∈0..5: edges see staleness means equal by
+    # symmetry — rounds 0,1,2 → mean 1.0 on both edges.
+    assert t["mean_staleness_per_edge"] == [1.0, 1.0]
+    with pytest.raises(ValueError, match="no client updates"):
+        tier.fold()
+
+
+# --------------------------------------------------------------------------
+# Both servers with the tier enabled.
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def task():
+    x, y, _xt, _yt = synthetic_classification(
+        jax.random.PRNGKey(0), 800, 10, 784, noise=3.0, n_test=100
+    )
+    clients = partition_iid(x, y, 6)
+    params = init_mlp_mnist(jax.random.PRNGKey(1))
+    return clients, params
+
+
+def _eval_none(_p):
+    return 0.0, 0.0
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_servers_run_with_hierarchy(task, mode):
+    clients, params = task
+    cfg = FedConfig(
+        algorithm="tfedavg", mode=mode, participation=1.0, local_epochs=1,
+        batch_size=32, rounds=3, buffer_k=3,
+        hierarchy=HierarchyConfig(n_edges=2),
+    )
+    res = run_federated(mlp_mnist, params, clients, cfg, adam(2e-3),
+                        _eval_none, eval_every=10)
+    hier = res.telemetry["hierarchy"]
+    assert hier["ledger_balanced"]
+    assert hier["n_edges"] == 2
+    assert hier["folds"] == 3
+    assert hier["client_to_edge_bytes"] > 0
+    # root ingress (the edge→root hop) is metered into upload_bytes on top
+    # of the client→edge bytes.
+    assert res.upload_bytes == (hier["client_to_edge_bytes"]
+                                + hier["edge_to_root_bytes"])
+
+
+def test_sync_hierarchy_learns(task):
+    """The tier is not a bytes-only stunt: a 2-tier requantizing run still
+    trains (loss moves the same direction as flat)."""
+    clients, params = task
+    cfg = FedConfig(algorithm="tfedavg", participation=1.0, local_epochs=2,
+                    batch_size=32, rounds=6,
+                    hierarchy=HierarchyConfig(n_edges=3))
+    x = jnp.asarray(np.concatenate([c.x[:50] for c in clients]))
+    y = jnp.asarray(np.concatenate([c.y[:50] for c in clients]))
+
+    def eval_fn(p):
+        logits = mlp_mnist(p, x)
+        acc = jnp.mean(jnp.argmax(logits, -1) == y)
+        return float(acc), 0.0
+
+    res = run_federated(mlp_mnist, params, clients, cfg, adam(2e-3),
+                        eval_fn, eval_every=6)
+    assert res.accuracy[-1] > 0.3, res.accuracy
