@@ -1,0 +1,106 @@
+"""Serving-under-load bench: p50/p99 latency vs offered QPS, batch sweep.
+
+Drives ``launch.serve_loop``'s closed loop against the packed-ternary
+engine: a deterministic Poisson arrival schedule with REAL measured forward
+wall times, swept over offered load × ``max_batch``. Offered-QPS points are
+calibrated from a measured batch-1 forward (0.5× / 2× / 8× the engine's
+single-stream capacity), so "past saturation" means past THIS runner's
+saturation — the shape of the surface, not absolute QPS, is the artifact.
+
+Rows (name, us_per_call, derived):
+  serve_b<B>_<load>   p50 latency µs at that (batch, load) cell,
+                      derived = achieved QPS
+  serve_batch_speedup derived = saturated throughput max_batch vs batch=1
+                      (the batching claim: > 1 or the record asserts)
+
+``BENCH_serve.json`` (repo root) records the full latency surface, the
+engine byte footprint, and the LRU dequant-cache counters; the ``wall_s``
+keys are gated by ``benchmarks/check_regression.py`` against the committed
+smoke baseline.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve_loop import ServeEngine, demo_model, run_closed_loop
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_serve.json")
+
+PROMPT_LEN = 8
+# offered load as multiples of the measured batch-1 capacity: under load,
+# around saturation, and far past it (where batching has to carry it).
+LOAD_POINTS = (("lo", 0.5), ("mid", 2.0), ("hi", 8.0))
+
+
+def _calibrate(engine: ServeEngine, vocab: int) -> float:
+    """Measured batch-1 forward seconds (after warmup)."""
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, vocab, size=(1, PROMPT_LEN)))
+    engine.forward(toks)                     # warmup / trace
+    reps = 3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        engine.forward(toks)
+    return (time.perf_counter() - t0) / reps
+
+
+def serve_under_load():
+    from benchmarks.common import SMOKE
+
+    batches = (1, 8) if SMOKE else (1, 4, 8)
+    n_requests = 12 if SMOKE else 40
+    cfg, params = demo_model(d_model=32, n_layers=2)
+
+    t0 = time.perf_counter()
+    probe = ServeEngine(cfg, params, max_batch=1)
+    build_s = time.perf_counter() - t0
+    t_fwd = _calibrate(probe, cfg.vocab_size)
+    base_qps = 1.0 / max(t_fwd, 1e-9)
+
+    rows = []
+    record = {
+        "model": {"d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                  "vocab_size": cfg.vocab_size, "prompt_len": PROMPT_LEN},
+        "smoke": SMOKE,
+        "n_requests": n_requests,
+        "build_s": build_s,
+        "batch1_forward_s": t_fwd,
+        "base_qps": base_qps,
+        "engine": None,
+        "sweep": {},
+    }
+    saturated = {}   # max_batch -> achieved qps at the "hi" point
+    for b in batches:
+        engine = ServeEngine(cfg, params, max_batch=b)
+        for tag, mult in LOAD_POINTS:
+            rep = run_closed_loop(
+                engine, n_requests=n_requests, offered_qps=mult * base_qps,
+                prompt_len=PROMPT_LEN, seed=17,
+            )
+            cell = rep.row()
+            record["sweep"][f"b{b}_{tag}"] = cell
+            rows.append((f"serve_b{b}_{tag}", round(rep.p50_ms * 1e3, 1),
+                         round(rep.achieved_qps, 2)))
+            if tag == "hi":
+                saturated[b] = rep.achieved_qps
+        record["engine"] = engine.stats()
+
+    speedup = saturated[max(batches)] / max(saturated[1], 1e-9)
+    record["batch_speedup_at_saturation"] = round(speedup, 3)
+    # the batching claim this bench exists to measure: coalescing must buy
+    # throughput over batch=1 under saturating load.
+    assert speedup > 1.0, (
+        f"batching gained nothing: {saturated} (speedup {speedup:.3f})"
+    )
+    rows.append(("serve_batch_speedup", 0.0, round(speedup, 2)))
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    return rows

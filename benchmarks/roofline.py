@@ -5,6 +5,15 @@ ratio, in markdown (for EXPERIMENTS.md) or CSV.
     PYTHONPATH=src python -m benchmarks.roofline            # markdown table
     PYTHONPATH=src python -m benchmarks.roofline --csv
     PYTHONPATH=src python -m benchmarks.roofline --compare baseline pod_compressed
+    PYTHONPATH=src python -m benchmarks.roofline --kernels  # % of peak per kernel
+
+``--kernels`` is the per-Pallas-kernel %-of-peak table (first slice of the
+real-hardware-validation roadmap item): each kernel's measured effective
+bandwidth — derived from the BENCH_*.json records the bench suite emits —
+against a MEASURED host memcpy peak. On this CPU/interpret-mode runner the
+honest "theoretical peak" is host memory bandwidth; the small percentages
+quantify the interpret-mode debt the roadmap names. The same rows ship in
+the bench tables as the ``kernel_peak`` section of ``benchmarks.run``.
 """
 
 from __future__ import annotations
@@ -13,8 +22,10 @@ import argparse
 import glob
 import json
 import os
+import time
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def load(variant_filter=None):
@@ -108,12 +119,110 @@ def compare(variants):
     return "\n".join(lines)
 
 
+# --------------------------------------------------------------------------
+# Per-Pallas-kernel % of peak (from the measured BENCH_*.json records).
+# --------------------------------------------------------------------------
+
+
+def measure_host_peak_gb_s(n_mib: int = 64, repeats: int = 3) -> float:
+    """Measured host memcpy bandwidth (GB/s): the honest bandwidth roof for
+    CPU/interpret-mode kernels. Counts read+write bytes; best of N so a
+    scheduler hiccup cannot deflate the roof."""
+    import numpy as np
+
+    src = np.ones(n_mib << 20, np.uint8)
+    dst = np.empty_like(src)
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        np.copyto(dst, src)
+        dt = time.perf_counter() - t0
+        best = max(best, 2 * src.nbytes / dt / 1e9)
+    return best
+
+
+def _record(name: str):
+    path = os.path.join(ROOT, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def kernel_effective_rows() -> list[tuple[str, str, float, str]]:
+    """(kernel, cell, effective_gb_s, source) per measured kernel run.
+
+    Bytes-moved models per kernel:
+      - aggregate fan-in: taken from the record's own fused_effective_gb_s
+        (C packed client rows in + fp32 partial out).
+      - quantize_pack: fp32 leaf read (4 B/param) + packed write
+        (0.25 B/param) over the measured fused payload-encode time.
+      - ternary_matmul (serve): packed weights + dense residual leaves
+        streamed once per forward, over the measured batch-1 forward time.
+    """
+    rows: list[tuple[str, str, float, str]] = []
+    agg = _record("BENCH_aggregate.json")
+    if agg:
+        for c, cell in sorted(agg.get("results", {}).items(),
+                              key=lambda kv: int(kv[0])):
+            rows.append(("aggregate_fanin", f"C{c}",
+                         float(cell["fused_effective_gb_s"]),
+                         "BENCH_aggregate.json"))
+    enc = _record("BENCH_encode.json")
+    if enc:
+        for payload, cell in sorted(enc.get("results", {}).items()):
+            moved = cell["n_params"] * 4 + cell["n_params"] // 4
+            rows.append(("quantize_pack", payload,
+                         moved / cell["payload_fused_s"] / 1e9,
+                         "BENCH_encode.json"))
+    srv = _record("BENCH_serve.json")
+    if srv and srv.get("engine"):
+        moved = (srv["engine"]["packed_weight_bytes"]
+                 + srv["engine"]["lazy_wire_bytes_dense"])
+        rows.append(("ternary_matmul", "serve_b1",
+                     moved / srv["batch1_forward_s"] / 1e9,
+                     "BENCH_serve.json"))
+    return rows
+
+
+def kernels_markdown() -> str:
+    peak = measure_host_peak_gb_s()
+    out = [
+        f"host memcpy peak (measured): {peak:.2f} GB/s",
+        "",
+        "| kernel | cell | effective GB/s | % of peak | source |",
+        "|---|---|---|---|---|",
+    ]
+    rows = kernel_effective_rows()
+    if not rows:
+        out.append("| (no BENCH_*.json records found — run benchmarks.run "
+                   "first) | | | | |")
+    for kernel, cell, eff, src in rows:
+        out.append(f"| {kernel} | {cell} | {eff:.4g} | "
+                   f"{100 * eff / peak:.4g}% | {src} |")
+    return "\n".join(out)
+
+
+def kernel_peak_table():
+    """Bench-table section (benchmarks.run --only kernel_peak): derived
+    column is GB/s for the roof row, % of that roof per kernel cell."""
+    peak = measure_host_peak_gb_s()
+    yield ("host_memcpy_peak_gb_s", 0.0, round(peak, 2))
+    for kernel, cell, eff, _src in kernel_effective_rows():
+        yield (f"peak_pct_{kernel}_{cell}", 0.0,
+               float(f"{100 * eff / peak:.4g}"))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--csv", action="store_true")
     ap.add_argument("--compare", nargs="+")
+    ap.add_argument("--kernels", action="store_true",
+                    help="measured %%-of-peak table per Pallas kernel")
     args = ap.parse_args()
-    if args.compare:
+    if args.kernels:
+        print(kernels_markdown())
+    elif args.compare:
         print(compare(args.compare))
     elif args.csv:
         print(csv(load(("baseline",))))

@@ -22,7 +22,7 @@ pin_runtime()
 
 from benchmarks import (  # noqa: E402
     bench_aggregate, bench_encode, bench_hierarchy, bench_kernels,
-    bench_tables, bench_wire,
+    bench_serve, bench_tables, bench_wire, roofline,
 )
 
 SECTIONS = {
@@ -32,6 +32,8 @@ SECTIONS = {
     "aggregate": bench_aggregate.fused_aggregation,
     "encode": bench_encode.fused_encode,
     "hierarchy": bench_hierarchy.fleet_scaling,
+    "serve": bench_serve.serve_under_load,
+    "kernel_peak": roofline.kernel_peak_table,
     "table2": bench_tables.table2_iid_accuracy,
     "table3": bench_tables.table3_noniid,
     "table4": bench_tables.table4_comm_costs,

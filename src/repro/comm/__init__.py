@@ -14,16 +14,36 @@ package:
                  latency distributions — stragglers emerge from
                  bytes ÷ bandwidth instead of a coin flip — with optional
                  server-NIC contention across concurrent transfers.
+  - ``transport``: length-prefixed TCP framing for the REAL process
+                 boundary (``fed.mp_server``): incremental recv into the
+                 zero-copy wire decode, partial-read tolerant, byte counts
+                 metered from actual socket traffic.
 """
 
 from repro.comm.channel import Channel, ChannelConfig, ClientLink, TransferEvent
+from repro.comm.transport import (
+    FT_BCAST,
+    FT_DONE,
+    FT_ERR,
+    FT_HELLO,
+    FT_UPDATE,
+    Frame,
+    FrameDecoder,
+    TransportError,
+    pack_frame,
+    recv_frame,
+    send_frame,
+)
 from repro.comm.wire import (
+    MAX_BODY_BYTES,
     SUPPORTED_VERSIONS,
     WIRE_VERSION,
+    StreamDecoder,
     WireError,
     WireRecord,
     decode_tensor,
     decode_update,
+    decode_update_chunks,
     encode_tensor,
     encode_update,
     register_record,
@@ -35,5 +55,9 @@ __all__ = [
     "WireRecord", "register_record",
     "encode_update", "decode_update", "encode_tensor", "decode_tensor",
     "update_nbytes",
+    "StreamDecoder", "decode_update_chunks", "MAX_BODY_BYTES",
     "Channel", "ChannelConfig", "ClientLink", "TransferEvent",
+    "Frame", "FrameDecoder", "TransportError",
+    "pack_frame", "send_frame", "recv_frame",
+    "FT_HELLO", "FT_BCAST", "FT_UPDATE", "FT_DONE", "FT_ERR",
 ]

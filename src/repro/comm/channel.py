@@ -34,6 +34,17 @@ goodput under loss reads directly out of ``summary()``. With
 ``loss_rate == 0`` no loss randomness is drawn at all — byte counts,
 times, AND the rng stream are identical to the loss-free model, so seeded
 runs reproduce bit-exactly.
+
+Bursty loss (``loss_model="gilbert_elliott"``): real radio/WAN links lose
+packets in RUNS, not independent coin flips. The two-state Gilbert–Elliott
+chain captures that: the link sits in a *good* state (loss
+``ge_loss_good``, usually 0) or a *bad* state (loss ``ge_loss_bad``),
+hopping between them per chunk with ``ge_p_good_bad`` / ``ge_p_bad_good``.
+Each transfer starts from the chain's stationary distribution, so the
+MARGINAL chunk-loss rate is ``π_bad·ge_loss_bad + π_good·ge_loss_good``
+with ``π_bad = p_gb/(p_gb+p_bg)`` — matched-marginal comparisons against
+iid isolate pure burstiness. Same zero-draw guarantee: with both state
+loss rates 0 the rng stream is untouched, bit-identical to lossless.
 """
 
 from __future__ import annotations
@@ -64,13 +75,25 @@ class ChannelConfig:
         ``deadline_s``). Applied by ``transfer_concurrent`` with max-min
         fairness and by ``transfer_timed`` via overlap counting.
       loss_rate: per-chunk Bernoulli loss probability (0 → lossless and
-        rng-stream-identical to the pre-loss model).
+        rng-stream-identical to the pre-loss model). Only read when
+        ``loss_model == "iid"``.
       chunk_bytes: loss granularity — payloads move as ceil(n/chunk)
         chunks, each lost/retransmitted independently.
       retransmit_timeout_s: wait before the first retransmission of a lost
         chunk; consecutive losses of the same chunk back off by
         ``retransmit_backoff``×.
       retransmit_backoff: exponential backoff factor (≥ 1).
+      loss_model: "iid" (Bernoulli per chunk, via ``loss_rate``) or
+        "gilbert_elliott" (two-state bursty chain, via the ``ge_*`` knobs;
+        ``loss_rate`` is ignored).
+      ge_p_good_bad: P(good → bad) per chunk step.
+      ge_p_bad_good: P(bad → good) per chunk step (small ⇒ long loss
+        bursts).
+      ge_loss_good: chunk loss probability while in the good state
+        (0 = classic Gilbert model).
+      ge_loss_bad: chunk loss probability while in the bad state. Both
+        state loss rates 0 ⇒ lossless AND rng-stream-untouched, exactly
+        like ``loss_rate=0`` in iid mode.
     """
 
     mean_bandwidth_bytes_s: float = 1e6
@@ -84,6 +107,11 @@ class ChannelConfig:
     chunk_bytes: int = 64 * 1024
     retransmit_timeout_s: float = 0.05
     retransmit_backoff: float = 2.0
+    loss_model: str = "iid"
+    ge_p_good_bad: float = 0.05
+    ge_p_bad_good: float = 0.5
+    ge_loss_good: float = 0.0
+    ge_loss_bad: float = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,27 +266,20 @@ class Channel:
 
     # -- loss / retransmission --------------------------------------------
 
-    def _loss_penalty(self, nbytes: int) -> tuple[int, float, int]:
-        """(retrans_bytes, timeout_delay_s, retries) for one transfer.
-
-        Chunked Bernoulli loss: each of the ceil(n/chunk) chunks needs a
-        geometric number of transmissions; every failed attempt of a chunk
-        waits ``retransmit_timeout_s`` growing by ``retransmit_backoff``×.
-        Draws NOTHING when loss is off — the rng stream (and therefore any
-        seeded run) is identical to the pre-loss channel.
-        """
-        p = self.cfg.loss_rate
-        if p <= 0.0 or nbytes == 0:
-            return 0, 0.0, 0
-        if not p < 1.0:
-            raise ValueError(f"loss_rate must be < 1, got {p}")
+    def _chunk_sizes(self, nbytes: int) -> np.ndarray:
         chunk = max(1, int(self.cfg.chunk_bytes))
         n_chunks = (nbytes + chunk - 1) // chunk
         sizes = np.full(n_chunks, chunk, dtype=np.int64)
         sizes[-1] = nbytes - chunk * (n_chunks - 1)
-        # transmissions per chunk ~ Geometric(success = 1-p), support ≥ 1
-        tx = self._rng.geometric(1.0 - p, size=n_chunks)
-        extra = tx - 1
+        return sizes
+
+    def _penalty_from_extra(
+        self, extra: np.ndarray, sizes: np.ndarray
+    ) -> tuple[int, float, int]:
+        """Fold per-chunk retransmission counts into the (retrans_bytes,
+        timeout_delay_s, retries) triple; every failed attempt of a chunk
+        waits ``retransmit_timeout_s`` growing by ``retransmit_backoff``×
+        (per chunk: t0·(b^extra − 1)/(b − 1))."""
         retrans_bytes = int(np.sum(extra * sizes))
         retries = int(extra.sum())
         if retries == 0:
@@ -267,9 +288,69 @@ class Channel:
         if b == 1.0:
             delay = t0 * retries
         else:
-            # per chunk: t0·(b^extra − 1)/(b − 1), summed over chunks
             delay = float(t0 * np.sum((b ** extra[extra > 0] - 1.0) / (b - 1.0)))
         return retrans_bytes, delay, retries
+
+    def _ge_loss_penalty(self, nbytes: int) -> tuple[int, float, int]:
+        """Gilbert–Elliott penalty for one transfer: the good/bad state
+        chain steps once per chunk (so consecutive chunks share fate —
+        bursts), each chunk then needs a geometric number of transmissions
+        at its state's loss rate. The chain starts from its stationary
+        distribution, making the marginal loss rate a closed form the tests
+        (and matched-marginal comparisons) rely on. Draws NOTHING when both
+        state loss rates are 0."""
+        cfg = self.cfg
+        pg, pb = cfg.ge_loss_good, cfg.ge_loss_bad
+        if (pg <= 0.0 and pb <= 0.0) or nbytes == 0:
+            return 0, 0.0, 0
+        for name, v in (("ge_loss_good", pg), ("ge_loss_bad", pb)):
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"{name} must be in [0, 1), got {v}")
+        gb, bg = cfg.ge_p_good_bad, cfg.ge_p_bad_good
+        for name, v in (("ge_p_good_bad", gb), ("ge_p_bad_good", bg)):
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        sizes = self._chunk_sizes(nbytes)
+        n_chunks = len(sizes)
+        # stationary start (degenerate chain ⇒ good): one uniform, then one
+        # uniform per chunk step, plus a geometric per chunk whose state
+        # loss rate is > 0.
+        pi_bad = gb / (gb + bg) if gb + bg > 0 else 0.0
+        bad = bool(self._rng.random() < pi_bad)
+        steps = self._rng.random(size=n_chunks)
+        extra = np.zeros(n_chunks, dtype=np.int64)
+        for i in range(n_chunks):
+            p = pb if bad else pg
+            if p > 0.0:
+                extra[i] = self._rng.geometric(1.0 - p) - 1
+            bad = (steps[i] >= bg) if bad else (steps[i] < gb)
+        return self._penalty_from_extra(extra, sizes)
+
+    def _loss_penalty(self, nbytes: int) -> tuple[int, float, int]:
+        """(retrans_bytes, timeout_delay_s, retries) for one transfer.
+
+        ``loss_model="iid"``: chunked Bernoulli loss — each of the
+        ceil(n/chunk) chunks needs a geometric number of transmissions.
+        ``loss_model="gilbert_elliott"``: bursty two-state chain
+        (``_ge_loss_penalty``). Either way draws NOTHING when loss is off —
+        the rng stream (and therefore any seeded run) is identical to the
+        pre-loss channel.
+        """
+        model = self.cfg.loss_model
+        if model == "gilbert_elliott":
+            return self._ge_loss_penalty(nbytes)
+        if model != "iid":
+            raise ValueError(
+                f"loss_model must be 'iid' or 'gilbert_elliott', got {model!r}")
+        p = self.cfg.loss_rate
+        if p <= 0.0 or nbytes == 0:
+            return 0, 0.0, 0
+        if not p < 1.0:
+            raise ValueError(f"loss_rate must be < 1, got {p}")
+        sizes = self._chunk_sizes(nbytes)
+        # transmissions per chunk ~ Geometric(success = 1-p), support ≥ 1
+        tx = self._rng.geometric(1.0 - p, size=len(sizes))
+        return self._penalty_from_extra(tx - 1, sizes)
 
     def transfer(self, client_id: int, nbytes: int, direction: str) -> float:
         """Seconds to move ``nbytes`` over this client's link (logged)."""
@@ -291,6 +372,19 @@ class Channel:
         is off, like the scalar path."""
         n = len(nbytes)
         zeros = np.zeros(n, dtype=np.int64)
+        if self.cfg.loss_model == "gilbert_elliott":
+            # the chain is sequential per transfer; each transfer's chain is
+            # independent, so the batch is exactly the scalar penalties laid
+            # end to end (unlike iid there is no draw-order fold to differ).
+            if self.cfg.ge_loss_good <= 0.0 and self.cfg.ge_loss_bad <= 0.0:
+                return zeros, np.zeros(n), zeros
+            pens = [self._ge_loss_penalty(int(b)) for b in np.asarray(nbytes)]
+            return (np.array([p[0] for p in pens], dtype=np.int64),
+                    np.array([p[1] for p in pens]),
+                    np.array([p[2] for p in pens], dtype=np.int64))
+        if self.cfg.loss_model != "iid":
+            raise ValueError("loss_model must be 'iid' or 'gilbert_elliott', "
+                             f"got {self.cfg.loss_model!r}")
         p = self.cfg.loss_rate
         if p <= 0.0 or n == 0:
             return zeros, np.zeros(n), zeros

@@ -1,0 +1,218 @@
+"""Length-prefixed TCP framing for federated wire traffic.
+
+This is the first layer of the repo that moves bytes across a REAL process
+boundary: everything below (``comm.wire``) serializes to buffers, everything
+above (``fed.mp_server``, the socket federation demo) speaks in frames.
+
+A frame is
+
+    FRAME HEADER (16 B, little-endian):
+      magic        4s  b"TFT1"
+      ftype        u8  message type (HELLO / BCAST / UPDATE / DONE / ERR)
+      flags        u8  reserved (0)
+      meta_len     u16 JSON metadata length
+      payload_len  u64 payload length
+    META     meta_len bytes of UTF-8 JSON (client_id, weight, ...)
+    PAYLOAD  payload_len bytes — for UPDATE/BCAST this is a complete
+             ``comm.wire`` buffer, whose own CRC32 is re-verified when the
+             receiver decodes it (``decode_update`` /
+             ``decode_update_leaves``), so a torn or corrupted transfer is
+             caught at the wire boundary even if TCP delivered it "intact".
+
+``FrameDecoder`` mirrors ``wire.StreamDecoder``: feed arbitrary recv()
+chunks, complete frames pop out, malformed headers fail fast (never wait
+for a body a garbage length field promised), and ``close()`` at EOF raises
+on a partial frame — a dropped connection surfaces as ``TransportError``,
+never a hang or a silent short read.
+
+Byte metering: ``send_frame`` returns the exact framed byte count and
+``FrameDecoder.bytes_in`` counts every byte taken off the socket, so the
+federation ledger's "upload bytes" are measured from actual socket traffic,
+not from payload lengths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import socket
+import struct
+from collections import deque
+from typing import Any
+
+TRANSPORT_MAGIC = b"TFT1"
+_FRAME = struct.Struct("<4sBBHQ")  # magic, ftype, flags, meta_len, payload_len
+
+# frame types
+FT_HELLO = 1    # client → server: {"client_id": int}
+FT_BCAST = 2    # server → client: payload = global-model wire buffer
+FT_UPDATE = 3   # client → server: payload = update wire buffer, meta weight
+FT_DONE = 4     # either direction: orderly end of conversation
+FT_ERR = 5      # either direction: meta = {"error": str}
+_KNOWN_TYPES = frozenset((FT_HELLO, FT_BCAST, FT_UPDATE, FT_DONE, FT_ERR))
+
+# a frame larger than this is a corrupted length field, not an update
+MAX_PAYLOAD_BYTES = 1 << 34  # 16 GiB
+RECV_CHUNK = 1 << 16
+
+
+class TransportError(ConnectionError):
+    """Malformed frame or torn connection at the transport layer."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    ftype: int
+    meta: dict
+    payload: bytes
+
+    @property
+    def nbytes_framed(self) -> int:
+        """Exact on-wire size of this frame."""
+        return _FRAME.size + len(_meta_bytes(self.meta)) + len(self.payload)
+
+
+def _meta_bytes(meta: dict | None) -> bytes:
+    if not meta:
+        return b""
+    return json.dumps(meta, sort_keys=True, separators=(",", ":")).encode("utf-8")
+
+
+def pack_frame(ftype: int, payload: bytes = b"", meta: dict | None = None) -> bytes:
+    """Serialize one frame (header + JSON meta + payload)."""
+    if ftype not in _KNOWN_TYPES:
+        raise TransportError(f"unknown frame type {ftype}")
+    mb = _meta_bytes(meta)
+    if len(mb) > 0xFFFF:
+        raise TransportError(f"frame meta too large: {len(mb)} B")
+    if len(payload) > MAX_PAYLOAD_BYTES:
+        raise TransportError(f"frame payload too large: {len(payload)} B")
+    return b"".join([
+        _FRAME.pack(TRANSPORT_MAGIC, ftype, 0, len(mb), len(payload)),
+        mb,
+        payload,
+    ])
+
+
+class FrameDecoder:
+    """Incremental frame reassembly over recv() chunks (one per connection).
+
+    Same failure discipline as ``wire.StreamDecoder``: header problems
+    (magic, unknown type, oversized lengths) raise ``TransportError`` the
+    moment the 16 header bytes are in; ``close()`` on a partial frame
+    raises instead of dropping it.
+    """
+
+    def __init__(self, *, max_payload_bytes: int = MAX_PAYLOAD_BYTES):
+        self._buf = bytearray()
+        self._need: int | None = None
+        self._max_payload = int(max_payload_bytes)
+        self._ready: deque[Frame] = deque()
+        self.bytes_in = 0          # every byte fed, the socket-traffic meter
+
+    def _header_check(self) -> int:
+        magic, ftype, _flags, meta_len, payload_len = _FRAME.unpack_from(self._buf)
+        if magic != TRANSPORT_MAGIC:
+            raise TransportError(
+                f"bad frame magic {magic!r} (expected {TRANSPORT_MAGIC!r})"
+            )
+        if ftype not in _KNOWN_TYPES:
+            raise TransportError(f"unknown frame type {ftype}")
+        if payload_len > self._max_payload:
+            raise TransportError(
+                f"payload_len {payload_len} exceeds cap {self._max_payload} — "
+                "corrupted length field"
+            )
+        return _FRAME.size + meta_len + payload_len
+
+    def feed(self, chunk: bytes) -> list[Frame]:
+        """Absorb one chunk; returns the frames it completed (they are ALSO
+        queued internally — drain with ``pop()`` OR consume the return
+        value, not both)."""
+        self._buf += chunk
+        self.bytes_in += len(chunk)
+        out: list[Frame] = []
+        while True:
+            if self._need is None:
+                if len(self._buf) < _FRAME.size:
+                    break
+                self._need = self._header_check()
+            if len(self._buf) < self._need:
+                break
+            raw = bytes(self._buf[: self._need])
+            del self._buf[: self._need]
+            self._need = None
+            _, ftype, _flags, meta_len, payload_len = _FRAME.unpack_from(raw)
+            meta_raw = raw[_FRAME.size : _FRAME.size + meta_len]
+            try:
+                meta = json.loads(meta_raw.decode("utf-8")) if meta_len else {}
+            except (UnicodeDecodeError, json.JSONDecodeError) as e:
+                raise TransportError(f"malformed frame meta: {e}") from e
+            if not isinstance(meta, dict):
+                raise TransportError(
+                    f"frame meta must be a JSON object, got {type(meta).__name__}"
+                )
+            out.append(Frame(ftype, meta, raw[_FRAME.size + meta_len :]))
+        self._ready.extend(out)
+        return out
+
+    def pop(self) -> Frame | None:
+        """Take the oldest queued complete frame (None if none pending)."""
+        return self._ready.popleft() if self._ready else None
+
+    @property
+    def pending_bytes(self) -> int:
+        return len(self._buf)
+
+    def close(self) -> None:
+        if self._buf:
+            need = "?" if self._need is None else str(self._need)
+            raise TransportError(
+                f"connection closed mid-frame: {len(self._buf)} bytes pending "
+                f"of {need}"
+            )
+
+
+# --------------------------------------------------------------------------
+# Blocking socket helpers (the client side of the federation demo).
+# --------------------------------------------------------------------------
+
+
+def send_frame(
+    sock: socket.socket, ftype: int, payload: bytes = b"",
+    meta: dict | None = None,
+) -> int:
+    """Send one frame; returns the exact framed byte count put on the wire."""
+    buf = pack_frame(ftype, payload, meta)
+    sock.sendall(buf)
+    return len(buf)
+
+
+def recv_frame(
+    sock: socket.socket, decoder: FrameDecoder | None = None,
+    timeout_s: float | None = None,
+) -> Frame:
+    """Block until one complete frame arrives (partial-read tolerant).
+
+    Pass a persistent ``decoder`` when the connection carries several
+    frames — bytes of the NEXT frame that rode in on the same recv() stay
+    buffered in it. EOF mid-frame raises ``TransportError``; a socket
+    timeout surfaces as the standard ``socket.timeout`` (an ``OSError``).
+    """
+    dec = decoder if decoder is not None else FrameDecoder()
+    if timeout_s is not None:
+        sock.settimeout(timeout_s)
+    while True:
+        # frames buffered by an earlier recv() drain first (pop, so a chunk
+        # carrying several frames never loses the extras)
+        frame = dec.pop()
+        if frame is not None:
+            return frame
+        chunk = sock.recv(RECV_CHUNK)
+        if not chunk:
+            dec.close()   # raises on partial frame
+            raise TransportError("connection closed before a frame arrived")
+        dec.feed(chunk)
+
+
+Pytree = Any

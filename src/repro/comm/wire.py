@@ -829,6 +829,112 @@ def _decode_update(data: bytes) -> Pytree:
     return tree_from_records(_decode_records(data))
 
 
+# --------------------------------------------------------------------------
+# Incremental / chunked reading (the transport boundary).
+# --------------------------------------------------------------------------
+
+
+# A wire buffer larger than this is a corrupted or hostile length field, not
+# a model update — even a full-size fp32 LLM checkpoint stays far below it.
+MAX_BODY_BYTES = 1 << 34  # 16 GiB
+
+
+class StreamDecoder:
+    """Incremental wire-buffer framing over an arbitrary chunk stream.
+
+    ``decode_update`` assumes it holds one COMPLETE buffer; a socket hands
+    you partial reads. ``feed(chunk)`` accumulates bytes and returns every
+    complete wire buffer the stream has finished so far (possibly several
+    per chunk, possibly none) — each returned ``bytes`` object is exactly
+    one ``encode_update`` output, ready for ``decode_update`` /
+    ``decode_update_leaves`` (which re-verify the CRC; this class only
+    frames and fail-fasts on the header).
+
+    Failure discipline: a bad magic, unsupported version, or oversized
+    ``body_len`` raises ``WireError`` as soon as the 24 header bytes are
+    in — the reader never waits for a body it already knows is garbage,
+    so a corrupted length field cannot make the caller hang on a recv
+    that will never complete. ``close()`` (call at EOF/disconnect) raises
+    ``WireError`` if bytes of an unfinished buffer are pending — a torn
+    stream surfaces as an error, never as a silent short read.
+    """
+
+    def __init__(self, *, max_body_bytes: int = MAX_BODY_BYTES):
+        self._buf = bytearray()
+        self._need: int | None = None   # total frame length once header known
+        self._max_body = int(max_body_bytes)
+        self.frames_out = 0
+        self.bytes_in = 0
+
+    def _header_check(self) -> int:
+        """Validate the buffered header; returns the full frame length."""
+        magic, version, _flags, _n, _crc, body_len = _HEADER.unpack_from(
+            self._buf
+        )
+        if magic != WIRE_MAGIC:
+            raise WireError(f"bad magic {magic!r} in stream (expected {WIRE_MAGIC!r})")
+        if version not in SUPPORTED_VERSIONS:
+            raise WireError(
+                f"wire version {version} not supported (have {SUPPORTED_VERSIONS})"
+            )
+        if body_len > self._max_body:
+            raise WireError(
+                f"body_len {body_len} exceeds stream cap {self._max_body} — "
+                "corrupted length field"
+            )
+        return _HEADER.size + body_len
+
+    def feed(self, chunk: bytes) -> list[bytes]:
+        """Absorb one chunk (any size, including empty); return the wire
+        buffers completed by it, in stream order."""
+        self._buf += chunk
+        self.bytes_in += len(chunk)
+        out: list[bytes] = []
+        while True:
+            if self._need is None:
+                if len(self._buf) < _HEADER.size:
+                    break
+                self._need = self._header_check()
+            if len(self._buf) < self._need:
+                break
+            out.append(bytes(self._buf[: self._need]))
+            del self._buf[: self._need]
+            self._need = None
+        self.frames_out += len(out)
+        return out
+
+    @property
+    def pending_bytes(self) -> int:
+        """Bytes buffered toward an incomplete wire buffer."""
+        return len(self._buf)
+
+    def close(self) -> None:
+        """Declare EOF: a partially-received buffer is a truncation error."""
+        if self._buf:
+            need = "?" if self._need is None else str(self._need)
+            raise WireError(
+                f"stream ended mid-buffer: {len(self._buf)} bytes pending "
+                f"of {need}"
+            )
+
+
+def decode_update_chunks(chunks) -> Pytree:
+    """Decode ONE update delivered as an iterable of byte chunks (the
+    chunked-reader convenience over ``StreamDecoder``): raises ``WireError``
+    on truncation, trailing garbage, or more than one buffer in the
+    stream — never hangs, never returns a short read."""
+    dec = StreamDecoder()
+    frames: list[bytes] = []
+    for chunk in chunks:
+        frames.extend(dec.feed(chunk))
+        if len(frames) > 1:
+            raise WireError("multiple wire buffers in a single-update stream")
+    dec.close()
+    if len(frames) != 1:
+        raise WireError("stream ended before a complete wire buffer arrived")
+    return decode_update(frames[0])
+
+
 def update_nbytes(tree: Pytree) -> int:
     """Measured wire size of a pytree: ``len(encode_update(tree))``."""
     return len(encode_update(tree))

@@ -15,6 +15,11 @@ from repro.fed.availability import (
 )
 from repro.fed.async_server import run_federated_async
 from repro.fed.fleet import EventHeap, FleetConfig, FleetResult, run_fleet
+from repro.fed.mp_server import (
+    SocketRoundResult,
+    run_inprocess_reference,
+    run_socket_round,
+)
 from repro.fed.hierarchy import EdgeTier, HierarchyConfig, edge_of, edges_of
 from repro.fed.simulation import (
     FedConfig,
@@ -30,4 +35,5 @@ __all__ = [
     "TraceReplay", "make_availability",
     "HierarchyConfig", "EdgeTier", "edge_of", "edges_of",
     "FleetConfig", "FleetResult", "EventHeap", "run_fleet",
+    "SocketRoundResult", "run_socket_round", "run_inprocess_reference",
 ]

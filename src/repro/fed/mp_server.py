@@ -1,0 +1,408 @@
+"""Cross-process federation over real TCP sockets.
+
+Everything upstream of this module simulates its event loop; here the wire
+codec finally crosses a REAL process boundary. ``run_socket_round`` puts the
+long-lived streaming ``Aggregator`` behind an accept loop on a loopback
+socket and spawns N genuine client OS processes (``multiprocessing`` spawn
+context — each child is a fresh interpreter with its own JAX runtime). Each
+client:
+
+  1. connects and sends HELLO {client_id},
+  2. receives the broadcast (a complete ``comm.wire`` buffer inside one
+     transport frame) and decodes it — CRC re-verified on the client,
+  3. derives its update deterministically from (decoded params, seed,
+     client_id), compresses it through the FUSED ternary egress path
+     (``core.encode`` via ``compress_pytree(fused_encode=True)``), and
+     streams the wire buffer back as an UPDATE frame,
+  4. waits for DONE.
+
+Arrival handling feeds the same mix logic the simulators use:
+
+  - mode="sync": a barrier collects every update, then streams them into
+    the ``Aggregator`` in client_id order — exactly the order the
+    in-process reference uses — so the root aggregate is BYTE-IDENTICAL
+    to ``run_inprocess_reference`` for the same seeds (same add order ⇒
+    same chunk-flush boundaries ⇒ same float op order).
+  - mode="buffered": every ``buffer_k`` arrivals are folded into the
+    global with the buffered-async server's ``_weighted_mix`` (FedBuf-style
+    η-mixing), in true arrival order. Byte-identity against the reference
+    holds when the reference replays the server's recorded arrival order
+    (``order=result.arrivals``).
+
+Byte accounting is metered from ACTUAL socket traffic: upload bytes are the
+per-connection ``FrameDecoder.bytes_in`` sums (every byte the server read),
+download bytes are the ``send_frame`` return sums (every byte it wrote) —
+not payload-length arithmetic.
+
+Determinism contract: the fused encode path runs on the CPU backend in
+interpret mode, where JAX is deterministic across processes, so a client's
+update blob is a pure function of (broadcast bytes, seed, client_id) and
+the in-process/subprocess hashes must match (``tests/test_mp_server.py``).
+
+CLI demo (also the CI smoke)::
+
+    PYTHONPATH=src python -m repro.fed.mp_server --clients 4 --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import multiprocessing as mp
+import socket
+import sys
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.transport import (
+    FT_BCAST,
+    FT_DONE,
+    FT_ERR,
+    FT_HELLO,
+    FT_UPDATE,
+    FrameDecoder,
+    TransportError,
+    recv_frame,
+    send_frame,
+)
+from repro.comm.wire import decode_update, encode_update
+from repro.core.compression import CodecSpec, compress_pytree
+from repro.fed.aggregator import Aggregator
+
+Pytree = Any
+
+DEFAULT_TIMEOUT_S = 600.0   # single-core CI: N children serialize their imports
+
+
+# --------------------------------------------------------------------------
+# The deterministic client program (shared by subprocess and reference).
+# --------------------------------------------------------------------------
+
+
+def demo_params(seed: int = 0, d: int = 48, depth: int = 2,
+                n_out: int = 10) -> Pytree:
+    """A small dense tree with both quantizable (2-D w) and residual (1-D b)
+    leaves — enough to exercise the fused ternary AND fallback agg paths."""
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i in range(depth):
+        tree[f"layer{i}"] = {
+            "w": jnp.asarray(0.1 * rng.normal(size=(d, d)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(d,)).astype(np.float32)),
+        }
+    tree["head"] = {
+        "w": jnp.asarray(0.1 * rng.normal(size=(d, n_out)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(n_out,)).astype(np.float32)),
+    }
+    return tree
+
+
+def client_weight(client_id: int) -> float:
+    """Deterministic per-client sample count (|D_k|) for the demo clients."""
+    return float(40 + 7 * (client_id % 5))
+
+
+def client_update_blob(start_params: Pytree, client_id: int, seed: int,
+                       *, fused_encode: bool = True) -> bytes:
+    """One client's egress, as a pure function of its inputs: perturb the
+    decoded broadcast with a (seed, client_id)-keyed rng, compress through
+    the fused one-pass quantize→pack pipeline, serialize to the wire."""
+    leaves, treedef = jax.tree_util.tree_flatten(start_params)
+    rng = np.random.default_rng([int(seed), int(client_id)])
+    new = [
+        jnp.asarray(
+            np.asarray(leaf, np.float32)
+            + rng.normal(scale=0.05, size=np.shape(leaf)).astype(np.float32)
+        )
+        for leaf in leaves
+    ]
+    tree = jax.tree_util.tree_unflatten(treedef, new)
+    wire_tree, _ = compress_pytree(
+        tree,
+        CodecSpec(kind="ternary", residual="fp16", fused_encode=fused_encode),
+    )
+    return encode_update(wire_tree)
+
+
+def params_hash(tree: Pytree) -> str:
+    """Canonical digest of a dense pytree: sha256 over its wire encoding."""
+    return hashlib.sha256(encode_update(tree)).hexdigest()
+
+
+def _client_main(host: str, port: int, client_id: int, seed: int,
+                 timeout_s: float) -> None:
+    """Subprocess entry point: one client's whole conversation."""
+    with socket.create_connection((host, port), timeout=timeout_s) as s:
+        dec = FrameDecoder()
+        send_frame(s, FT_HELLO, meta={"client_id": int(client_id)})
+        bcast = recv_frame(s, dec, timeout_s=timeout_s)
+        if bcast.ftype != FT_BCAST:
+            send_frame(s, FT_ERR,
+                       meta={"error": f"expected BCAST, got {bcast.ftype}"})
+            return
+        start = decode_update(bcast.payload)   # CRC re-verified here
+        blob = client_update_blob(start, client_id, seed)
+        send_frame(s, FT_UPDATE, blob, meta={
+            "client_id": int(client_id),
+            "weight": client_weight(client_id),
+        })
+        done = recv_frame(s, dec, timeout_s=timeout_s)
+        if done.ftype != FT_DONE:
+            raise TransportError(f"expected DONE, got frame type {done.ftype}")
+
+
+# --------------------------------------------------------------------------
+# Mixing (shared by the socket server and the in-process reference).
+# --------------------------------------------------------------------------
+
+
+def _mix_arrivals(global_params: Pytree, arrivals, mode: str, *,
+                  chunk_c: int, buffer_k: int, eta: float) -> Pytree:
+    """Fold (client_id, weight, blob) arrivals — ALREADY in the order they
+    should be consumed — through the existing mix logic."""
+    agg = Aggregator(chunk_c=chunk_c)
+    if mode == "sync":
+        for _cid, weight, blob in arrivals:
+            agg.add(blob, weight=weight)
+        return agg.finalize()
+    if mode == "buffered":
+        from repro.fed.async_server import _weighted_mix  # lazy: heavy deps
+
+        out = global_params
+        pending = []
+        for _cid, weight, blob in arrivals:
+            pending.append((weight, blob))
+            if len(pending) >= buffer_k:
+                out = _weighted_mix(out, pending, eta, agg=agg)
+                pending = []
+        if pending:
+            out = _weighted_mix(out, pending, eta, agg=agg)
+        return out
+    raise ValueError(f"unknown mode {mode!r} (sync | buffered)")
+
+
+def run_inprocess_reference(
+    global_params: Pytree, n_clients: int, *, seed: int = 0,
+    mode: str = "sync", chunk_c: int = 16, buffer_k: int = 4,
+    eta: float = 0.5, order: list[int] | None = None,
+) -> Pytree:
+    """The no-sockets reference: identical broadcast decode, identical
+    per-client update derivation, identical mix — in ``order`` (default
+    client_id order, which is what the socket sync barrier replays)."""
+    blob = encode_update(global_params)
+    start = decode_update(blob)                 # decode exactly like a client
+    ids = list(range(n_clients)) if order is None else list(order)
+    arrivals = [
+        (cid, client_weight(cid), client_update_blob(start, cid, seed))
+        for cid in ids
+    ]
+    return _mix_arrivals(global_params, arrivals, mode,
+                         chunk_c=chunk_c, buffer_k=buffer_k, eta=eta)
+
+
+# --------------------------------------------------------------------------
+# The socket server.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SocketRoundResult:
+    params: Pytree              # the post-round global model (dense)
+    n_clients: int
+    arrivals: list[int]         # client ids in true socket-arrival order
+    upload_bytes: int           # Σ FrameDecoder.bytes_in — actual socket reads
+    download_bytes: int         # Σ send_frame returns — actual socket writes
+    payload_bytes: int          # Σ len(update wire buffer) (for overhead calc)
+    wall_s: float
+    mode: str
+
+    @property
+    def framing_overhead_bytes(self) -> int:
+        """Upload bytes that were transport framing, not wire payload."""
+        return self.upload_bytes - self.payload_bytes
+
+    def ledger(self) -> dict:
+        return {
+            "mode": self.mode,
+            "n_clients": self.n_clients,
+            "arrivals": self.arrivals,
+            "upload_bytes": self.upload_bytes,
+            "download_bytes": self.download_bytes,
+            "payload_bytes": self.payload_bytes,
+            "framing_overhead_bytes": self.framing_overhead_bytes,
+            "wall_s": self.wall_s,
+            "params_sha256": params_hash(self.params),
+        }
+
+
+def _handle_connection(conn: socket.socket, bcast_blob: bytes,
+                       timeout_s: float) -> tuple[int, float, bytes, int, int]:
+    """One client conversation on the server side.
+
+    Returns (client_id, weight, update_blob, bytes_read, bytes_written).
+    """
+    conn.settimeout(timeout_s)
+    dec = FrameDecoder()
+    sent = 0
+    hello = recv_frame(conn, dec, timeout_s=timeout_s)
+    if hello.ftype == FT_ERR:
+        raise TransportError(f"client error: {hello.meta.get('error')}")
+    if hello.ftype != FT_HELLO or "client_id" not in hello.meta:
+        raise TransportError(f"expected HELLO with client_id, got {hello.ftype}")
+    cid = int(hello.meta["client_id"])
+    sent += send_frame(conn, FT_BCAST, bcast_blob)
+    update = recv_frame(conn, dec, timeout_s=timeout_s)
+    if update.ftype == FT_ERR:
+        raise TransportError(f"client {cid} error: {update.meta.get('error')}")
+    if update.ftype != FT_UPDATE:
+        raise TransportError(f"client {cid}: expected UPDATE, got {update.ftype}")
+    if int(update.meta.get("client_id", -1)) != cid:
+        raise TransportError(f"client id changed mid-conversation for {cid}")
+    weight = float(update.meta["weight"])
+    sent += send_frame(conn, FT_DONE)
+    return cid, weight, update.payload, dec.bytes_in, sent
+
+
+def run_socket_round(
+    global_params: Pytree, n_clients: int, *, seed: int = 0,
+    mode: str = "sync", chunk_c: int = 16, buffer_k: int = 4,
+    eta: float = 0.5, host: str = "127.0.0.1",
+    timeout_s: float = DEFAULT_TIMEOUT_S, start_method: str = "spawn",
+) -> SocketRoundResult:
+    """One federated round over real TCP with ``n_clients`` OS processes.
+
+    The server binds an ephemeral loopback port, spawns the clients, and
+    services connections from a sequential accept loop (the OS backlog
+    holds late connectors; each conversation is short). A hung or dead
+    client surfaces as a socket timeout → ``TransportError``, and every
+    child is terminated on the way out — the accept loop cannot hang CI.
+    """
+    if n_clients < 1:
+        raise ValueError(f"n_clients must be ≥ 1, got {n_clients}")
+    if mode not in ("sync", "buffered"):
+        raise ValueError(f"unknown mode {mode!r} (sync | buffered)")
+    ctx = mp.get_context(start_method)
+    bcast_blob = encode_update(global_params)
+
+    t0 = time.perf_counter()
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    procs: list = []
+    up_bytes = down_bytes = payload_bytes = 0
+    arrivals: list[tuple[int, float, bytes]] = []
+    try:
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind((host, 0))
+        srv.listen(n_clients)
+        srv.settimeout(timeout_s)
+        port = srv.getsockname()[1]
+        for cid in range(n_clients):
+            p = ctx.Process(
+                target=_client_main,
+                args=(host, port, cid, seed, timeout_s),
+                daemon=True,
+            )
+            p.start()
+            procs.append(p)
+        seen: set[int] = set()
+        for _ in range(n_clients):
+            conn, _addr = srv.accept()
+            try:
+                cid, weight, blob, got, sent = _handle_connection(
+                    conn, bcast_blob, timeout_s
+                )
+            finally:
+                conn.close()
+            if cid in seen:
+                raise TransportError(f"duplicate client_id {cid}")
+            seen.add(cid)
+            arrivals.append((cid, weight, blob))
+            up_bytes += got
+            down_bytes += sent
+            payload_bytes += len(blob)
+        for p in procs:
+            p.join(timeout=timeout_s)
+            if p.exitcode != 0:
+                raise RuntimeError(
+                    f"client process exited with code {p.exitcode}"
+                )
+    finally:
+        srv.close()
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5)
+
+    arrival_order = [cid for cid, _, _ in arrivals]
+    # sync: the barrier has everything — replay in client_id order, the
+    # same order the in-process reference uses (byte-identity contract).
+    # buffered: fold in true arrival order, FedBuf-style.
+    consume = sorted(arrivals) if mode == "sync" else arrivals
+    params = _mix_arrivals(global_params, consume, mode,
+                           chunk_c=chunk_c, buffer_k=buffer_k, eta=eta)
+    return SocketRoundResult(
+        params=params,
+        n_clients=n_clients,
+        arrivals=arrival_order,
+        upload_bytes=up_bytes,
+        download_bytes=down_bytes,
+        payload_bytes=payload_bytes,
+        wall_s=time.perf_counter() - t0,
+        mode=mode,
+    )
+
+
+# --------------------------------------------------------------------------
+# CLI demo / CI smoke.
+# --------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Federated round over real TCP with N client processes"
+    )
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--mode", choices=("sync", "buffered"), default="sync")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk-c", type=int, default=16)
+    ap.add_argument("--buffer-k", type=int, default=4)
+    ap.add_argument("--eta", type=float, default=0.5)
+    ap.add_argument("--timeout-s", type=float, default=DEFAULT_TIMEOUT_S)
+    ap.add_argument("--check", action="store_true",
+                    help="also run the in-process reference and require a "
+                         "byte-identical aggregate")
+    args = ap.parse_args(argv)
+
+    params = demo_params(seed=args.seed)
+    res = run_socket_round(
+        params, args.clients, seed=args.seed, mode=args.mode,
+        chunk_c=args.chunk_c, buffer_k=args.buffer_k, eta=args.eta,
+        timeout_s=args.timeout_s,
+    )
+    ledger = res.ledger()
+    if args.check:
+        order = None if args.mode == "sync" else res.arrivals
+        ref = run_inprocess_reference(
+            params, args.clients, seed=args.seed, mode=args.mode,
+            chunk_c=args.chunk_c, buffer_k=args.buffer_k, eta=args.eta,
+            order=order,
+        )
+        ledger["reference_sha256"] = params_hash(ref)
+        ledger["byte_identical"] = (
+            ledger["reference_sha256"] == ledger["params_sha256"]
+        )
+    print(json.dumps(ledger, indent=2))
+    if args.check and not ledger["byte_identical"]:
+        print("FAIL: socket aggregate differs from in-process reference",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

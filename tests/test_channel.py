@@ -248,3 +248,111 @@ def test_timed_contention_isolated_per_direction():
     ch.transfer_timed(0, 1_000_000, 0.0, "up", now_s=0.0)
     down = ch.transfer_timed(1, 1_000_000, 0.0, "down", now_s=0.0)
     assert 0.99 < down < 1.01  # the up flow does not slow the down flow
+
+
+# ---------------------------------------------------------------------------
+# Gilbert–Elliott bursty loss.
+# ---------------------------------------------------------------------------
+
+
+def _ge_cfg(**kw):
+    # π_bad = 0.01/(0.01+0.08) = 1/9, so the expected retransmissions per
+    # chunk are π_bad·p_b/(1−p_b) = 1/9 — the same as iid loss_rate=0.1
+    # (p/(1−p) = 1/9): matched mean loss budget, bursty delivery.
+    base = dict(loss_model="gilbert_elliott", chunk_bytes=2048,
+                ge_p_good_bad=0.01, ge_p_bad_good=0.08,
+                ge_loss_good=0.0, ge_loss_bad=0.5)
+    base.update(kw)
+    return _flat_cfg(**base)
+
+
+def test_ge_lossless_is_rng_stream_untouched():
+    """Both state loss rates 0 ⇒ the GE channel is bit-identical to a
+    channel that never heard of any loss model — times, logged bytes, and
+    the rng stream."""
+    a = Channel(_flat_cfg(latency_jitter_s=0.01), 8, seed=5)
+    b = Channel(_ge_cfg(latency_jitter_s=0.01, ge_loss_good=0.0,
+                        ge_loss_bad=0.0, retransmit_timeout_s=9.9), 8, seed=5)
+    for ch in (a, b):
+        ch.transfer(0, 100_000, "down")
+        ch.transfer_timed(1, 50_000, 3.0, "up")
+        ch.transfer_concurrent([2, 3], [10_000, 20_000], "down")
+        ch.transfer_batch(np.arange(4), np.full(4, 30_000), "up")
+    assert [(e.nbytes, e.seconds, e.retrans_bytes) for e in a.log] == \
+           [(e.nbytes, e.seconds, e.retrans_bytes) for e in b.log]
+    assert a._rng.uniform() == b._rng.uniform()
+
+
+def test_ge_burstier_than_iid_at_matched_marginal_rate():
+    """Same mean retransmission budget per chunk as iid loss_rate=0.1 (see
+    _ge_cfg), but GE concentrates it in runs: the per-transfer retry counts
+    have visibly heavier spread (and more zero-loss transfers) than iid."""
+    n, nbytes = 300, 100 * 2048          # 100 chunks per transfer
+    ge = Channel(_ge_cfg(), 1, seed=42)
+    iid = Channel(_flat_cfg(loss_rate=0.1, chunk_bytes=2048), 1, seed=42)
+    for ch in (ge, iid):
+        for _ in range(n):
+            ch.transfer(0, nbytes, "up")
+    r_ge = np.array([e.retries for e in ge.log], dtype=float)
+    r_iid = np.array([e.retries for e in iid.log], dtype=float)
+    # matched marginal: mean retries per transfer within 25% of each other
+    assert abs(r_ge.mean() - r_iid.mean()) < 0.25 * r_iid.mean()
+    # burstiness: variance well above iid at the same marginal rate
+    assert r_ge.var() > 3.0 * r_iid.var(), (r_ge.var(), r_iid.var())
+    # ... and runs of good chunks mean more completely clean transfers
+    assert (r_ge == 0).sum() > (r_iid == 0).sum()
+
+
+def test_ge_seeded_runs_are_deterministic():
+    logs = []
+    for _ in range(2):
+        ch = Channel(_ge_cfg(ge_p_good_bad=0.2, ge_p_bad_good=0.2), 2, seed=11)
+        for k in range(2):
+            ch.transfer(k, 300_000, "up")
+        logs.append([(e.seconds, e.retrans_bytes, e.retries) for e in ch.log])
+    assert logs[0] == logs[1]
+    assert sum(r for _, r, _ in logs[0]) > 0
+
+
+def test_ge_batch_equals_scalar_penalties_laid_end_to_end():
+    """Each transfer's chain is independent, so the batched penalty path is
+    exactly the scalar penalties in sequence (no iid-style draw fold)."""
+    a = Channel(_ge_cfg(), 4, seed=3)
+    b = Channel(_ge_cfg(), 4, seed=3)
+    nb = np.array([150_000, 0, 80_000, 300_000])
+    retrans, delay, retries = a._loss_penalty_batch(nb)
+    pens = [b._ge_loss_penalty(int(n)) for n in nb]
+    assert list(retrans) == [p[0] for p in pens]
+    np.testing.assert_allclose(delay, [p[1] for p in pens], atol=1e-12)
+    assert list(retries) == [p[2] for p in pens]
+    assert retrans.sum() > 0 and retrans[1] == 0    # 0-byte transfer clean
+    # ... and transfer_batch(compat=True) IS the scalar call order
+    c = Channel(_ge_cfg(), 4, seed=3)
+    d = Channel(_ge_cfg(), 4, seed=3)
+    sc = c.transfer_batch(np.arange(4), nb, "up", compat=True)
+    sd = [d.transfer(k, int(n), "up") for k, n in enumerate(nb)]
+    np.testing.assert_allclose(sc, sd, atol=1e-12)
+
+
+def test_ge_retrans_accounting_feeds_summary_ledger():
+    ch = Channel(_ge_cfg(ge_p_good_bad=0.2, ge_p_bad_good=0.2), 1, seed=1)
+    n = 400_000
+    ch.transfer(0, n, "up")
+    e = ch.log[-1]
+    assert e.retrans_bytes > 0 and e.retries > 0
+    s = ch.summary()
+    assert s["total_bytes"] == n
+    assert s["goodput_fraction"] == n / (n + e.retrans_bytes)
+
+
+def test_ge_and_model_validation():
+    with pytest.raises(ValueError, match="ge_loss_bad"):
+        Channel(_ge_cfg(ge_loss_bad=1.0), 1, seed=0).transfer(0, 1000, "up")
+    with pytest.raises(ValueError, match="ge_p_bad_good"):
+        Channel(_ge_cfg(ge_p_bad_good=1.5), 1, seed=0).transfer(0, 1000, "up")
+    with pytest.raises(ValueError, match="loss_model"):
+        Channel(_flat_cfg(loss_model="bursty?"), 1, seed=0).transfer(
+            0, 1000, "up")
+    with pytest.raises(ValueError, match="loss_model"):
+        Channel(_flat_cfg(loss_model="bursty?"), 1, seed=0).transfer_batch(
+            np.array([0]), np.array([1000]), "up")

@@ -1,0 +1,143 @@
+"""Cross-process federation: N real client OS processes streaming fused
+ternary updates over loopback TCP must produce a root aggregate
+byte-identical to the in-process reference for the same seeds, with the
+byte ledger metered from actual socket traffic.
+
+The socket rounds have their own hard timeouts (accept/recv), so a hung
+child fails the test instead of hanging the suite."""
+
+import multiprocessing as mp
+
+import numpy as np
+import pytest
+
+from repro.fed.mp_server import (
+    client_update_blob,
+    client_weight,
+    demo_params,
+    params_hash,
+    run_inprocess_reference,
+    run_socket_round,
+)
+
+pytestmark = pytest.mark.skipif(
+    "spawn" not in mp.get_all_start_methods(),
+    reason="platform lacks multiprocessing spawn start method",
+)
+
+# single-core CI: N child interpreters serialize their JAX imports, so the
+# budget is generous — but finite, a hung accept loop must fail, not hang.
+TIMEOUT_S = 300.0
+N_CLIENTS = 8   # the acceptance floor: ≥ 8 real client processes
+SEED = 7
+
+
+@pytest.fixture(scope="module")
+def sync_round():
+    params = demo_params(seed=SEED)
+    res = run_socket_round(params, N_CLIENTS, seed=SEED, mode="sync",
+                           timeout_s=TIMEOUT_S)
+    return params, res
+
+
+def test_sync_aggregate_byte_identical_to_inprocess(sync_round):
+    """Same seeds, clients as real OS processes vs in-process calls: the
+    final weight hash must match exactly (fused encode is deterministic
+    across process boundaries; the sync barrier replays client_id order)."""
+    params, res = sync_round
+    ref = run_inprocess_reference(params, N_CLIENTS, seed=SEED, mode="sync")
+    assert params_hash(res.params) == params_hash(ref)
+
+
+def test_sync_round_served_all_clients(sync_round):
+    _params, res = sync_round
+    assert res.n_clients == N_CLIENTS
+    assert sorted(res.arrivals) == list(range(N_CLIENTS))
+
+
+def test_ledger_metered_from_socket_traffic(sync_round):
+    """Upload bytes come from FrameDecoder.bytes_in (real reads), so they
+    must exceed the summed wire payloads by exactly the framing overhead:
+    per client one HELLO frame + one UPDATE header/meta."""
+    params, res = sync_round
+    assert res.payload_bytes > 0
+    assert res.upload_bytes > res.payload_bytes
+    overhead = res.framing_overhead_bytes
+    # HELLO (~16+meta) + UPDATE header/meta per client: tight sane bounds
+    assert N_CLIENTS * 30 <= overhead <= N_CLIENTS * 120
+    # the broadcast went down once per client inside a BCAST frame + DONE
+    from repro.comm.wire import encode_update
+
+    bcast = len(encode_update(params))
+    assert res.download_bytes >= N_CLIENTS * bcast
+
+
+def test_update_blob_is_pure_function_of_inputs():
+    """The client program is deterministic: same (params, id, seed) → same
+    bytes; different id or seed → different bytes."""
+    params = demo_params(seed=SEED)
+    a = client_update_blob(params, 3, SEED)
+    b = client_update_blob(params, 3, SEED)
+    c = client_update_blob(params, 4, SEED)
+    d = client_update_blob(params, 3, SEED + 1)
+    assert a == b and a != c and a != d
+    assert client_weight(3) == client_weight(3) > 0
+
+
+def test_buffered_mode_matches_reference_in_arrival_order():
+    """Buffered (FedBuf-style η-mix every K arrivals) folds in true socket
+    arrival order; the reference replaying that recorded order must match
+    byte-for-byte."""
+    params = demo_params(seed=SEED + 1)
+    res = run_socket_round(params, 4, seed=SEED + 1, mode="buffered",
+                           buffer_k=3, eta=0.5, timeout_s=TIMEOUT_S)
+    ref = run_inprocess_reference(params, 4, seed=SEED + 1, mode="buffered",
+                                  buffer_k=3, eta=0.5, order=res.arrivals)
+    assert params_hash(res.params) == params_hash(ref)
+    # and the mixed model is not the untouched global
+    assert params_hash(res.params) != params_hash(params)
+
+
+def test_inprocess_reference_order_sensitivity():
+    """Buffered mixing IS order-sensitive (that is why the reference takes
+    the recorded arrival order) while sync is order-insensitive by
+    construction (the barrier sorts)."""
+    params = demo_params(seed=SEED)
+    fwd = run_inprocess_reference(params, 5, seed=SEED, mode="buffered",
+                                  buffer_k=2, order=[0, 1, 2, 3, 4])
+    rev = run_inprocess_reference(params, 5, seed=SEED, mode="buffered",
+                                  buffer_k=2, order=[4, 3, 2, 1, 0])
+    assert params_hash(fwd) != params_hash(rev)
+
+
+def test_bad_args_rejected():
+    params = demo_params()
+    with pytest.raises(ValueError, match="n_clients"):
+        run_socket_round(params, 0)
+    with pytest.raises(ValueError, match="mode"):
+        run_socket_round(params, 1, mode="nope")
+
+
+def test_aggregate_value_is_weighted_mean():
+    """Cross-check the in-process reference against a dense numpy weighted
+    mean of the decoded client updates (loose tolerance: fused kernel sums
+    in a different float order)."""
+    import jax
+
+    from repro.comm.wire import decode_update, encode_update
+    from repro.fed.simulation import dequantize_tree
+
+    params = demo_params(seed=3, d=16, depth=1)
+    n = 3
+    start = decode_update(encode_update(params))
+    blobs = [client_update_blob(start, cid, 3) for cid in range(n)]
+    w = np.array([client_weight(cid) for cid in range(n)])
+    dense = [dequantize_tree(decode_update(b)) for b in blobs]
+    ref = run_inprocess_reference(params, n, seed=3, mode="sync")
+    leaves_ref = jax.tree_util.tree_leaves(ref)
+    stacked = [jax.tree_util.tree_leaves(d) for d in dense]
+    for i, leaf in enumerate(leaves_ref):
+        manual = sum(w[k] * np.asarray(stacked[k][i], np.float64)
+                     for k in range(n)) / w.sum()
+        np.testing.assert_allclose(np.asarray(leaf, np.float64), manual,
+                                   rtol=2e-5, atol=2e-5)

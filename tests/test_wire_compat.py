@@ -267,6 +267,133 @@ def test_fuzz_random_garbage_rejected():
             decode_update(bytes(rng.integers(0, 256, size=n, dtype=np.uint8)))
 
 
+# --------------------------------------------------------------------------
+# Incremental / chunked reading (StreamDecoder) fuzz: partial reads and
+# truncated frames must surface as WireError — never a hang, never a
+# silent short read.
+# --------------------------------------------------------------------------
+
+
+def _chunked(blob, sizes):
+    """Split blob into chunks following the (cycled) size pattern."""
+    out, i, k = [], 0, 0
+    while i < len(blob):
+        n = sizes[k % len(sizes)]
+        out.append(blob[i:i + n])
+        i += n
+        k += 1
+    return out
+
+
+def test_stream_decoder_reassembles_any_chunking():
+    """Every chunking of the stream — byte-at-a-time, odd primes, one big
+    read, header split across chunks — yields the identical buffer."""
+    from repro.comm import StreamDecoder
+
+    blob = _mixed_blob()
+    ref = decode_update(blob)
+    for sizes in ([1], [3], [7, 1, 13], [23], [len(blob)], [5, 1000]):
+        dec = StreamDecoder()
+        frames = []
+        for chunk in _chunked(blob, sizes):
+            frames.extend(dec.feed(chunk))
+        dec.close()
+        assert len(frames) == 1 and frames[0] == blob, sizes
+        out = decode_update(frames[0])
+        assert encode_update(out) == encode_update(ref)
+    assert dec.bytes_in == len(blob) and dec.frames_out == 1
+
+
+def test_stream_decoder_multiple_buffers_in_order():
+    from repro.comm import StreamDecoder
+
+    a = encode_update({"x": jnp.arange(6.0)})
+    b = _mixed_blob()
+    stream = a + b + a
+    dec = StreamDecoder()
+    frames = []
+    for chunk in _chunked(stream, [11, 2, 59]):
+        frames.extend(dec.feed(chunk))
+    dec.close()
+    assert frames == [a, b, a]
+    assert dec.frames_out == 3
+
+
+def test_stream_decoder_truncation_every_cut_is_wireerror():
+    """EOF at ANY interior byte offset must raise at close() — a torn
+    stream can never be mistaken for a complete short buffer."""
+    from repro.comm import StreamDecoder
+
+    blob = _mixed_blob()
+    for cut in list(range(1, 40)) + list(range(40, len(blob), 37)):
+        dec = StreamDecoder()
+        for chunk in _chunked(blob[:cut], [13]):
+            got = dec.feed(chunk)
+            assert got == []  # nothing complete can come out of a prefix
+        with pytest.raises(WireError):
+            dec.close()
+    # empty stream closes clean (no data ≠ torn data)
+    StreamDecoder().close()
+
+
+def test_stream_decoder_bad_header_fails_fast():
+    """Magic/version/length problems raise the moment 24 header bytes are
+    in — the reader must not wait for a body a garbage length promised."""
+    import struct
+
+    from repro.comm import MAX_BODY_BYTES, StreamDecoder
+
+    blob = _mixed_blob()
+    magic, ver, fl, n, crc, bl = _HEADER.unpack_from(blob)
+
+    with pytest.raises(WireError, match="magic"):
+        StreamDecoder().feed(b"NOPE" + blob[4:_HEADER.size])
+    with pytest.raises(WireError, match="version"):
+        StreamDecoder().feed(_HEADER.pack(magic, 99, fl, n, crc, bl))
+    huge = _HEADER.pack(magic, ver, fl, n, crc, MAX_BODY_BYTES + 1)
+    with pytest.raises(WireError, match="corrupted length"):
+        StreamDecoder().feed(huge)
+    # split the header across feeds: the error still fires on the feed
+    # that completes byte 24, without any body
+    dec = StreamDecoder()
+    assert dec.feed(b"NO") == []
+    with pytest.raises(WireError, match="magic"):
+        dec.feed(b"PE" + blob[4:_HEADER.size])
+
+
+def test_stream_decoder_frame_crc_still_verified_downstream():
+    """StreamDecoder only frames; a body bitflip with an intact header must
+    still die in decode_update's CRC check."""
+    from repro.comm import StreamDecoder
+
+    blob = bytearray(_mixed_blob())
+    blob[_HEADER.size + 5] ^= 0x10
+    dec = StreamDecoder()
+    frames = dec.feed(bytes(blob))
+    dec.close()
+    assert len(frames) == 1  # framing is length-driven, so it passes...
+    with pytest.raises(WireError):  # ...and decode catches the corruption
+        decode_update(frames[0])
+
+
+def test_decode_update_chunks_contract():
+    from repro.comm import decode_update_chunks
+
+    blob = _mixed_blob()
+    ref = decode_update(blob)
+    out = decode_update_chunks(_chunked(blob, [19]))
+    assert encode_update(out) == encode_update(ref)
+    with pytest.raises(WireError, match="ended"):
+        decode_update_chunks(_chunked(blob[:-3], [19]))
+    with pytest.raises(WireError, match="multiple"):
+        decode_update_chunks([blob, blob])
+    with pytest.raises(WireError):
+        decode_update_chunks([])
+    # trailing garbage after a complete buffer = torn second frame
+    with pytest.raises(WireError):
+        decode_update_chunks([blob, b"\x01\x02\x03"])
+
+
 def test_nested_corrupt_record_kind_is_wireerror():
     blob = _mixed_blob()
     # force an unknown kind byte in the first record while fixing the CRC
