@@ -1,0 +1,118 @@
+"""Round-completion-vs-fault-rate sweep over the real socket tier.
+
+Runs full ``fed.mp_server`` quorum rounds — real client OS processes, real
+TCP, a real in-path ``ChaosProxy`` — at increasing Gilbert–Elliott fault
+intensity, and measures what the fault machinery buys: which clients still
+land (completion fraction), how many reconnects/resumes it took, and what
+fraction of shipped update bytes became aggregate (goodput) vs drops.
+
+Fault schedules are seeded, so each level's survivor set, retry count, and
+byte ledger are reproducible run to run; only wall times move.
+
+Rows (name, us_per_call, derived):
+  chaos_<level>       round wall µs, derived = survivor fraction
+  chaos_goodput       derived = heaviest level's ingested/shipped fraction
+
+``BENCH_chaos.json`` (repo root) records the full sweep: per-level wall
+times (the ``*_s`` keys are gated by ``benchmarks/check_regression.py``),
+ledgers, and outcome histograms. The README robustness table is generated
+from this record.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import Counter
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_chaos.json")
+
+CHAOS_SEED = 19       # same seed the CLI smoke and chaos tests pin
+ROUND_SEED = 7
+
+# fault intensity ladder: per-chunk fault probability while the GE chain is
+# in the bad state, and the kill share of those faults
+LEVELS = (
+    ("none", 0.0, 0.0),
+    ("light", 0.2, 0.3),
+    ("heavy", 0.6, 0.6),
+)
+
+
+def _level_cfg(name: str, fault_bad: float, p_kill: float):
+    from repro.comm.faults import FaultConfig
+
+    return FaultConfig(
+        seed=CHAOS_SEED,
+        chunk_bytes=512,
+        ge_p_good_bad=0.15,
+        ge_p_bad_good=0.4,
+        fault_good=0.0,
+        fault_bad=fault_bad,
+        p_kill=p_kill,
+        p_refuse=0.5 if fault_bad > 0 else 0.0,
+        delay_s=0.01,
+    )
+
+
+def chaos_sweep():
+    from benchmarks.common import SMOKE
+    from repro.fed.mp_server import demo_params, run_socket_round
+
+    n_clients = 4
+    levels = [lv for lv in LEVELS if not SMOKE or lv[0] in ("none", "heavy")]
+    params = demo_params(seed=ROUND_SEED)
+
+    rows = []
+    record = {
+        "smoke": SMOKE,
+        "n_clients": n_clients,
+        "chaos_seed": CHAOS_SEED,
+        "quorum_frac": 0.5,
+        "levels": {},
+    }
+    goodput_heaviest = 1.0
+    for name, fault_bad, p_kill in levels:
+        cfg = _level_cfg(name, fault_bad, p_kill)
+        t0 = time.perf_counter()
+        res = run_socket_round(
+            params, n_clients, seed=ROUND_SEED, mode="sync",
+            quorum_frac=0.5, fault_cfg=cfg,
+        )
+        wall = time.perf_counter() - t0
+        led = res.ledger()
+        assert led["balance_ok"], f"ledger imbalance at level {name}"
+        shipped = max(res.shipped_update_bytes, 1)
+        goodput = res.ingested_update_bytes / shipped
+        frac = res.n_survivors / n_clients
+        record["levels"][name] = {
+            f"round_{name}_s": wall,
+            "fault_bad": fault_bad,
+            "p_kill": p_kill,
+            "survivor_frac": frac,
+            "committed": res.committed,
+            "retries": res.retries,
+            "resumed_bytes": res.resumed_bytes,
+            "shipped_update_bytes": res.shipped_update_bytes,
+            "ingested_update_bytes": res.ingested_update_bytes,
+            "dropped_update_bytes": res.dropped_update_bytes,
+            "goodput_frac": round(goodput, 4),
+            "outcomes": dict(Counter(res.outcomes.values())),
+            "chaos": res.chaos,
+        }
+        rows.append((f"chaos_{name}", round(wall * 1e6, 1), round(frac, 3)))
+        goodput_heaviest = goodput
+        # the robustness claim: faults may cost bytes, never correctness —
+        # every level must commit at (or above) quorum with a balanced
+        # ledger, and the no-fault level must lose nothing
+        if name == "none":
+            assert frac == 1.0 and res.retries == 0, (
+                f"no-fault level degraded: {led}"
+            )
+    rows.append(("chaos_goodput", 0.0, round(goodput_heaviest, 3)))
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    return rows

@@ -2,13 +2,13 @@
 
 Compares the smoke-mode bench records the CI job just produced
 (``BENCH_aggregate.json`` / ``BENCH_encode.json`` /
-``BENCH_hierarchy.json`` / ``BENCH_serve.json`` in the repo root)
-against the committed baselines in ``benchmarks/baselines/`` and fails on
-a >THRESHOLD× slowdown of any timing metric (keys ending in ``_s``), or on
-a metric that silently disappeared from the record.
+``BENCH_hierarchy.json`` / ``BENCH_serve.json`` / ``BENCH_chaos.json`` in
+the repo root) against the committed baselines in ``benchmarks/baselines/``
+and fails on a >THRESHOLD× slowdown of any timing metric (keys ending in
+``_s``), or on a metric that silently disappeared from the record.
 
     PYTHONPATH=src python -m benchmarks.run \
-        --only aggregate,encode,hierarchy,serve --smoke
+        --only aggregate,encode,hierarchy,serve,chaos --smoke
     python benchmarks/check_regression.py              # gate (exit 1 = fail)
     python benchmarks/check_regression.py --update     # re-baseline
 
@@ -31,7 +31,7 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
 RECORDS = ("BENCH_aggregate.json", "BENCH_encode.json",
-           "BENCH_hierarchy.json", "BENCH_serve.json")
+           "BENCH_hierarchy.json", "BENCH_serve.json", "BENCH_chaos.json")
 THRESHOLD = 2.0
 # Sub-5ms timings are runner-speed lottery (a dev-machine baseline vs a CI
 # runner can legitimately differ >2x at the 100µs scale); the structural

@@ -21,8 +21,8 @@ from repro.launch.env import pin_runtime
 pin_runtime()
 
 from benchmarks import (  # noqa: E402
-    bench_aggregate, bench_encode, bench_hierarchy, bench_kernels,
-    bench_serve, bench_tables, bench_wire, roofline,
+    bench_aggregate, bench_chaos, bench_encode, bench_hierarchy,
+    bench_kernels, bench_serve, bench_tables, bench_wire, roofline,
 )
 
 SECTIONS = {
@@ -33,6 +33,7 @@ SECTIONS = {
     "encode": bench_encode.fused_encode,
     "hierarchy": bench_hierarchy.fleet_scaling,
     "serve": bench_serve.serve_under_load,
+    "chaos": bench_chaos.chaos_sweep,
     "kernel_peak": roofline.kernel_peak_table,
     "table2": bench_tables.table2_iid_accuracy,
     "table3": bench_tables.table3_noniid,

@@ -17,19 +17,36 @@ package:
   - ``transport``: length-prefixed TCP framing for the REAL process
                  boundary (``fed.mp_server``): incremental recv into the
                  zero-copy wire decode, partial-read tolerant, byte counts
-                 metered from actual socket traffic.
+                 metered from actual socket traffic, typed failure
+                 taxonomy + retry/backoff policy, resumable uploads.
+  - ``faults``:  deterministic in-path chaos (``ChaosProxy``): the
+                 Gilbert–Elliott chain from ``channel`` applied to REAL
+                 sockets — drops, delays, throttling, mid-frame
+                 truncation, connection resets — keyed by
+                 (seed, client_id, attempt) at absolute byte offsets.
 """
 
 from repro.comm.channel import Channel, ChannelConfig, ClientLink, TransferEvent
+from repro.comm.faults import ChaosProxy, FaultConfig, FaultSchedule
 from repro.comm.transport import (
     FT_BCAST,
     FT_DONE,
     FT_ERR,
     FT_HELLO,
+    FT_RESUME,
     FT_UPDATE,
+    PROTO_VERSION,
+    SUPPORTED_PROTOS,
     Frame,
     FrameDecoder,
+    FrameError,
+    ProtocolError,
+    RetryExhausted,
+    RetryPolicy,
+    TornConnectionError,
     TransportError,
+    TransportTimeout,
+    call_with_retries,
     pack_frame,
     recv_frame,
     send_frame,
@@ -57,7 +74,11 @@ __all__ = [
     "update_nbytes",
     "StreamDecoder", "decode_update_chunks", "MAX_BODY_BYTES",
     "Channel", "ChannelConfig", "ClientLink", "TransferEvent",
-    "Frame", "FrameDecoder", "TransportError",
+    "Frame", "FrameDecoder", "TransportError", "FrameError",
+    "TornConnectionError", "TransportTimeout", "ProtocolError",
+    "RetryExhausted", "RetryPolicy", "call_with_retries",
     "pack_frame", "send_frame", "recv_frame",
-    "FT_HELLO", "FT_BCAST", "FT_UPDATE", "FT_DONE", "FT_ERR",
+    "FT_HELLO", "FT_BCAST", "FT_UPDATE", "FT_DONE", "FT_ERR", "FT_RESUME",
+    "PROTO_VERSION", "SUPPORTED_PROTOS",
+    "ChaosProxy", "FaultConfig", "FaultSchedule",
 ]

@@ -29,6 +29,17 @@ Byte metering: ``send_frame`` returns the exact framed byte count and
 ``FrameDecoder.bytes_in`` counts every byte taken off the socket, so the
 federation ledger's "upload bytes" are measured from actual socket traffic,
 not from payload lengths.
+
+Failures carry a typed taxonomy under ``TransportError`` — ``FrameError``
+(malformed bytes), ``TornConnectionError`` (peer died mid-conversation),
+``TransportTimeout`` (also a ``TimeoutError``), ``ProtocolError`` (valid
+frames in an invalid order / unsupported protocol version) and
+``RetryExhausted`` — so the federation ledger can book WHY a client was
+lost, not just that it was. ``RetryPolicy`` + ``call_with_retries`` give
+clients deterministic exponential backoff with seeded jitter; the HELLO
+(protocol version 2) carries a client nonce + attempt counter so a
+re-connected client can RESUME its upload at the server's byte offset
+instead of re-sending (see ``fed.mp_server``).
 """
 
 from __future__ import annotations
@@ -37,19 +48,29 @@ import dataclasses
 import json
 import socket
 import struct
+import time
 from collections import deque
-from typing import Any
+from typing import Any, Callable
 
 TRANSPORT_MAGIC = b"TFT1"
 _FRAME = struct.Struct("<4sBBHQ")  # magic, ftype, flags, meta_len, payload_len
 
 # frame types
-FT_HELLO = 1    # client → server: {"client_id": int}
+FT_HELLO = 1    # client → server: {"client_id": int, "proto": int, ...}
 FT_BCAST = 2    # server → client: payload = global-model wire buffer
 FT_UPDATE = 3   # client → server: payload = update wire buffer, meta weight
 FT_DONE = 4     # either direction: orderly end of conversation
 FT_ERR = 5      # either direction: meta = {"error": str}
-_KNOWN_TYPES = frozenset((FT_HELLO, FT_BCAST, FT_UPDATE, FT_DONE, FT_ERR))
+FT_RESUME = 6   # server → client: {"have": int} — resume upload at offset
+_KNOWN_TYPES = frozenset((FT_HELLO, FT_BCAST, FT_UPDATE, FT_DONE, FT_ERR,
+                          FT_RESUME))
+
+# HELLO protocol version: v1 = PR-7 one-shot conversation (no nonce, no
+# resume); v2 adds {proto, nonce, attempt} and the RESUME frame. A server
+# answers a v2 HELLO with v2 frames only — a v1 peer never sees FT_RESUME.
+PROTO_V1 = 1
+PROTO_VERSION = 2
+SUPPORTED_PROTOS = frozenset((PROTO_V1, PROTO_VERSION))
 
 # a frame larger than this is a corrupted length field, not an update
 MAX_PAYLOAD_BYTES = 1 << 34  # 16 GiB
@@ -58,6 +79,36 @@ RECV_CHUNK = 1 << 16
 
 class TransportError(ConnectionError):
     """Malformed frame or torn connection at the transport layer."""
+
+
+class FrameError(TransportError):
+    """Bytes that are not a valid frame: bad magic, unknown type, corrupted
+    length field, malformed JSON meta, or feeding a closed decoder."""
+
+
+class TornConnectionError(TransportError):
+    """The peer vanished mid-conversation: EOF inside a frame, reset, or a
+    clean close where a frame was still owed."""
+
+
+class TransportTimeout(TransportError, TimeoutError):
+    """The peer went silent past the deadline (socket timeout surfaced
+    through the transport taxonomy; still catchable as ``TimeoutError``)."""
+
+
+class ProtocolError(TransportError):
+    """Well-formed frames in an order the protocol forbids — wrong frame
+    type for the conversation state, unsupported protocol version,
+    duplicate or mismatched client identity."""
+
+
+class RetryExhausted(TransportError):
+    """A retrying client gave up: every attempt failed. ``attempts`` counts
+    them; ``__cause__`` is the last attempt's error."""
+
+    def __init__(self, msg: str, attempts: int = 0):
+        super().__init__(msg)
+        self.attempts = attempts
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,12 +132,12 @@ def _meta_bytes(meta: dict | None) -> bytes:
 def pack_frame(ftype: int, payload: bytes = b"", meta: dict | None = None) -> bytes:
     """Serialize one frame (header + JSON meta + payload)."""
     if ftype not in _KNOWN_TYPES:
-        raise TransportError(f"unknown frame type {ftype}")
+        raise FrameError(f"unknown frame type {ftype}")
     mb = _meta_bytes(meta)
     if len(mb) > 0xFFFF:
-        raise TransportError(f"frame meta too large: {len(mb)} B")
+        raise FrameError(f"frame meta too large: {len(mb)} B")
     if len(payload) > MAX_PAYLOAD_BYTES:
-        raise TransportError(f"frame payload too large: {len(payload)} B")
+        raise FrameError(f"frame payload too large: {len(payload)} B")
     return b"".join([
         _FRAME.pack(TRANSPORT_MAGIC, ftype, 0, len(mb), len(payload)),
         mb,
@@ -109,17 +160,18 @@ class FrameDecoder:
         self._max_payload = int(max_payload_bytes)
         self._ready: deque[Frame] = deque()
         self.bytes_in = 0          # every byte fed, the socket-traffic meter
+        self.closed = False
 
     def _header_check(self) -> int:
         magic, ftype, _flags, meta_len, payload_len = _FRAME.unpack_from(self._buf)
         if magic != TRANSPORT_MAGIC:
-            raise TransportError(
+            raise FrameError(
                 f"bad frame magic {magic!r} (expected {TRANSPORT_MAGIC!r})"
             )
         if ftype not in _KNOWN_TYPES:
-            raise TransportError(f"unknown frame type {ftype}")
+            raise FrameError(f"unknown frame type {ftype}")
         if payload_len > self._max_payload:
-            raise TransportError(
+            raise FrameError(
                 f"payload_len {payload_len} exceeds cap {self._max_payload} — "
                 "corrupted length field"
             )
@@ -129,6 +181,8 @@ class FrameDecoder:
         """Absorb one chunk; returns the frames it completed (they are ALSO
         queued internally — drain with ``pop()`` OR consume the return
         value, not both)."""
+        if self.closed:
+            raise FrameError("feed() after close(): decoder is finished")
         self._buf += chunk
         self.bytes_in += len(chunk)
         out: list[Frame] = []
@@ -147,9 +201,9 @@ class FrameDecoder:
             try:
                 meta = json.loads(meta_raw.decode("utf-8")) if meta_len else {}
             except (UnicodeDecodeError, json.JSONDecodeError) as e:
-                raise TransportError(f"malformed frame meta: {e}") from e
+                raise FrameError(f"malformed frame meta: {e}") from e
             if not isinstance(meta, dict):
-                raise TransportError(
+                raise FrameError(
                     f"frame meta must be a JSON object, got {type(meta).__name__}"
                 )
             out.append(Frame(ftype, meta, raw[_FRAME.size + meta_len :]))
@@ -164,10 +218,22 @@ class FrameDecoder:
     def pending_bytes(self) -> int:
         return len(self._buf)
 
+    def take_buffer(self) -> bytes:
+        """Hand off the raw undecoded tail (bytes of a frame still in
+        flight) and leave the decoder clean. The resume path uses this to
+        move bytes that over-read past a handshake frame into the
+        session's long-lived decoder; ``bytes_in`` keeps counting them
+        here (they WERE read off this socket)."""
+        out = bytes(self._buf)
+        self._buf.clear()
+        self._need = None
+        return out
+
     def close(self) -> None:
+        self.closed = True
         if self._buf:
             need = "?" if self._need is None else str(self._need)
-            raise TransportError(
+            raise TornConnectionError(
                 f"connection closed mid-frame: {len(self._buf)} bytes pending "
                 f"of {need}"
             )
@@ -196,23 +262,106 @@ def recv_frame(
 
     Pass a persistent ``decoder`` when the connection carries several
     frames — bytes of the NEXT frame that rode in on the same recv() stay
-    buffered in it. EOF mid-frame raises ``TransportError``; a socket
-    timeout surfaces as the standard ``socket.timeout`` (an ``OSError``).
+    buffered in it. EOF mid-frame raises ``TornConnectionError``; a socket
+    timeout surfaces as ``TransportTimeout``. A ``timeout_s`` applies only
+    to THIS call — the socket's prior timeout is restored on the way out,
+    never left mutated as a side effect.
     """
     dec = decoder if decoder is not None else FrameDecoder()
+    prior = sock.gettimeout()
     if timeout_s is not None:
         sock.settimeout(timeout_s)
-    while True:
-        # frames buffered by an earlier recv() drain first (pop, so a chunk
-        # carrying several frames never loses the extras)
-        frame = dec.pop()
-        if frame is not None:
-            return frame
-        chunk = sock.recv(RECV_CHUNK)
-        if not chunk:
-            dec.close()   # raises on partial frame
-            raise TransportError("connection closed before a frame arrived")
-        dec.feed(chunk)
+    try:
+        while True:
+            # frames buffered by an earlier recv() drain first (pop, so a
+            # chunk carrying several frames never loses the extras)
+            frame = dec.pop()
+            if frame is not None:
+                return frame
+            try:
+                chunk = sock.recv(RECV_CHUNK)
+            except socket.timeout as e:
+                raise TransportTimeout(
+                    f"no frame within {timeout_s if timeout_s is not None else prior}s"
+                ) from e
+            except ConnectionResetError as e:
+                raise TornConnectionError(f"connection reset: {e}") from e
+            if not chunk:
+                dec.close()   # raises TornConnectionError on partial frame
+                raise TornConnectionError(
+                    "connection closed before a frame arrived")
+            dec.feed(chunk)
+    finally:
+        if timeout_s is not None:
+            try:
+                sock.settimeout(prior)
+            except OSError:
+                pass   # socket already dead — nothing to restore
+
+
+# --------------------------------------------------------------------------
+# Retry policy (reconnect/backoff for flaky links).
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff with seeded jitter for reconnecting clients.
+
+    ``backoff_s(attempt)`` grows ``base_backoff_s · factor^attempt`` capped
+    at ``max_backoff_s``; jitter multiplies by U[1-jitter_frac, 1+jitter_frac]
+    drawn from the CALLER's rng, so a seeded client backs off identically
+    run to run (chaos determinism) while distinct clients decorrelate.
+    """
+
+    max_attempts: int = 5
+    base_backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 2.0
+    jitter_frac: float = 0.1
+    connect_timeout_s: float = 10.0
+    io_timeout_s: float = 60.0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be ≥ 1, got {self.max_attempts}")
+        if self.backoff_factor < 1.0:
+            raise ValueError(
+                f"backoff_factor must be ≥ 1, got {self.backoff_factor}")
+
+    def backoff_s(self, attempt: int, rng=None) -> float:
+        base = min(self.base_backoff_s * self.backoff_factor ** attempt,
+                   self.max_backoff_s)
+        if rng is None or self.jitter_frac <= 0:
+            return base
+        lo, hi = 1.0 - self.jitter_frac, 1.0 + self.jitter_frac
+        return base * float(rng.uniform(lo, hi))
+
+
+def call_with_retries(
+    fn: Callable[[int], Any], policy: RetryPolicy, rng=None, *,
+    retryable: tuple = (TransportError, OSError),
+    fatal: tuple = (),
+    sleep: Callable[[float], None] = time.sleep,
+) -> Any:
+    """Run ``fn(attempt)`` until it returns, retrying ``retryable`` failures
+    with the policy's backoff. ``fatal`` exception types (checked first)
+    propagate immediately — a server REJECTION must not be retried into.
+    Exhaustion raises ``RetryExhausted`` chaining the last error."""
+    last: BaseException | None = None
+    for attempt in range(policy.max_attempts):
+        try:
+            return fn(attempt)
+        except fatal:
+            raise
+        except retryable as e:
+            last = e
+            if attempt + 1 < policy.max_attempts:
+                sleep(policy.backoff_s(attempt, rng))
+    raise RetryExhausted(
+        f"gave up after {policy.max_attempts} attempts: {last}",
+        attempts=policy.max_attempts,
+    ) from last
 
 
 Pytree = Any

@@ -1,0 +1,175 @@
+"""Chaos acceptance: with a FIXED fault seed injecting refused connects,
+delays, mid-frame truncation (forcing reconnect + resume) and one client
+crash, a quorum round must commit with a root aggregate sha256-identical to
+the in-process reference restricted to the surviving client set — in both
+sync and buffered-async modes — and the update-byte ledger must balance.
+
+These rounds spawn real client OS processes through a real in-path
+ChaosProxy, so they share test_mp_server's generous-but-finite budget."""
+
+import multiprocessing as mp
+import signal
+import time
+
+import pytest
+
+from repro.fed.mp_server import (
+    QuorumNotMetError,
+    default_chaos,
+    demo_params,
+    params_hash,
+    reap_processes,
+    run_inprocess_reference,
+    run_socket_round,
+)
+
+pytestmark = pytest.mark.skipif(
+    "spawn" not in mp.get_all_start_methods(),
+    reason="platform lacks multiprocessing spawn start method",
+)
+
+TIMEOUT_S = 300.0
+N_CLIENTS = 6
+SEED = 7
+CHAOS_SEED = 19   # reachable mid-frame kills + a refused connect (see CLI)
+
+
+@pytest.fixture(scope="module")
+def chaos_sync_round():
+    params = demo_params(seed=SEED)
+    cfg = default_chaos(seed=CHAOS_SEED, n_clients=N_CLIENTS)
+    res = run_socket_round(params, N_CLIENTS, seed=SEED, mode="sync",
+                           quorum_frac=0.5, timeout_s=TIMEOUT_S,
+                           fault_cfg=cfg)
+    return params, res
+
+
+def test_chaos_sync_byte_identical_to_surviving_reference(chaos_sync_round):
+    params, res = chaos_sync_round
+    assert res.n_survivors >= res.quorum_n
+    ref = run_inprocess_reference(params, N_CLIENTS, seed=SEED, mode="sync",
+                                  order=sorted(res.arrivals))
+    assert params_hash(res.params) == params_hash(ref)
+
+
+def test_chaos_survivor_set_is_deterministic(chaos_sync_round):
+    """The fault schedule is keyed by (seed, client, attempt) at byte
+    offsets — which clients land is a pure function of the seeds, not of
+    thread timing. Seed 19's only casualty is the injected crash client."""
+    _params, res = chaos_sync_round
+    assert sorted(res.arrivals) == [0, 1, 2, 3, 4]
+    assert res.outcomes[N_CLIENTS - 1] == "crashed"
+    assert all(res.outcomes[cid] == "ok" for cid in range(N_CLIENTS - 1))
+
+
+def test_chaos_exercised_retry_and_resume(chaos_sync_round):
+    """Seed 19 has a reachable mid-frame kill followed by a clean attempt:
+    the round must have actually used reconnect (retries) and mid-frame
+    resume (resumed_bytes — upload bytes NOT re-sent after a truncation)."""
+    _params, res = chaos_sync_round
+    assert res.retries >= 1
+    assert res.resumed_bytes > 0
+    assert res.chaos is not None
+    assert res.chaos["killed"] >= 1
+    assert res.chaos["refused"] >= 1
+
+
+def test_chaos_ledger_balances_and_books_the_crash(chaos_sync_round):
+    _params, res = chaos_sync_round
+    led = res.ledger()
+    assert led["balance_ok"]
+    assert led["committed"] == "quorum"
+    # the crash client shipped a prefix of its update: paid-for, never used
+    assert res.dropped_update_bytes > 0
+    assert res.shipped_update_bytes \
+        == res.ingested_update_bytes + res.dropped_update_bytes
+    # outcomes cover every client exactly once
+    assert sorted(led["outcomes"]) == [str(c) for c in range(N_CLIENTS)]
+
+
+def test_chaos_buffered_byte_identical_in_arrival_order():
+    params = demo_params(seed=SEED + 2)
+    cfg = default_chaos(seed=CHAOS_SEED, n_clients=N_CLIENTS)
+    res = run_socket_round(params, N_CLIENTS, seed=SEED + 2, mode="buffered",
+                           buffer_k=3, eta=0.5, quorum_frac=0.5,
+                           timeout_s=TIMEOUT_S, fault_cfg=cfg)
+    assert res.n_survivors >= res.quorum_n
+    ref = run_inprocess_reference(params, N_CLIENTS, seed=SEED + 2,
+                                  mode="buffered", buffer_k=3, eta=0.5,
+                                  order=res.arrivals)
+    assert params_hash(res.params) == params_hash(ref)
+    assert res.ledger()["balance_ok"]
+
+
+def test_mixed_legacy_and_rejected_clients():
+    """Version negotiation end-to-end: a v1 (PR-7) client still lands, a
+    client announcing an unsupported proto is rejected (not retried into),
+    and the aggregate matches the reference over the survivors."""
+    from repro.comm.faults import FaultConfig
+
+    params = demo_params(seed=SEED + 3)
+    cfg = FaultConfig(fault_good=0.0, fault_bad=0.0,   # transparent proxy
+                      bad_proto_clients=(2,))
+    res = run_socket_round(params, 4, seed=SEED + 3, mode="sync",
+                           quorum_frac=0.5, timeout_s=TIMEOUT_S,
+                           fault_cfg=cfg, legacy_clients=(1,))
+    assert sorted(res.arrivals) == [0, 1, 3]
+    assert res.outcomes == {0: "ok", 1: "ok", 2: "rejected", 3: "ok"}
+    ref = run_inprocess_reference(params, 4, seed=SEED + 3, mode="sync",
+                                  order=sorted(res.arrivals))
+    assert params_hash(res.params) == params_hash(ref)
+    assert res.ledger()["balance_ok"]
+
+
+def test_quorum_not_met_raises():
+    """Every client crashing before upload with quorum_frac=1.0 must fail
+    the round loudly (and promptly — the process watcher sees the exits,
+    it does not wait out the deadline)."""
+    from repro.comm.faults import FaultConfig
+
+    params = demo_params(seed=SEED)
+    cfg = FaultConfig(fault_good=0.0, fault_bad=0.0,
+                      crash_clients=(0, 1), crash_after_frac=0.1)
+    with pytest.raises(QuorumNotMetError, match="crashed"):
+        run_socket_round(params, 2, seed=SEED, quorum_frac=1.0,
+                         timeout_s=TIMEOUT_S, fault_cfg=cfg)
+
+
+# --------------------------------------------------------------------------
+# Process reaping (the orphan-leak fix).
+# --------------------------------------------------------------------------
+
+
+def _sleepy():
+    time.sleep(120)
+
+
+def _stubborn():
+    signal.signal(signal.SIGTERM, signal.SIG_IGN)
+    while True:
+        time.sleep(1)
+
+
+@pytest.mark.skipif("fork" not in mp.get_all_start_methods(),
+                    reason="escalation test uses fork for plain targets")
+def test_reap_escalates_terminate_then_kill():
+    ctx = mp.get_context("fork")
+    sleepy = ctx.Process(target=_sleepy, daemon=True)
+    stubborn = ctx.Process(target=_stubborn, daemon=True)
+    sleepy.start()
+    stubborn.start()
+    esc = reap_processes([sleepy, stubborn], grace_s=0.5)
+    assert not sleepy.is_alive()
+    assert not stubborn.is_alive()        # SIGKILL is not ignorable
+    assert esc["terminated"] == 2         # neither exited in the grace
+    assert esc["killed"] == 1             # only the SIGTERM-ignorer needed it
+
+
+def test_reap_no_escalation_for_clean_children():
+    ctx = mp.get_context("fork")
+    procs = [ctx.Process(target=time.sleep, args=(0.01,)) for _ in range(3)]
+    for p in procs:
+        p.start()
+    esc = reap_processes(procs, grace_s=10.0)
+    assert esc == {"terminated": 0, "killed": 0}
+    assert all(p.exitcode == 0 for p in procs)

@@ -1,0 +1,353 @@
+"""Deterministic chaos layer: FaultSchedule reproducibility, the
+ChaosProxy's transparent / refuse / kill / throttle behaviors over real
+loopback sockets, and the RST abort discipline."""
+
+import socket
+import threading
+
+import pytest
+
+from repro.comm import (
+    FT_HELLO,
+    FT_UPDATE,
+    ChaosProxy,
+    FaultConfig,
+    FaultSchedule,
+    FrameDecoder,
+    TransportError,
+    pack_frame,
+    recv_frame,
+    send_frame,
+)
+from repro.comm.faults import DELAY, KILL, OK, REFUSE, abort_socket
+
+BURSTY = dict(ge_p_good_bad=0.3, ge_p_bad_good=0.3, fault_good=0.05,
+              fault_bad=0.8, p_kill=0.5, p_refuse=0.5, delay_s=0.001)
+
+
+# --------------------------------------------------------------------------
+# The schedule: pure, keyed, prefix-stable.
+# --------------------------------------------------------------------------
+
+
+def test_schedule_is_deterministic_per_key():
+    cfg = FaultConfig(seed=3, chunk_bytes=64, **BURSTY)
+    a = FaultSchedule(cfg, client_id=2, attempt=1)
+    b = FaultSchedule(cfg, client_id=2, attempt=1)
+    assert a.connect_action() == b.connect_action()
+    assert [a.action_at(i) for i in range(32)] \
+        == [b.action_at(i) for i in range(32)]
+
+
+def test_schedule_lazy_fill_is_prefix_stable():
+    """Consulting chunk 20 first must produce the SAME stream as consulting
+    0..20 in order — a partially-consumed schedule is a prefix of the full
+    one, so how far a connection got before dying cannot change history."""
+    cfg = FaultConfig(seed=5, chunk_bytes=64, **BURSTY)
+    eager = FaultSchedule(cfg, 1, 0)
+    in_order = [eager.action_at(i) for i in range(21)]
+    lazy = FaultSchedule(cfg, 1, 0)
+    assert lazy.action_at(20) == in_order[20]
+    assert [lazy.action_at(i) for i in range(21)] == in_order
+
+
+def test_schedule_keys_decorrelate():
+    """Different (client, attempt) keys must draw different weather — with
+    bursty rates and 64 chunks, identical streams would mean the key is
+    being ignored."""
+    cfg = FaultConfig(seed=0, chunk_bytes=64, **BURSTY)
+    streams = {
+        (cid, att): tuple(FaultSchedule(cfg, cid, att).action_at(i)
+                          for i in range(64))
+        for cid in range(4) for att in range(2)
+    }
+    assert len(set(streams.values())) > 1
+
+
+def test_disabled_schedule_draws_nothing():
+    cfg = FaultConfig(seed=9, fault_good=0.0, fault_bad=0.0)
+    assert cfg.disabled
+    s = FaultSchedule(cfg, 0, 0)
+    assert s.connect_action() == OK
+    assert all(s.action_at(i) == (OK, 0.0) for i in range(16))
+    assert s.first_kill_offset(1 << 20) is None
+
+
+def test_first_kill_offset_matches_action_stream():
+    cfg = FaultConfig(seed=1, chunk_bytes=128, ge_p_good_bad=0.9,
+                      ge_p_bad_good=0.1, fault_bad=0.9, p_kill=0.9,
+                      p_refuse=0.0)
+    found = 0
+    for cid in range(8):
+        s = FaultSchedule(cfg, cid, 0)
+        off = s.first_kill_offset(4096)
+        if off is None:
+            continue
+        found += 1
+        idx = off // cfg.chunk_bytes
+        assert off == idx * cfg.chunk_bytes
+        assert s.action_at(idx)[0] == KILL
+        assert all(s.action_at(i)[0] != KILL for i in range(idx))
+    assert found > 0       # these rates make kills near-certain somewhere
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="fault_bad"):
+        FaultConfig(fault_bad=1.5)
+    with pytest.raises(ValueError, match="chunk_bytes"):
+        FaultConfig(chunk_bytes=0)
+    assert 0.0 < FaultConfig(**BURSTY).stationary_p_bad < 1.0
+
+
+# --------------------------------------------------------------------------
+# The proxy over real sockets.
+# --------------------------------------------------------------------------
+
+
+def _upstream_sink():
+    """A server that answers any HELLO with FT_UPDATE echoing byte counts;
+    records per-connection received byte totals."""
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(8)
+    srv.settimeout(0.1)
+    stop = threading.Event()
+    received: list[int] = []
+
+    def run():
+        while not stop.is_set():
+            try:
+                conn, _ = srv.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            threading.Thread(target=handle, args=(conn,), daemon=True).start()
+
+    def handle(conn):
+        n = 0
+        conn.settimeout(10)
+        try:
+            dec = FrameDecoder()
+            hello = recv_frame(conn, dec, timeout_s=10)
+            n += dec.bytes_in
+            send_frame(conn, FT_UPDATE, b"r" * 64,
+                       {"echo": hello.meta.get("client_id", -1)})
+            while True:
+                chunk = conn.recv(1 << 16)
+                if not chunk:
+                    break
+                n += len(chunk)
+        except (TransportError, OSError):
+            pass
+        finally:
+            received.append(n)
+            conn.close()
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+
+    def close():
+        stop.set()
+        srv.close()
+        t.join(timeout=5)
+
+    return srv.getsockname(), received, close
+
+
+def _hello(cid, attempt=0):
+    return pack_frame(FT_HELLO, meta={"client_id": cid, "attempt": attempt,
+                                      "proto": 2, "nonce": "ab"})
+
+
+def test_proxy_is_transparent_when_disabled():
+    addr, received, close = _upstream_sink()
+    cfg = FaultConfig(fault_good=0.0, fault_bad=0.0)
+    try:
+        with ChaosProxy(addr, cfg) as proxy:
+            with socket.create_connection(("127.0.0.1", proxy.port),
+                                          timeout=10) as s:
+                sent = s.sendall(_hello(1)) or len(_hello(1))
+                reply = recv_frame(s, timeout_s=10)
+                assert reply.ftype == FT_UPDATE
+                assert reply.meta["echo"] == 1
+                body = b"x" * 3000
+                s.sendall(body)
+                s.shutdown(socket.SHUT_WR)
+                # wait for the sink to book the connection total
+                for _ in range(100):
+                    if received:
+                        break
+                    threading.Event().wait(0.05)
+                assert received and received[0] == sent + len(body)
+            assert proxy.stats["refused"] == 0
+            assert proxy.stats["killed"] == 0
+            assert proxy.stats["bytes_up"] == sent + len(body)
+    finally:
+        close()
+
+
+def test_proxy_throttle_paces_but_delivers_everything():
+    addr, received, close = _upstream_sink()
+    cfg = FaultConfig(fault_good=0.0, fault_bad=0.0,
+                      throttle_bytes=64, throttle_delay_s=0.0005)
+    try:
+        with ChaosProxy(addr, cfg) as proxy:
+            with socket.create_connection(("127.0.0.1", proxy.port),
+                                          timeout=10) as s:
+                h = _hello(2)
+                s.sendall(h)
+                assert recv_frame(s, timeout_s=10).ftype == FT_UPDATE
+                body = b"y" * 2048
+                s.sendall(body)
+                s.shutdown(socket.SHUT_WR)
+                for _ in range(200):
+                    if received:
+                        break
+                    threading.Event().wait(0.05)
+                assert received and received[0] == len(h) + len(body)
+    finally:
+        close()
+
+
+def _find_key(cfg, want, nbytes=4096, max_cid=64):
+    """First (cid, attempt=0) whose schedule has the wanted behavior."""
+    for cid in range(max_cid):
+        s = FaultSchedule(cfg, cid, 0)
+        if want == REFUSE and s.connect_action() == REFUSE:
+            return cid, None
+        if want == KILL and s.connect_action() == OK:
+            off = s.first_kill_offset(nbytes)
+            if off is not None and off > 0:
+                return cid, off
+    raise AssertionError(f"no {want} key in range — pick other rates")
+
+
+def test_proxy_refuses_deterministically():
+    addr, received, close = _upstream_sink()
+    cfg = FaultConfig(seed=2, chunk_bytes=256, **BURSTY)
+    cid, _ = _find_key(cfg, REFUSE)
+    try:
+        with ChaosProxy(addr, cfg) as proxy:
+            for _ in range(2):       # same key → refused every time
+                with pytest.raises((TransportError, OSError)):
+                    with socket.create_connection(
+                        ("127.0.0.1", proxy.port), timeout=10
+                    ) as s:
+                        s.sendall(_hello(cid))
+                        recv_frame(s, timeout_s=10)
+            assert proxy.stats["refused"] == 2
+        assert not received          # nothing ever reached the upstream
+    finally:
+        close()
+
+
+def test_proxy_kill_truncates_upload_mid_stream():
+    """A KILL chunk resets both directions: the client sees a torn
+    connection, the upstream receives at most the bytes before the kill
+    offset — a mid-frame truncation, never a clean EOF with a short body."""
+    addr, received, close = _upstream_sink()
+    cfg = FaultConfig(seed=4, chunk_bytes=256, ge_p_good_bad=0.9,
+                      ge_p_bad_good=0.1, fault_bad=0.9, p_kill=0.9,
+                      p_refuse=0.0, delay_s=0.0)
+    total = 4096
+    cid, off = _find_key(cfg, KILL, nbytes=total)
+    try:
+        with ChaosProxy(addr, cfg) as proxy:
+            h = _hello(cid)
+            with pytest.raises((TransportError, OSError)):
+                with socket.create_connection(
+                    ("127.0.0.1", proxy.port), timeout=10
+                ) as s:
+                    s.sendall(h)
+                    s.sendall(b"k" * (total - len(h)))
+                    s.shutdown(socket.SHUT_WR)
+                    # drain until the RST surfaces client-side
+                    while True:
+                        if not s.recv(1 << 16):
+                            raise TransportError("clean EOF (no reply sent)")
+            for _ in range(100):
+                if received:
+                    break
+                threading.Event().wait(0.05)
+            assert proxy.stats["killed"] >= 1
+            assert received and received[0] <= off
+            assert received[0] < total
+    finally:
+        close()
+
+
+def test_proxy_resets_on_garbage_first_bytes():
+    """Bytes that never parse into a frame cannot be attributed to a
+    schedule key — the proxy resets instead of forwarding them."""
+    addr, received, close = _upstream_sink()
+    cfg = FaultConfig(fault_good=0.0, fault_bad=0.0)
+    try:
+        with ChaosProxy(addr, cfg) as proxy:
+            with pytest.raises((TransportError, OSError)):
+                with socket.create_connection(
+                    ("127.0.0.1", proxy.port), timeout=10
+                ) as s:
+                    s.sendall(b"GET / HTTP/1.1\r\n\r\n" + b"\x00" * 32)
+                    recv_frame(s, timeout_s=10)
+        assert not received
+    finally:
+        close()
+
+
+def test_abort_socket_sends_rst_not_fin():
+    """abort_socket must surface at the peer as a reset (torn), never as a
+    clean EOF a decoder could mistake for a frame boundary."""
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    port = srv.getsockname()[1]
+    client = socket.create_connection(("127.0.0.1", port), timeout=10)
+    conn, _ = srv.accept()
+    try:
+        conn.sendall(b"half a frame")
+        abort_socket(conn)
+        client.settimeout(10)
+        with pytest.raises(OSError):
+            # drain: the buffered bytes may arrive, then the RST must raise
+            while True:
+                data = client.recv(1 << 16)
+                assert data, "peer saw clean EOF — abort sent FIN, not RST"
+    finally:
+        client.close()
+        srv.close()
+
+
+def test_delay_action_is_counted_and_harmless():
+    """DELAY chunks slow delivery but change no bytes: a key whose stream
+    has delays (and no kill) must still deliver everything."""
+    cfg = FaultConfig(seed=6, chunk_bytes=128, ge_p_good_bad=0.9,
+                      ge_p_bad_good=0.1, fault_bad=0.9, p_kill=0.0,
+                      p_refuse=0.0, delay_s=0.001)
+    cid = None
+    for c in range(32):
+        s = FaultSchedule(cfg, c, 0)
+        if s.connect_action() == OK and any(
+            s.action_at(i)[0] == DELAY for i in range(8)
+        ):
+            cid = c
+            break
+    assert cid is not None
+    addr, received, close = _upstream_sink()
+    try:
+        with ChaosProxy(addr, cfg) as proxy:
+            h = _hello(cid)
+            with socket.create_connection(("127.0.0.1", proxy.port),
+                                          timeout=10) as s:
+                s.sendall(h)
+                assert recv_frame(s, timeout_s=10).ftype == FT_UPDATE
+                s.sendall(b"d" * 900)
+                s.shutdown(socket.SHUT_WR)
+                for _ in range(200):
+                    if received:
+                        break
+                    threading.Event().wait(0.05)
+            assert received and received[0] == len(h) + 900
+            assert proxy.stats["delayed_chunks"] >= 1
+    finally:
+        close()

@@ -63,8 +63,9 @@ def test_ledger_metered_from_socket_traffic(sync_round):
     assert res.payload_bytes > 0
     assert res.upload_bytes > res.payload_bytes
     overhead = res.framing_overhead_bytes
-    # HELLO (~16+meta) + UPDATE header/meta per client: tight sane bounds
-    assert N_CLIENTS * 30 <= overhead <= N_CLIENTS * 120
+    # HELLO (~16 B header + v2 meta: client_id/proto/nonce/attempt) plus the
+    # UPDATE header/meta per client: tight sane bounds
+    assert N_CLIENTS * 30 <= overhead <= N_CLIENTS * 200
     # the broadcast went down once per client inside a BCAST frame + DONE
     from repro.comm.wire import encode_update
 
@@ -110,12 +111,33 @@ def test_inprocess_reference_order_sensitivity():
     assert params_hash(fwd) != params_hash(rev)
 
 
+def test_nofault_round_has_clean_fault_surface(sync_round):
+    """Without faults the new fault-tolerance surface must be inert: every
+    outcome ok, a FULL commit, zero drops/retries/resumes/escalations, and
+    a balanced ledger — the PR-7 byte-identity contract rides on this."""
+    _params, res = sync_round
+    assert res.committed == "full"
+    assert all(v == "ok" for v in res.outcomes.values())
+    assert len(res.outcomes) == N_CLIENTS
+    assert res.dropped_update_bytes == 0
+    assert res.retries == 0 and res.resumed_bytes == 0
+    assert res.escalations == {"terminated": 0, "killed": 0}
+    assert res.chaos is None
+    led = res.ledger()
+    assert led["balance_ok"]
+    assert res.shipped_update_bytes == res.ingested_update_bytes > 0
+
+
 def test_bad_args_rejected():
     params = demo_params()
     with pytest.raises(ValueError, match="n_clients"):
         run_socket_round(params, 0)
     with pytest.raises(ValueError, match="mode"):
         run_socket_round(params, 1, mode="nope")
+    with pytest.raises(ValueError, match="quorum_frac"):
+        run_socket_round(params, 1, quorum_frac=0.0)
+    with pytest.raises(ValueError, match="quorum_frac"):
+        run_socket_round(params, 1, quorum_frac=1.5)
 
 
 def test_aggregate_value_is_weighted_mean():

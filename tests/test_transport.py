@@ -1,9 +1,11 @@
 """TCP framing layer: pack/decode round-trips under arbitrary chunking,
-fail-fast on malformed headers, torn-connection discipline, and a real
-loopback-socket echo with byte metering."""
+fail-fast on malformed headers, torn-connection discipline, adversarial
+decoder inputs, the typed failure taxonomy, retry/backoff policy, and a
+real loopback-socket echo with byte metering."""
 
 import socket
 import threading
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -15,7 +17,14 @@ from repro.comm import (
     FT_HELLO,
     FT_UPDATE,
     FrameDecoder,
+    FrameError,
+    ProtocolError,
+    RetryExhausted,
+    RetryPolicy,
+    TornConnectionError,
     TransportError,
+    TransportTimeout,
+    call_with_retries,
     decode_update,
     encode_update,
     pack_frame,
@@ -115,8 +124,209 @@ def test_torn_connection_raises_on_close():
 
 
 # --------------------------------------------------------------------------
+# Adversarial decoder inputs.
+# --------------------------------------------------------------------------
+
+
+def test_payload_cap_boundary_exact():
+    """A payload of exactly max_payload_bytes must parse; ONE byte more must
+    be rejected at header time (never wait for a body the cap forbids)."""
+    cap = 1024
+    ok = pack_frame(FT_UPDATE, b"p" * cap)
+    dec = FrameDecoder(max_payload_bytes=cap)
+    frames = dec.feed(ok)
+    assert len(frames) == 1 and len(frames[0].payload) == cap
+
+    over = _FRAME.pack(TRANSPORT_MAGIC, FT_UPDATE, 0, 0, cap + 1)
+    with pytest.raises(FrameError, match="exceeds cap"):
+        FrameDecoder(max_payload_bytes=cap).feed(over)
+    # rejection happens with ONLY the header in hand — no body was needed
+    dec3 = FrameDecoder(max_payload_bytes=cap)
+    with pytest.raises(FrameError, match="exceeds cap"):
+        dec3.feed(over[:_FRAME.size])
+
+
+def test_feed_after_close_is_frame_error():
+    dec = FrameDecoder()
+    dec.feed(pack_frame(FT_DONE))
+    dec.close()                      # clean close at a frame boundary
+    with pytest.raises(FrameError, match="after close"):
+        dec.feed(b"x")
+    # a decoder that DIED mid-frame is closed too — feeding it is an error,
+    # not a resurrection
+    torn = FrameDecoder()
+    frame = pack_frame(FT_UPDATE, b"z" * 64)
+    torn.feed(frame[:10])
+    with pytest.raises(TransportError, match="mid-frame"):
+        torn.close()
+    with pytest.raises(FrameError, match="after close"):
+        torn.feed(frame[10:])
+
+
+def test_byte_at_a_time_slow_sender_inmemory():
+    """Three frames delivered one byte per feed(): every frame must pop out
+    exactly once, bytes_in must count every byte, and no call may raise."""
+    wire = (pack_frame(FT_HELLO, meta={"client_id": 1})
+            + pack_frame(FT_UPDATE, b"u" * 257, {"weight": 2.0})
+            + pack_frame(FT_DONE))
+    dec = FrameDecoder()
+    frames = []
+    for i in range(len(wire)):
+        frames.extend(dec.feed(wire[i:i + 1]))
+    dec.close()
+    assert [f.ftype for f in frames] == [FT_HELLO, FT_UPDATE, FT_DONE]
+    assert frames[1].payload == b"u" * 257
+    assert dec.bytes_in == len(wire)
+
+
+def test_take_buffer_hands_off_partial_tail():
+    """take_buffer() must return exactly the undecoded tail, leave the
+    decoder clean (close() no longer raises), and keep bytes_in counting —
+    the resume path moves these bytes into the session decoder."""
+    f1 = pack_frame(FT_HELLO, meta={"client_id": 3})
+    f2 = pack_frame(FT_UPDATE, b"y" * 128, {"weight": 1.0})
+    cut = len(f2) // 2
+    dec = FrameDecoder()
+    frames = dec.feed(f1 + f2[:cut])
+    assert [f.ftype for f in frames] == [FT_HELLO]
+    tail = dec.take_buffer()
+    assert tail == f2[:cut]
+    assert dec.pending_bytes == 0
+    assert dec.bytes_in == len(f1) + cut      # they WERE read off the socket
+    dec.close()                               # clean: tail was handed off
+    session = FrameDecoder()
+    got = session.feed(tail) + session.feed(f2[cut:])
+    assert len(got) == 1 and got[0].payload == b"y" * 128
+    assert session.bytes_in == len(f2)
+
+
+# --------------------------------------------------------------------------
+# Failure taxonomy & retry policy.
+# --------------------------------------------------------------------------
+
+
+def test_taxonomy_is_rooted_at_transport_error():
+    for exc in (FrameError, TornConnectionError, TransportTimeout,
+                ProtocolError, RetryExhausted):
+        assert issubclass(exc, TransportError)
+    # timeouts stay catchable through the stdlib hierarchy too
+    assert issubclass(TransportTimeout, TimeoutError)
+    with pytest.raises(TimeoutError):
+        raise TransportTimeout("late")
+
+
+def test_backoff_grows_exponentially_and_caps():
+    p = RetryPolicy(base_backoff_s=0.1, backoff_factor=2.0,
+                    max_backoff_s=0.5, jitter_frac=0.0)
+    assert [p.backoff_s(i) for i in range(4)] == [0.1, 0.2, 0.4, 0.5]
+    # seeded jitter: deterministic for a given rng, bounded by jitter_frac
+    pj = RetryPolicy(base_backoff_s=0.1, backoff_factor=2.0,
+                     max_backoff_s=10.0, jitter_frac=0.25)
+    a = pj.backoff_s(1, np.random.default_rng(7))
+    b = pj.backoff_s(1, np.random.default_rng(7))
+    assert a == b
+    assert 0.2 * 0.75 <= a <= 0.2 * 1.25
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+
+
+def test_call_with_retries_succeeds_after_transient_failures():
+    calls, slept = [], []
+
+    def fn(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise TornConnectionError("flaky link")
+        return "landed"
+
+    out = call_with_retries(fn, RetryPolicy(max_attempts=5, jitter_frac=0.0),
+                            sleep=slept.append)
+    assert out == "landed"
+    assert calls == [0, 1, 2]          # attempt index is passed in
+    assert len(slept) == 2             # backoff between attempts only
+
+
+def test_call_with_retries_fatal_propagates_immediately():
+    class Rejected(Exception):
+        pass
+
+    calls = []
+
+    def fn(attempt):
+        calls.append(attempt)
+        raise Rejected("unsupported proto")
+
+    with pytest.raises(Rejected):
+        call_with_retries(fn, RetryPolicy(max_attempts=5),
+                          fatal=(Rejected,), sleep=lambda s: None)
+    assert calls == [0]                # a rejection is never retried into
+
+
+def test_call_with_retries_exhaustion_chains_last_error():
+    def fn(attempt):
+        raise TornConnectionError(f"dead on attempt {attempt}")
+
+    with pytest.raises(RetryExhausted) as ei:
+        call_with_retries(fn, RetryPolicy(max_attempts=3, jitter_frac=0.0),
+                          sleep=lambda s: None)
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.__cause__, TornConnectionError)
+    assert "attempt 2" in str(ei.value.__cause__)
+
+
+# --------------------------------------------------------------------------
 # Real loopback sockets.
 # --------------------------------------------------------------------------
+
+
+def test_recv_frame_restores_prior_socket_timeout():
+    """timeout_s applies to ONE call — the socket's prior timeout must be
+    restored afterwards, on the success path AND the timeout path."""
+    a, b = socket.socketpair()
+    try:
+        b.settimeout(123.0)
+        a.sendall(pack_frame(FT_DONE))
+        frame = recv_frame(b, timeout_s=5.0)
+        assert frame.ftype == FT_DONE
+        assert b.gettimeout() == 123.0
+        with pytest.raises(TransportTimeout):
+            recv_frame(b, timeout_s=0.1)
+        assert b.gettimeout() == 123.0
+    finally:
+        a.close()
+        b.close()
+
+
+def test_loopback_slow_sender_byte_at_a_time():
+    """A sender dribbling one byte at a time over a real socket must still
+    deliver a complete frame to recv_frame (incremental reassembly), not a
+    timeout or a torn read."""
+    frame = pack_frame(FT_UPDATE, b"s" * 96, {"client_id": 9, "weight": 1.0})
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    port = srv.getsockname()[1]
+
+    def client():
+        with socket.create_connection(("127.0.0.1", port), timeout=10) as s:
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            for i in range(len(frame)):
+                s.sendall(frame[i:i + 1])
+                if i % 16 == 0:
+                    time.sleep(0.001)    # let recv() observe partial frames
+
+    t = threading.Thread(target=client)
+    t.start()
+    conn, _ = srv.accept()
+    try:
+        got = recv_frame(conn, timeout_s=30)
+    finally:
+        t.join(timeout=10)
+        conn.close()
+        srv.close()
+    assert got.ftype == FT_UPDATE
+    assert got.payload == b"s" * 96
+    assert got.meta["client_id"] == 9
 
 
 def test_loopback_roundtrip_with_byte_metering():
