@@ -1,0 +1,222 @@
+"""Attack × defense grid over the Byzantine-robust ingest layer.
+
+Each cell runs one in-process round: C seeded client updates (f of them
+from ``fed.attackers``), the ``fed.defense`` quarantine gate, then the
+configured ``fed.aggregator`` rule — and measures what the defense buys:
+
+  - divergence of the defended aggregate from the HONEST-ONLY weighted
+    mean (relative L2 over the flattened tree; -1 when the aggregate
+    went non-finite, which is what an undefended nan_poison produces);
+  - quarantine precision/recall against the known attacker set;
+  - aggregation wall time (gate + rule).
+
+The "none" attack row doubles as the bit-exactness witness: gate+mean
+over an all-honest cohort must reproduce the honest mean with divergence
+exactly 0.0. A nan_poison row must quarantine every attacker (recall 1.0)
+under every gate defense — both are asserted, not just recorded.
+
+The vote-kernel section races ``kernels.vote.packed_vote_counts`` against
+``kernels.aggregate.packed_weighted_sum`` on identical stacked packed
+buffers at C ∈ {16, 64} — the cost of counting two vote planes instead of
+one weighted sum, straight off the same bytes.
+
+Rows (name, us_per_call, derived):
+  robust_<attack>_<defense>   agg wall µs, derived = divergence
+  vote_kernel_c<C>            vote µs/call, derived = vote_time/mean_time
+
+``BENCH_robust.json`` (repo root) records the full grid; its ``*_s`` keys
+are gated by ``benchmarks/check_regression.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_robust.json")
+
+SEED = 23
+N_CLIENTS = 16
+N_ATTACKERS = 5          # f < C/2: the majority rule's operating regime
+
+ATTACKS = ("none", "sign_flip", "scale_blowup", "gaussian", "nan_poison",
+           "collude")
+DEFENSES = ("off", "gate_mean", "gate_majority", "gate_trimmed")
+SMOKE_ATTACKS = ("none", "sign_flip", "nan_poison")
+
+
+def _defense_cfg(name: str):
+    from repro.fed.defense import DefenseConfig
+
+    if name == "off":
+        return None
+    rule = {"gate_mean": "mean", "gate_majority": "majority",
+            "gate_trimmed": "trimmed_mean"}[name]
+    # min_history=2: the scale-bound check goes live inside a 16-client
+    # round instead of staying observe-only for most of it.
+    return DefenseConfig(enabled=True, rule=rule, min_history=2)
+
+
+def _tree_l2(tree) -> float:
+    import jax
+
+    sq = 0.0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf, dtype=np.float64)
+        sq += float(np.sum(arr * arr))
+    return float(np.sqrt(sq))
+
+
+def _tree_div(a, b) -> float:
+    """Relative L2 divergence ‖a−b‖/‖b‖; -1 when non-finite."""
+    import jax
+
+    diff = jax.tree_util.tree_map(
+        lambda x, y: np.asarray(x, np.float64) - np.asarray(y, np.float64),
+        a, b,
+    )
+    d = _tree_l2(diff) / max(_tree_l2(b), 1e-30)
+    return float(d) if np.isfinite(d) else -1.0
+
+
+def _round_blobs(params, attack_kind: str):
+    """C client blobs + the attacker id set + per-client weights."""
+    from repro.fed.attackers import AttackConfig, attacker_ids, poison_blob
+    from repro.fed.mp_server import client_update_blob
+
+    weights = [1.0 + (cid % 3) for cid in range(N_CLIENTS)]
+    blobs = [client_update_blob(params, cid, SEED) for cid in range(N_CLIENTS)]
+    if attack_kind == "none":
+        return blobs, frozenset(), weights
+    atk = AttackConfig(kind=attack_kind, n_attackers=N_ATTACKERS, seed=SEED)
+    ids = attacker_ids(atk, N_CLIENTS)
+    blobs = [poison_blob(b, atk, cid) if cid in ids else b
+             for cid, b in enumerate(blobs)]
+    return blobs, ids, weights
+
+
+def _cell(params, blobs, attackers, weights, defense):
+    """One grid cell: gate + rule aggregation; returns (record, wall_s)."""
+    from repro.fed.aggregator import Aggregator
+    from repro.fed.defense import UpdateGate
+
+    rule = defense.rule if defense is not None else "mean"
+    trim = defense.trim_frac if defense is not None else 0.2
+    t0 = time.perf_counter()
+    gate = UpdateGate(defense, params) if defense is not None else None
+    agg = Aggregator(chunk_c=16, rule=rule, trim_frac=trim)
+    quarantined: set[int] = set()
+    for cid, blob in enumerate(blobs):
+        if gate is not None and not gate.check(blob).ok:
+            quarantined.add(cid)
+            agg.note_quarantined(len(blob))
+            continue
+        agg.add(blob, weight=weights[cid])
+    out = agg.finalize() if agg.n_clients else None
+    wall = time.perf_counter() - t0
+
+    tp = len(quarantined & attackers)
+    precision = tp / len(quarantined) if quarantined else 1.0
+    recall = tp / len(attackers) if attackers else 1.0
+    rec = {
+        "agg_wall_s": wall,
+        "quarantined": sorted(quarantined),
+        "precision": round(precision, 4),
+        "recall": round(recall, 4),
+        "reasons": dict(gate.reasons) if gate is not None else {},
+    }
+    return out, rec
+
+
+def robust_grid():
+    from benchmarks.common import SMOKE
+    from repro.fed.aggregator import Aggregator
+    from repro.fed.mp_server import demo_params
+
+    params = demo_params(seed=SEED)
+    attacks = SMOKE_ATTACKS if SMOKE else ATTACKS
+    rows = []
+    record = {
+        "smoke": SMOKE,
+        "n_clients": N_CLIENTS,
+        "n_attackers": N_ATTACKERS,
+        "seed": SEED,
+        "grid": {},
+    }
+    for attack in attacks:
+        blobs, attackers, weights = _round_blobs(params, attack)
+        # honest-only reference: the weighted mean over the clients that
+        # SHOULD survive — what a perfect defense would compute with "mean".
+        ref_agg = Aggregator(chunk_c=16)
+        for cid, blob in enumerate(blobs):
+            if cid not in attackers:
+                ref_agg.add(blob, weight=weights[cid])
+        honest_ref = ref_agg.finalize()
+
+        record["grid"][attack] = {}
+        for dname in DEFENSES:
+            out, rec = _cell(params, blobs, attackers, weights,
+                             _defense_cfg(dname))
+            div = _tree_div(out, honest_ref) if out is not None else -1.0
+            rec["divergence"] = round(div, 6) if div >= 0 else -1.0
+            record["grid"][attack][dname] = rec
+            rows.append((f"robust_{attack}_{dname}",
+                         round(rec["agg_wall_s"] * 1e6, 1),
+                         rec["divergence"]))
+            if attack == "none" and dname == "gate_mean":
+                # defense-on-honest is BIT-EXACT vs the plain mean
+                assert div == 0.0, f"honest gate_mean diverged: {div}"
+            if attack == "nan_poison" and dname != "off":
+                assert rec["recall"] == 1.0, (
+                    f"nan_poison leaked past the gate: {rec}"
+                )
+
+    rows.extend(_vote_kernel_rows(record))
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    return rows
+
+
+def _vote_kernel_rows(record: dict):
+    from benchmarks.common import SMOKE
+    from repro.kernels.aggregate import BLOCK_ROWS, LANES
+    from repro.parallel.fanin import fanin_vote_counts, fanin_weighted_sum
+
+    reps = 3 if SMOKE else 30
+    r = 32 * BLOCK_ROWS
+    rng = np.random.default_rng(SEED)
+    rows = []
+    record["vote_kernel"] = {}
+    for c in (16, 64):
+        # valid 2-bit code planes only (codes 0..2, never the reserved 3)
+        codes = rng.integers(0, 3, size=(c, r * LANES, 4), dtype=np.uint8)
+        stacked = (codes[..., 0] | (codes[..., 1] << 2) | (codes[..., 2] << 4)
+                   | (codes[..., 3] << 6)).reshape(c, r, LANES)
+        coeffs = rng.uniform(1.0, 3.0, size=c).astype(np.float32)
+
+        def timed(fn):
+            fn(stacked, coeffs).block_until_ready()     # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn(stacked, coeffs).block_until_ready()
+            return (time.perf_counter() - t0) / reps
+
+        t_vote = timed(fanin_vote_counts)
+        t_mean = timed(fanin_weighted_sum)
+        gb = stacked.nbytes / 1e9
+        record["vote_kernel"][f"c{c}"] = {
+            "bytes_in": int(stacked.nbytes),
+            "vote_us": round(t_vote * 1e6, 1),
+            "mean_us": round(t_mean * 1e6, 1),
+            "vote_gb_per_s": round(gb / t_vote, 3),
+            "mean_gb_per_s": round(gb / t_mean, 3),
+            "vote_vs_mean": round(t_vote / t_mean, 3),
+        }
+        rows.append((f"vote_kernel_c{c}", round(t_vote * 1e6, 1),
+                     round(t_vote / t_mean, 3)))
+    return rows

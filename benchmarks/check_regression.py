@@ -2,7 +2,8 @@
 
 Compares the smoke-mode bench records the CI job just produced
 (``BENCH_aggregate.json`` / ``BENCH_encode.json`` /
-``BENCH_hierarchy.json`` / ``BENCH_serve.json`` / ``BENCH_chaos.json`` in
+``BENCH_hierarchy.json`` / ``BENCH_serve.json`` / ``BENCH_chaos.json`` /
+``BENCH_robust.json`` in
 the repo root) against the committed baselines in ``benchmarks/baselines/``
 and fails on a >THRESHOLD× slowdown of any timing metric (keys ending in
 ``_s``), or on a metric that silently disappeared from the record.
@@ -31,7 +32,8 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
 RECORDS = ("BENCH_aggregate.json", "BENCH_encode.json",
-           "BENCH_hierarchy.json", "BENCH_serve.json", "BENCH_chaos.json")
+           "BENCH_hierarchy.json", "BENCH_serve.json", "BENCH_chaos.json",
+           "BENCH_robust.json")
 THRESHOLD = 2.0
 # Sub-5ms timings are runner-speed lottery (a dev-machine baseline vs a CI
 # runner can legitimately differ >2x at the 100µs scale); the structural

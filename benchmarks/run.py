@@ -22,7 +22,8 @@ pin_runtime()
 
 from benchmarks import (  # noqa: E402
     bench_aggregate, bench_chaos, bench_encode, bench_hierarchy,
-    bench_kernels, bench_serve, bench_tables, bench_wire, roofline,
+    bench_kernels, bench_robust, bench_serve, bench_tables, bench_wire,
+    roofline,
 )
 
 SECTIONS = {
@@ -34,6 +35,7 @@ SECTIONS = {
     "hierarchy": bench_hierarchy.fleet_scaling,
     "serve": bench_serve.serve_under_load,
     "chaos": bench_chaos.chaos_sweep,
+    "robust": bench_robust.robust_grid,
     "kernel_peak": roofline.kernel_peak_table,
     "table2": bench_tables.table2_iid_accuracy,
     "table3": bench_tables.table3_noniid,

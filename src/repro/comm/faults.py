@@ -73,6 +73,16 @@ class FaultConfig:
     ``bad_proto_clients`` announce an unsupported protocol version and get
     rejected. Both make the corresponding outcome taxonomy entries
     (``crashed`` / ``rejected``) deterministically reachable in tests.
+
+    ``corrupt_clients`` turns the proxy into a Byzantine man-in-the-middle
+    for those client ids: their UPDATE frames are decoded in-path, the wire
+    payload is poisoned with the seeded ``corrupt_kind`` attacker model
+    (``fed.attackers``), the wire CRC is recomputed by the re-encode, and
+    the frame is re-packed — so the poisoned traffic is WIRE-VALID and
+    sails past every byte-level defense; only the content gate or a robust
+    aggregation rule can stop it. Corrupted clients bypass the byte-offset
+    chunk schedule (frames must arrive whole to be poisoned), so corruption
+    and kill/delay weather are mutually exclusive per client by design.
     """
 
     seed: int = 0
@@ -89,6 +99,9 @@ class FaultConfig:
     crash_clients: tuple = ()
     crash_after_frac: float = 0.5
     bad_proto_clients: tuple = ()
+    corrupt_clients: tuple = ()
+    corrupt_kind: str = "sign_flip"
+    corrupt_seed: int = 0
 
     def __post_init__(self):
         for name in ("ge_p_good_bad", "ge_p_bad_good", "fault_good",
@@ -98,6 +111,14 @@ class FaultConfig:
                 raise ValueError(f"{name} must be in [0, 1], got {v}")
         if self.chunk_bytes < 1:
             raise ValueError(f"chunk_bytes must be ≥ 1, got {self.chunk_bytes}")
+        if self.corrupt_clients:
+            from repro.fed.attackers import ATTACKS  # lazy: fed layer
+
+            if self.corrupt_kind not in ATTACKS:
+                raise ValueError(
+                    f"corrupt_kind must be one of {ATTACKS}, "
+                    f"got {self.corrupt_kind!r}"
+                )
 
     @property
     def disabled(self) -> bool:
@@ -214,7 +235,7 @@ class ChaosProxy:
         self.stats = {
             "connections": 0, "refused": 0, "killed": 0,
             "delayed_chunks": 0, "delay_s": 0.0,
-            "bytes_up": 0, "bytes_down": 0,
+            "bytes_up": 0, "bytes_down": 0, "corrupted_frames": 0,
         }
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -310,7 +331,11 @@ class ChaosProxy:
                 target=self._pump_down, args=(up, conn, killed), daemon=True
             )
             down.start()
-            self._pump_up(conn, up, sched, bytes(raw), killed)
+            cid = int(meta.get("client_id", -1))
+            if cid in self.cfg.corrupt_clients:
+                self._pump_up_corrupt(conn, up, cid, bytes(raw), killed)
+            else:
+                self._pump_up(conn, up, sched, bytes(raw), killed)
             down.join(timeout=30)
         except (TransportError, OSError):
             abort_socket(conn)
@@ -383,6 +408,52 @@ class ChaosProxy:
                     pass
                 return
             pending += chunk
+
+    def _pump_up_corrupt(self, conn: socket.socket, up: socket.socket,
+                         cid: int, first: bytes,
+                         killed: threading.Event) -> None:
+        """Client→server for a Byzantine-proxied client: every frame is
+        reassembled, UPDATE payloads are poisoned with the seeded attacker
+        model and re-encoded (fresh wire CRC), and the frame is re-packed —
+        the server sees a perfectly well-formed, content-poisoned stream."""
+        from repro.comm.transport import FT_UPDATE, pack_frame
+        from repro.fed.attackers import AttackConfig, poison_blob  # lazy: fed
+
+        acfg = AttackConfig(kind=self.cfg.corrupt_kind, n_attackers=1,
+                            seed=self.cfg.corrupt_seed)
+        dec = FrameDecoder()
+        conn.settimeout(0.25)   # short poll: must notice killed/stop fast
+
+        def emit(chunk: bytes) -> None:
+            for frame in dec.feed(chunk):
+                if frame.ftype == FT_UPDATE:
+                    payload = poison_blob(frame.payload, acfg, cid)
+                    self._count("corrupted_frames")
+                else:
+                    payload = frame.payload
+                out = pack_frame(frame.ftype, payload, frame.meta)
+                self._forward(up, out)
+                self._count("bytes_up", len(out))
+
+        try:
+            emit(first)
+            while not killed.is_set() and not self._stop.is_set():
+                try:
+                    chunk = conn.recv(1 << 16)
+                except socket.timeout:
+                    continue
+                except OSError:
+                    return
+                if not chunk:
+                    try:             # forward the client's half-close
+                        up.shutdown(socket.SHUT_WR)
+                    except OSError:
+                        pass
+                    return
+                emit(chunk)
+        except (TransportError, OSError):
+            abort_socket(up)
+            abort_socket(conn)
 
     def _pump_down(self, up: socket.socket, conn: socket.socket,
                    killed: threading.Event) -> None:

@@ -807,6 +807,18 @@ def decode_update_leaves(
         raise WireError(f"malformed wire buffer: {e}") from e
 
 
+def tree_leaf_paths(tree: Pytree) -> list[tuple[str, Any]]:
+    """Flatten a pytree to (wire path, leaf) pairs — the exact path strings
+    ``encode_update`` stamps on records, so a decoded update's record paths
+    can be structure-checked against a reference tree without re-encoding
+    it (the defense gate's treedef match)."""
+    lt = _leaf_types()
+    leaves = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, lt)
+    )[0]
+    return [(_PATH_SEP.join(_path_entries(p)), leaf) for p, leaf in leaves]
+
+
 def tree_from_records(pairs: list[tuple[str, Any]]) -> Pytree:
     """Rebuild the pytree from (path, leaf) record pairs (the inverse of the
     flatten ``encode_update`` performed; same container normalization as

@@ -4,7 +4,8 @@ model (``repro.comm``) with channel-emergent straggler mitigation — plus an
 event-driven buffered-asynchronous server (FedBuf-style). ``run_federated``
 is the unified entry point; ``cfg.mode`` picks "sync" or "async"."""
 
-from repro.fed.aggregator import Aggregator
+from repro.fed.aggregator import AGG_RULES, Aggregator
+from repro.fed.attackers import ATTACKS, AttackConfig, attacker_ids, poison_blob
 from repro.fed.availability import (
     AlwaysOn,
     AvailabilityConfig,
@@ -14,6 +15,7 @@ from repro.fed.availability import (
     make_availability,
 )
 from repro.fed.async_server import run_federated_async
+from repro.fed.defense import DefenseConfig, UpdateGate, Verdict
 from repro.fed.fleet import EventHeap, FleetConfig, FleetResult, run_fleet
 from repro.fed.mp_server import (
     SocketRoundResult,
@@ -36,4 +38,6 @@ __all__ = [
     "HierarchyConfig", "EdgeTier", "edge_of", "edges_of",
     "FleetConfig", "FleetResult", "EventHeap", "run_fleet",
     "SocketRoundResult", "run_socket_round", "run_inprocess_reference",
+    "AGG_RULES", "ATTACKS", "AttackConfig", "attacker_ids", "poison_blob",
+    "DefenseConfig", "UpdateGate", "Verdict",
 ]

@@ -30,6 +30,22 @@ Why this is the fan-in artery:
 Equivalence: Σ w_c·(s_c·codes_c) is computed as Σ (w_c·s_c)·codes_c in fp32
 — bit-order differs from the reference's per-client dequant-then-sum, so
 parity is within ~1e-6·C, not bit-exact (``tests/test_aggregate.py``).
+
+Robust rules (``rule=`` ctor arg; "mean" is the default and bit-identical
+to the pre-rule aggregator):
+  - "majority": ternary leaves are decided coordinate-wise by weighted
+    plurality over the 2-bit codes — ``kernels.vote`` counts ±1 vote
+    masses straight off the same stacked byte buffers (scales NOT folded:
+    a vote is scale-free), partial counts accumulate across chunk flushes,
+    and ``finalize`` multiplies the winner codes by a per-segment robust
+    scale (the weighted MEDIAN of the client scales, so a scale-poisoning
+    minority cannot move it). Non-ternary leaves take the coordinate-wise
+    weighted median.
+  - "trimmed_mean" / "median": every leaf is decoded dense and kept
+    per-client (O(C·model) memory — exact order statistics need the full
+    sample; these rules are for moderate C), then reduced coordinate-wise.
+A sign-flipping / noise-injecting minority with under half the total vote
+weight cannot move any majority-voted coordinate (``tests/test_robust.py``).
 """
 
 from __future__ import annotations
@@ -44,9 +60,49 @@ from repro.comm.wire import decode_update_leaves, tree_from_records
 from repro.core.compression import decode_wire_leaf
 from repro.core.ternary import TernaryTensor
 from repro.kernels.aggregate import BLOCK_ROWS, LANES, padded_rows
-from repro.parallel.fanin import fanin_weighted_sum
+from repro.kernels.vote import majority_from_counts
+from repro.parallel.fanin import fanin_vote_counts, fanin_weighted_sum
 
 Pytree = Any
+
+# Aggregation rules; "mean" is the legacy bit-exact weighted mean, the rest
+# are the Byzantine-robust statistics (see module docstring).
+AGG_RULES = ("mean", "majority", "trimmed_mean", "median")
+
+
+def weighted_median(stack: np.ndarray, weights: np.ndarray) -> np.ndarray:
+    """Coordinate-wise weighted median along axis 0 (lower median: the
+    first sorted value whose cumulative weight reaches half the total)."""
+    order = np.argsort(stack, axis=0, kind="stable")
+    svals = np.take_along_axis(stack, order, axis=0)
+    sw = np.take_along_axis(
+        np.broadcast_to(
+            weights.reshape((-1,) + (1,) * (stack.ndim - 1)), stack.shape
+        ), order, axis=0,
+    )
+    cum = np.cumsum(sw, axis=0)
+    idx = np.argmax(cum >= cum[-1] / 2.0, axis=0)
+    return np.take_along_axis(svals, idx[None], axis=0)[0]
+
+
+def trimmed_mean(stack: np.ndarray, weights: np.ndarray,
+                 trim_frac: float) -> np.ndarray:
+    """Coordinate-wise trimmed weighted mean along axis 0: sort values,
+    drop ⌊trim_frac·C⌋ per side (clamped so at least one survives), then
+    the weighted mean of the survivors — the classic defense against a
+    tail-dwelling minority."""
+    c = stack.shape[0]
+    k = min(int(trim_frac * c), (c - 1) // 2)
+    order = np.argsort(stack, axis=0, kind="stable")
+    svals = np.take_along_axis(stack, order, axis=0)
+    sw = np.take_along_axis(
+        np.broadcast_to(
+            weights.reshape((-1,) + (1,) * (stack.ndim - 1)), stack.shape
+        ), order, axis=0,
+    )
+    if k:
+        svals, sw = svals[k:c - k], sw[k:c - k]
+    return (svals * sw).sum(axis=0) / sw.sum(axis=0)
 
 
 def bucket_for(c: int, chunk_c: int) -> int:
@@ -71,6 +127,11 @@ class _Group:
     views: list = dataclasses.field(default_factory=list)   # np byte views
     coeffs: list = dataclasses.field(default_factory=list)  # weight · scale
     partial: Any = None          # running fp32 flat sum (jax array)
+    # majority-rule state: running (2, 4R·LANES) ±1 vote masses, plus every
+    # client's (scale, weight) sample for the finalize-time robust scale
+    # (persists across flushes — the median needs the full sample).
+    counts: Any = None
+    scale_samples: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -103,13 +164,24 @@ class Aggregator:
     """
 
     def __init__(self, chunk_c: int = 16, *, mesh=None,
-                 block_rows: int = BLOCK_ROWS, interpret: bool | None = None):
+                 block_rows: int = BLOCK_ROWS, interpret: bool | None = None,
+                 rule: str = "mean", trim_frac: float = 0.2):
         if chunk_c < 1:
             raise ValueError(f"chunk_c must be ≥ 1, got {chunk_c}")
+        if rule not in AGG_RULES:
+            raise ValueError(f"rule must be one of {AGG_RULES}, got {rule!r}")
+        if not 0.0 <= trim_frac < 0.5:
+            raise ValueError(f"trim_frac must be in [0, 0.5), got {trim_frac}")
         self.chunk_c = chunk_c
         self.mesh = mesh
         self.block_rows = block_rows
         self.interpret = interpret
+        self.rule = rule
+        self.trim_frac = trim_frac
+        # exact order statistics need every client's dense leaf — these two
+        # rules bypass the fused plan entirely (O(C·model) memory).
+        self._dense_rule = rule in ("trimmed_mean", "median")
+        self._client_dense: dict[str, list] = {}  # path → [(weight, f32 leaf)]
         self._paths: list[str] | None = None   # record order of client 0
         self._plans: dict[str, _LeafPlan] = {}
         self._groups: dict[tuple[str, int], _Group] = {}
@@ -125,6 +197,11 @@ class Aggregator:
         # resets — it is run-level waste accounting, not per-mix state.
         self.dropped_updates = 0
         self.dropped_bytes = 0
+        # quarantine ledger: updates the defense gate refused — received and
+        # paid for, but content-poisoned. Third ledger bucket; cumulative
+        # across resets like the drop counters.
+        self.quarantined_updates = 0
+        self.quarantined_bytes = 0
 
     # -- ingest ------------------------------------------------------------
 
@@ -134,6 +211,13 @@ class Aggregator:
         the mean. Feeds the scenario telemetry's waste accounting."""
         self.dropped_updates += 1
         self.dropped_bytes += int(nbytes)
+
+    def note_quarantined(self, nbytes: int) -> None:
+        """Record one gate-refused update: wire bytes spent, content judged
+        poisoned, weights never enter the aggregate. Extends the ledger
+        invariant to shipped == ingested + dropped + quarantined."""
+        self.quarantined_updates += 1
+        self.quarantined_bytes += int(nbytes)
 
     def add(self, blob: bytes, weight: float) -> None:
         """Decode one client's wire buffer (zero-copy) and buffer/accumulate
@@ -168,6 +252,11 @@ class Aggregator:
             self._flush()
 
     def _plan_leaf(self, path: str, leaf) -> None:
+        if self._dense_rule:
+            # trimmed_mean / median: every leaf keeps per-client dense
+            # copies; the fused plan never engages.
+            self._plans[path] = _LeafPlan(fused=False)
+            return
         if isinstance(leaf, TernaryTensor):
             shape = tuple(int(s) for s in leaf.shape)
             n = leaf.n_elements
@@ -208,18 +297,34 @@ class Aggregator:
             for s in range(plan.n_segments):
                 g = self._groups[(path, s)]
                 g.views.append(packed[s * g.nbytes:(s + 1) * g.nbytes])
-                g.coeffs.append(weight * float(scale[s if scale.size > 1 else 0]))
+                if self.rule == "majority":
+                    # votes are scale-free: the kernel coefficient is the
+                    # raw weight; the scale joins at finalize as a weighted
+                    # median over these samples.
+                    g.coeffs.append(weight)
+                    g.scale_samples.append(
+                        (float(scale[s if scale.size > 1 else 0]), weight)
+                    )
+                else:
+                    g.coeffs.append(weight * float(scale[s if scale.size > 1 else 0]))
         else:
             dense = np.asarray(decode_wire_leaf(leaf))
-            if path not in self._fallback:
-                self._fallback[path] = np.zeros(dense.shape, np.float32)
+            if path not in self._fallback_dtype:
                 # reference promotion: float leaves keep their dtype under a
                 # python-float weight, int leaves promote to float32.
                 self._fallback_dtype[path] = (
                     dense.dtype if jnp.issubdtype(dense.dtype, jnp.floating)
                     else np.dtype(np.float32)
                 )
-            self._fallback[path] += weight * dense.astype(np.float32)
+            if self.rule == "mean":
+                if path not in self._fallback:
+                    self._fallback[path] = np.zeros(dense.shape, np.float32)
+                self._fallback[path] += weight * dense.astype(np.float32)
+            else:
+                # robust order statistics need the whole per-client sample.
+                self._client_dense.setdefault(path, []).append(
+                    (weight, dense.astype(np.float32))
+                )
 
     # -- kernel launches ---------------------------------------------------
 
@@ -249,17 +354,28 @@ class Aggregator:
         buf[c:] = 0
         coeffs = np.zeros((c_pad,), np.float32)
         coeffs[:c] = g.coeffs
-        out = fanin_weighted_sum(
-            buf.reshape(c_pad, g.rows, LANES), coeffs,
-            mesh=self.mesh, block_rows=self.block_rows,
-            interpret=self.interpret,
-        )
-        # the device_put of the staging buffer may be ZERO-COPY (CPU backend
-        # aliases aligned numpy memory) and the launch is async — block
-        # before the buffer is refilled for the next group/chunk, or the
-        # in-flight kernel would read torn bytes.
-        out.block_until_ready()
-        g.partial = out if g.partial is None else g.partial + out
+        stacked = buf.reshape(c_pad, g.rows, LANES)
+        if self.rule == "majority":
+            # a zero-padding BYTE is four code-0 slots (−1 votes); the
+            # zeroed coefficient rows cancel them exactly as in the mean
+            # path, and real clients' tail padding lands past n_elements.
+            out = fanin_vote_counts(
+                stacked, coeffs, mesh=self.mesh,
+                block_rows=self.block_rows, interpret=self.interpret,
+            )
+            out.block_until_ready()
+            g.counts = out if g.counts is None else g.counts + out
+        else:
+            out = fanin_weighted_sum(
+                stacked, coeffs, mesh=self.mesh, block_rows=self.block_rows,
+                interpret=self.interpret,
+            )
+            # the device_put of the staging buffer may be ZERO-COPY (CPU
+            # backend aliases aligned numpy memory) and the launch is async
+            # — block before the buffer is refilled for the next
+            # group/chunk, or the in-flight kernel would read torn bytes.
+            out.block_until_ready()
+            g.partial = out if g.partial is None else g.partial + out
         g.views.clear()
         g.coeffs.clear()
 
@@ -279,8 +395,12 @@ class Aggregator:
             g.views.clear()
             g.coeffs.clear()
             g.partial = None
+            g.counts = None
+            g.scale_samples.clear()
         for acc in self._fallback.values():
             acc.fill(0.0)
+        for samples in self._client_dense.values():
+            samples.clear()
         self._pending = 0
         self._n_clients = 0
         self._total_weight = 0.0
@@ -299,7 +419,19 @@ class Aggregator:
         pairs = []
         for path in self._paths:
             plan = self._plans[path]
-            if plan.fused:
+            if plan.fused and self.rule == "majority":
+                parts = []
+                for s in range(plan.n_segments):
+                    g = self._groups[(path, s)]
+                    counts = np.asarray(g.counts)[:, : g.n_elements]
+                    votes = majority_from_counts(counts, self._total_weight)
+                    vals = np.array([v for v, _ in g.scale_samples], np.float32)
+                    ws = np.array([w for _, w in g.scale_samples], np.float32)
+                    robust_scale = weighted_median(vals, ws)
+                    parts.append(votes.astype(np.float32) * np.float32(robust_scale))
+                flat = parts[0] if len(parts) == 1 else np.concatenate(parts)
+                leaf = jnp.asarray(flat.reshape(plan.shape)).astype(plan.dtype)
+            elif plan.fused:
                 parts = [
                     self._groups[(path, s)].partial
                     [: self._groups[(path, s)].n_elements]
@@ -307,8 +439,17 @@ class Aggregator:
                 ]
                 flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
                 leaf = (flat * inv).reshape(plan.shape).astype(plan.dtype)
-            else:
+            elif self.rule == "mean":
                 acc = self._fallback[path] * np.float32(inv)
+                leaf = jnp.asarray(acc).astype(self._fallback_dtype[path])
+            else:
+                samples = self._client_dense[path]
+                stack = np.stack([d for _, d in samples])
+                ws = np.array([w for w, _ in samples], np.float32)
+                if self.rule == "trimmed_mean":
+                    acc = trimmed_mean(stack, ws, self.trim_frac)
+                else:  # "median", and the majority rule's dense fallback
+                    acc = weighted_median(stack, ws)
                 leaf = jnp.asarray(acc).astype(self._fallback_dtype[path])
             pairs.append((path, leaf))
         out = tree_from_records(pairs)

@@ -65,7 +65,9 @@ from repro.comm import Channel
 from repro.comm.wire import decode_update
 from repro.data.federated import ClientDataset
 from repro.fed.aggregator import Aggregator
+from repro.fed.attackers import attacker_ids, poison_blob
 from repro.fed.availability import draw_one, draw_participants, make_availability
+from repro.fed.defense import UpdateGate
 from repro.fed.fleet import EventHeap
 from repro.fed.hierarchy import EdgeTier
 from repro.fed.simulation import (
@@ -75,6 +77,7 @@ from repro.fed.simulation import (
     broadcast_blob,
     dequantize_tree,
     receive_broadcast,
+    resolve_rule,
     train_client,
 )
 from repro.optim import Optimizer
@@ -152,16 +155,26 @@ def run_federated_async(
     # EXACT order the old (time, seq, ...) tuple heapq produced.
     events = EventHeap(capacity=max(2 * n_conc, 16))
     buffered: list = []           # (weight, wire blob) — reference path only
+    rule, trim_frac = resolve_rule(cfg)
     # hierarchical tier (when enabled): arrivals fan into regional edges,
     # each shipping one re-quantized record to the root per mix.
     tier = (EdgeTier(cfg.hierarchy, cfg.fttq, len(clients),
-                     fused_encode=cfg.fused_encode)
+                     fused_encode=cfg.fused_encode,
+                     rule=rule, trim_frac=trim_frac)
             if cfg.hierarchy.enabled else None)
     # ONE long-lived aggregator for the whole run: arrivals stream into it
     # as they land and `finalize(reset=True)` every buffer_k keeps its
     # staging buffers + leaf plans alive across mixes (ROADMAP item).
-    agg = (Aggregator(chunk_c=cfg.agg_chunk_c)
+    agg = (Aggregator(chunk_c=cfg.agg_chunk_c, rule=rule, trim_frac=trim_frac)
            if cfg.fused_aggregation and tier is None else None)
+    # Byzantine layer: seeded attacker cohort poisons at dispatch; the gate
+    # vets every arrival's CONTENT before it can enter the buffer. The gate
+    # is long-lived so its scale history warms across the whole run.
+    attackers = (attacker_ids(cfg.attack, len(clients))
+                 if cfg.attack is not None else frozenset())
+    gate = (UpdateGate(cfg.defense, global_params)
+            if cfg.defense is not None and cfg.defense.enabled else None)
+    arrived_bytes = 0             # client-hop bytes presented to the gate
     n_buffered = 0
     acc_hist, loss_hist = [], []
     agg_times, staleness_hist, parts_hist = [], [], []
@@ -200,6 +213,10 @@ def run_federated_async(
         up_blob = train_client(
             clients[k], start_params, cfg, optimizer, fp_step, qat_step, rng
         )
+        if k in attackers:
+            # poison at dispatch (wire-valid re-encode); colluding cohorts
+            # key their rng on the model version they trained from.
+            up_blob = poison_blob(up_blob, cfg.attack, k, round_idx=version)
         t_down = channel.transfer(k, len(blob), "down")
         t_comp = channel.compute_time(k, len(clients[k]) * cfg.local_epochs)
         # async uploads share the server NIC: the upload's absolute start
@@ -241,13 +258,21 @@ def run_federated_async(
             raise RuntimeError("async server starved: no in-flight clients")
         now, _, (k, up_blob, born) = events.pop()
         up_bytes += len(up_blob)
+        arrived_bytes += len(up_blob)
         staleness = version - born
-        staleness_hist.append(staleness)
         gap = now - last_arrival
         last_arrival = now
         ewma_gap = gap if ewma_gap is None else 0.8 * ewma_gap + 0.2 * gap
 
-        if staleness > max_stale and cfg.staleness_policy == "drop":
+        if gate is not None and not gate.check(up_blob).ok:
+            # content-poisoned: quarantined BEFORE staleness/weighting —
+            # it never enters the buffer and never counts toward buffer_k.
+            if agg is not None:
+                agg.note_quarantined(len(up_blob))
+            elif tier is not None:
+                tier.note_quarantined(len(up_blob))
+        elif staleness > max_stale and cfg.staleness_policy == "drop":
+            staleness_hist.append(staleness)
             # the bytes were transferred and paid for; the update is waste.
             if agg is not None:
                 agg.note_dropped(len(up_blob))
@@ -255,6 +280,7 @@ def run_federated_async(
                 dropped_updates += 1
                 dropped_update_bytes += len(up_blob)
         else:
+            staleness_hist.append(staleness)
             weight = len(clients[k]) * (
                 (1.0 + staleness) ** (-cfg.staleness_exponent)
             )
@@ -327,6 +353,14 @@ def run_federated_async(
         "goodput_fraction": summary.get("goodput_fraction", 1.0),
         "availability": cfg.availability.kind,
     }
+    if gate is not None:
+        telemetry["defense"] = gate.telemetry()
+        # extended ledger on the client hop: every arrived byte either
+        # passed the gate (then ingested or staleness-dropped) or was
+        # quarantined — the three buckets partition the hop exactly.
+        telemetry["defense"]["ledger_balanced"] = (
+            arrived_bytes == gate.passed_bytes + gate.quarantined_bytes
+        )
     if tier is not None:
         telemetry["hierarchy"] = tier.telemetry()
     return FedResult(

@@ -1,0 +1,149 @@
+"""Seeded Byzantine attacker models, injected at the payload level.
+
+Each attacker transforms an HONEST encoded update blob into a poisoned but
+wire-valid one (decode → transform → re-encode, so framing, CRC, and the
+record grammar all hold — only the content gate or a robust aggregation
+rule can catch it). All randomness is keyed on ``(seed, client_id,
+round)`` so every attack run is reproducible byte-for-byte.
+
+Attack kinds and which defense layer catches them:
+
+  sign_flip      ternary codes negated (0↔2), float residuals negated —
+                 undetectable by the gate (a flipped update is a perfectly
+                 plausible one); defeated by majority vote when f < C/2.
+  scale_blowup   scales / float payloads × ``blowup`` — caught by the
+                 gate's running-median scale bound once history is warm.
+  gaussian       codes replaced by uniform random valid codes, residuals by
+                 matched-variance noise — gate-invisible; vote-diluted.
+  nan_poison     NaN scales + NaN float payloads — caught by the gate's
+                 finiteness checks, 100% of the time, from the first round.
+  collude        a cohort ships ONE identical sign-flipped payload (the rng
+                 is keyed on the round only, not the client) — maximizes
+                 the per-coordinate vote mass a fixed f can muster.
+
+Injection sites: ``fed/simulation.py`` / ``fed/fleet.py`` poison the
+payload after the honest client computes it; ``comm/faults.py`` re-frames
+poisoned bytes inside the ChaosProxy (the man-in-the-middle variant); the
+``fed/mp_server.py`` demo clients poison client-side before upload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.comm.wire import (
+    decode_update_leaves, encode_update, tree_from_records,
+)
+from repro.core.compression import DowncastTensor, TopKTensor
+from repro.core.ternary import TernaryTensor
+
+ATTACKS = ("sign_flip", "scale_blowup", "gaussian", "nan_poison", "collude")
+
+# byte → the byte with every 2-bit code c mapped to 2−c (value negation);
+# the reserved code 3 maps to itself (never present in honest payloads).
+_FLIP_LUT = np.array(
+    [sum((((2 - c) if (c := (b >> (2 * j)) & 0x3) < 3 else 3) << (2 * j))
+         for j in range(4))
+     for b in range(256)],
+    dtype=np.uint8,
+)
+
+# the 81 byte values whose four 2-bit fields are all valid codes {0,1,2}
+_VALID_BYTES = np.array(
+    [b for b in range(256)
+     if all(((b >> (2 * j)) & 0x3) != 3 for j in range(4))],
+    dtype=np.uint8,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    """Who attacks and how. ``n_attackers == 0`` (default) is all-honest."""
+
+    kind: str = "sign_flip"
+    n_attackers: int = 0
+    seed: int = 0
+    blowup: float = 1000.0
+
+    def __post_init__(self):
+        if self.kind not in ATTACKS:
+            raise ValueError(f"kind must be one of {ATTACKS}, got {self.kind!r}")
+        if self.n_attackers < 0:
+            raise ValueError("n_attackers must be >= 0")
+        if self.blowup <= 1.0:
+            raise ValueError("blowup must be > 1")
+
+
+def attacker_ids(cfg: AttackConfig, n_clients: int) -> frozenset[int]:
+    """The seeded attacker cohort — a deterministic f-subset of clients."""
+    f = min(cfg.n_attackers, n_clients)
+    if f == 0:
+        return frozenset()
+    rng = np.random.default_rng([cfg.seed, 0xBAD])
+    return frozenset(
+        int(i) for i in rng.choice(n_clients, size=f, replace=False)
+    )
+
+
+def _poison_leaf(leaf, kind: str, blowup: float, rng: np.random.Generator):
+    if isinstance(leaf, TernaryTensor):
+        packed = np.array(leaf.packed, dtype=np.uint8, copy=True)
+        w_q = np.array(leaf.w_q, copy=True)
+        if kind in ("sign_flip", "collude"):
+            packed = _FLIP_LUT[packed]
+        elif kind == "scale_blowup":
+            w_q = w_q * np.asarray(blowup, w_q.dtype)
+        elif kind == "gaussian":
+            packed = rng.choice(_VALID_BYTES, size=packed.shape)
+        elif kind == "nan_poison":
+            w_q = np.full_like(w_q, np.nan)
+        return TernaryTensor(packed=packed, w_q=w_q,
+                             shape=tuple(leaf.shape), dtype=leaf.dtype)
+    if isinstance(leaf, TopKTensor):
+        values = np.array(leaf.values, copy=True)
+        if np.issubdtype(values.dtype, np.floating):
+            values = _poison_float(values, kind, blowup, rng)
+        return TopKTensor(indices=np.asarray(leaf.indices), values=values,
+                          shape=tuple(leaf.shape), dtype=leaf.dtype)
+    if isinstance(leaf, DowncastTensor):
+        data = np.array(leaf.data, copy=True)
+        if np.issubdtype(data.dtype, np.floating):
+            data = _poison_float(data, kind, blowup, rng)
+        return DowncastTensor(data=data, orig_dtype=leaf.orig_dtype)
+    arr = np.asarray(leaf)
+    if np.issubdtype(arr.dtype, np.floating):
+        return _poison_float(np.array(arr, copy=True), kind, blowup, rng)
+    return arr  # integer leaves (step counters) ride through untouched
+
+
+def _poison_float(arr: np.ndarray, kind: str, blowup: float,
+                  rng: np.random.Generator) -> np.ndarray:
+    if kind in ("sign_flip", "collude"):
+        return -arr
+    if kind == "scale_blowup":
+        return arr * np.asarray(blowup, arr.dtype)
+    if kind == "gaussian":
+        std = float(np.std(arr.astype(np.float64))) or 1.0
+        return rng.normal(0.0, std, size=arr.shape).astype(arr.dtype)
+    if kind == "nan_poison":
+        return np.full_like(arr, np.nan)
+    raise ValueError(f"unknown attack kind {kind!r}")
+
+
+def poison_blob(blob: bytes, cfg: AttackConfig, client_id: int,
+                round_idx: int = 0) -> bytes:
+    """Transform one honest update blob into this attacker's payload.
+
+    Colluders draw from an rng keyed on the round only, so every cohort
+    member re-encodes byte-identical poison; all other kinds key on the
+    client too (independent attackers).
+    """
+    key = ([cfg.seed, 0x5161, round_idx] if cfg.kind == "collude"
+           else [cfg.seed, 0x5161, round_idx, client_id])
+    rng = np.random.default_rng(key)
+    pairs = decode_update_leaves(bytes(blob), zero_copy=True)
+    poisoned = [(path, _poison_leaf(leaf, cfg.kind, cfg.blowup, rng))
+                for path, leaf in pairs]
+    return encode_update(tree_from_records(poisoned))

@@ -1,0 +1,213 @@
+"""Byzantine-robust ingest: the payload quarantine gate.
+
+Every robustness layer below this one (CRC, ChaosProxy retries/resume,
+quorum) defends against *byte-level* faults — a well-formed but poisoned
+update (NaN scales, a 1000× scale blowup, reserved 2-bit codes) sails
+straight through framing and CRC into the weighted mean. The gate inspects
+decoded update CONTENT against the broadcast model before the payload
+reaches the aggregator, and books failures as a third ledger outcome,
+extending the PR-8 invariant to
+
+    shipped == ingested + dropped + quarantined
+
+Checks, in order (first failure wins; reasons are the telemetry keys):
+
+  malformed          blob does not decode (``WireError``)
+  structure          record paths / logical shapes / dtypes differ from the
+                     broadcast tree (treedef match via ``tree_leaf_paths``)
+  scale_nonfinite    a ternary scale is NaN/Inf (catches nan_poison always,
+                     no history needed)
+  scale_bound        max |scale| exceeds ``scale_bound`` × the running
+                     cross-client median for that leaf (enforced once
+                     ``min_history`` clean payloads have been seen — the
+                     cold-start rounds are observe-only by design)
+  code_plane         a packed ternary byte contains the reserved code 3
+                     (honest encoders never emit it; padding carries code 1)
+  payload_nonfinite  a raw / downcast / top-k float payload is NaN/Inf
+
+The gate never mutates blobs and never touches accepted payloads, so
+defense-on with honest clients is byte-identical to defense-off. Scale
+history is only fed by ACCEPTED payloads (a quarantined blowup cannot drag
+the median toward itself), which also means a colluding cohort arriving
+before ``min_history`` honest scales can seed the history — the bound is a
+rate-limiter for gross outliers, not a consensus mechanism; subtle poisons
+are the majority-vote rule's job (``kernels.vote``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any
+
+import numpy as np
+
+from repro.comm.wire import WireError, decode_update_leaves, tree_leaf_paths
+from repro.core.compression import DowncastTensor, TopKTensor
+from repro.core.ternary import TernaryTensor
+from repro.fed.aggregator import AGG_RULES
+
+# Quarantine reasons, in check order.
+REASONS = ("malformed", "structure", "scale_nonfinite", "scale_bound",
+           "code_plane", "payload_nonfinite")
+
+# byte → does any of its four 2-bit fields hold the reserved code 3?
+_HAS_CODE3 = np.array(
+    [any(((b >> (2 * j)) & 0x3) == 3 for j in range(4)) for b in range(256)],
+    dtype=bool,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DefenseConfig:
+    """Content-defense knobs threaded through every server path.
+
+    enabled=False (the default) keeps the gate entirely out of the ingest
+    path — zero overhead, bit-identical behavior. rule picks the
+    aggregation statistic; only "mean" reproduces the legacy weighted mean
+    bit-exactly (the robust rules differ by design).
+    """
+
+    enabled: bool = False
+    rule: str = "mean"
+    scale_bound: float = 10.0   # max |scale| / running median before quarantine
+    min_history: int = 4        # accepted payloads before the bound is live
+    trim_frac: float = 0.2      # per-side trim for the trimmed_mean rule
+
+    def __post_init__(self):
+        if self.rule not in AGG_RULES:
+            raise ValueError(f"rule must be one of {AGG_RULES}, got {self.rule!r}")
+        if self.scale_bound <= 1.0:
+            raise ValueError("scale_bound must be > 1 (it is a ratio)")
+        if self.min_history < 1:
+            raise ValueError("min_history must be >= 1")
+        if not 0.0 <= self.trim_frac < 0.5:
+            raise ValueError("trim_frac must be in [0, 0.5)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    """Outcome of one gate check. ``ok`` ⇒ pass through to the aggregator;
+    otherwise ``reason`` is one of ``REASONS`` and ``detail`` names the
+    offending record."""
+
+    ok: bool
+    reason: str = ""
+    detail: str = ""
+
+
+def _leaf_signature(leaf: Any) -> tuple[tuple, str]:
+    """(logical shape, logical dtype) of any wire or dense leaf."""
+    if isinstance(leaf, TernaryTensor):
+        return tuple(leaf.shape), str(leaf.dtype)
+    if isinstance(leaf, DowncastTensor):
+        return tuple(leaf.data.shape), str(leaf.orig_dtype)
+    if isinstance(leaf, TopKTensor):
+        return tuple(leaf.shape), str(leaf.dtype)
+    arr = np.asarray(leaf)
+    return tuple(arr.shape), str(arr.dtype)
+
+
+class UpdateGate:
+    """Stateful per-round (or longer-lived) content gate.
+
+    Built from the BROADCAST params tree — the one structure every honest
+    update must mirror. ``check(blob)`` returns a ``Verdict`` and updates
+    the pass/quarantine telemetry; the caller books quarantined bytes into
+    its ledger (``Aggregator.note_quarantined`` / the socket round state).
+    """
+
+    def __init__(self, cfg: DefenseConfig, params: Any):
+        self.cfg = cfg
+        self._ref = {
+            path: _leaf_signature(leaf) for path, leaf in tree_leaf_paths(params)
+        }
+        self._scale_hist: dict[str, list[float]] = {}
+        self.passed_updates = 0
+        self.passed_bytes = 0
+        self.quarantined_updates = 0
+        self.quarantined_bytes = 0
+        self.reasons: Counter[str] = Counter()
+
+    # -- checks ------------------------------------------------------------
+
+    def _check_records(self, pairs) -> Verdict:
+        seen = {}
+        for path, leaf in pairs:
+            seen[path] = leaf
+        if set(seen) != set(self._ref):
+            missing = sorted(set(self._ref) - set(seen))
+            extra = sorted(set(seen) - set(self._ref))
+            return Verdict(False, "structure",
+                           f"missing={missing[:3]} extra={extra[:3]}")
+        for path, leaf in seen.items():
+            if _leaf_signature(leaf) != self._ref[path]:
+                return Verdict(
+                    False, "structure",
+                    f"{path!r}: {_leaf_signature(leaf)} != {self._ref[path]}")
+        # content checks, cheapest-to-catch first
+        for path, leaf in seen.items():
+            if isinstance(leaf, TernaryTensor):
+                scale = np.asarray(leaf.w_q)
+                if not np.all(np.isfinite(scale)):
+                    return Verdict(False, "scale_nonfinite", path)
+                v = self._scale_verdict(path, scale)
+                if v is not None:
+                    return v
+                packed = np.asarray(leaf.packed)
+                if _HAS_CODE3[packed].any():
+                    return Verdict(False, "code_plane", path)
+            else:
+                payload = (leaf.data if isinstance(leaf, DowncastTensor)
+                           else leaf.values if isinstance(leaf, TopKTensor)
+                           else np.asarray(leaf))
+                payload = np.asarray(payload)
+                if (np.issubdtype(payload.dtype, np.floating)
+                        and not np.all(np.isfinite(payload))):
+                    return Verdict(False, "payload_nonfinite", path)
+        return Verdict(True)
+
+    def _scale_verdict(self, path: str, scale: np.ndarray) -> Verdict | None:
+        hist = self._scale_hist.get(path, ())
+        if len(hist) < self.cfg.min_history:
+            return None
+        med = float(np.median(hist))
+        rep = float(np.max(np.abs(scale)))
+        if rep > self.cfg.scale_bound * max(med, np.finfo(np.float32).tiny):
+            return Verdict(False, "scale_bound",
+                           f"{path!r}: |scale| {rep:.3g} vs median {med:.3g}")
+        return None
+
+    # -- public API --------------------------------------------------------
+
+    def check(self, blob: bytes) -> Verdict:
+        """Gate one update payload; pass ⇒ its scales feed the history."""
+        try:
+            pairs = decode_update_leaves(bytes(blob), zero_copy=True)
+        except WireError as e:
+            verdict = Verdict(False, "malformed", str(e)[:120])
+        else:
+            verdict = self._check_records(pairs)
+        if verdict.ok:
+            self.passed_updates += 1
+            self.passed_bytes += len(blob)
+            for path, leaf in pairs:
+                if isinstance(leaf, TernaryTensor):
+                    self._scale_hist.setdefault(path, []).append(
+                        float(np.max(np.abs(np.asarray(leaf.w_q)))))
+        else:
+            self.quarantined_updates += 1
+            self.quarantined_bytes += len(blob)
+            self.reasons[verdict.reason] += 1
+        return verdict
+
+    def telemetry(self) -> dict:
+        return {
+            "enabled": self.cfg.enabled,
+            "rule": self.cfg.rule,
+            "passed_updates": self.passed_updates,
+            "passed_bytes": self.passed_bytes,
+            "quarantined_updates": self.quarantined_updates,
+            "quarantined_bytes": self.quarantined_bytes,
+            "reasons": dict(self.reasons),
+        }

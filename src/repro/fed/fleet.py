@@ -55,9 +55,11 @@ from repro.core import fttq as fttq_mod
 from repro.core.tfedavg import client_update_payload
 from repro.comm.wire import encode_update
 from repro.fed.aggregator import Aggregator
+from repro.fed.attackers import attacker_ids, poison_blob
 from repro.fed.availability import draw_participants, make_availability
+from repro.fed.defense import UpdateGate
 from repro.fed.hierarchy import EdgeTier, edges_of
-from repro.fed.simulation import FedConfig, broadcast_blob
+from repro.fed.simulation import FedConfig, broadcast_blob, resolve_rule
 
 Pytree = Any
 
@@ -276,6 +278,17 @@ def _payload_pool(
     return pool, sizes
 
 
+def _pool_indices(ids: np.ndarray, n_honest: int,
+                  atk: np.ndarray) -> np.ndarray:
+    """Pool slot per client: honest client k ships ``pool[k % P]``;
+    an attacker ships the poisoned twin at ``P + (k % P)``. Attacker
+    cohorts therefore stay cohorts — byte-identical poisoned payloads —
+    which is the fleet approximation of per-client attack rng (the poison
+    keys on the pool index, not the client id)."""
+    base = ids % n_honest
+    return base + n_honest * atk[ids]
+
+
 def _draw_or_wait(avail, t_now, n_sel, n_clients, rng):
     """Participant draw that advances time while the fleet is empty
     (same contract as the per-client servers)."""
@@ -301,19 +314,55 @@ def _ingest_grouped(
     *,
     staleness: np.ndarray | None = None,
     compat: bool = False,
-):
+    gate: UpdateGate | None = None,
+) -> tuple[int, int]:
     """Cohort-grouped server ingest: one weighted add per (edge, payload)
     group — the weights sum exactly because cohort payloads are
-    byte-identical. ``compat`` keeps the legacy one-add-per-client order."""
+    byte-identical. ``compat`` keeps the legacy one-add-per-client order.
+
+    With a ``gate``, the defense check runs COHORT-LEVEL: once per distinct
+    payload per call (cohort members are byte-identical, so one verdict
+    covers them all — the gate's own counters therefore count cohorts);
+    every member of a refused cohort is quarantined, booked on the
+    tier/aggregator ledger, and counted in the returned
+    ``(quarantined_clients, quarantined_bytes)``.
+    """
     P = len(pool)
     stale = staleness if staleness is not None else np.zeros(surv.size)
+    q_clients = q_bytes = 0
     if compat:
         for k, j, w, s in zip(surv, pool_idx, weights, stale):
+            if gate is not None and not gate.check(pool[int(j)]).ok:
+                q_clients += 1
+                q_bytes += len(pool[int(j)])
+                if tier is not None:
+                    tier.note_quarantined(len(pool[int(j)]))
+                elif agg is not None:
+                    agg.note_quarantined(len(pool[int(j)]))
+                continue
             if tier is not None:
                 tier.add(int(k), pool[int(j)], float(w), staleness=float(s))
             else:
                 agg.add(pool[int(j)], weight=float(w))
-        return
+        return q_clients, q_bytes
+    if gate is not None and surv.size:
+        ok_by_j = {int(j): gate.check(pool[int(j)]).ok
+                   for j in np.unique(pool_idx)}
+        okm = np.array([ok_by_j[int(j)] for j in pool_idx], dtype=bool)
+        if not okm.all():
+            bad = pool_idx[~okm]
+            q_clients = int(bad.size)
+            q_bytes = int(sum(len(pool[int(j)]) for j in bad))
+            if tier is not None:
+                tier.note_quarantined(q_bytes, updates=q_clients)
+            elif agg is not None:
+                for j in bad:
+                    agg.note_quarantined(len(pool[int(j)]))
+            surv, pool_idx, weights, stale = (
+                surv[okm], pool_idx[okm], weights[okm], stale[okm]
+            )
+    if surv.size == 0:
+        return q_clients, q_bytes
     if tier is not None:
         e = edges_of(surv, cfg.n_clients, cfg.hierarchy)
         key = e * P + pool_idx
@@ -330,6 +379,7 @@ def _ingest_grouped(
                             staleness_sum=float(ssum[g]))
         else:
             agg.add(pool[int(ke)], weight=float(wsum[g]))
+    return q_clients, q_bytes
 
 
 def run_fleet(
@@ -354,12 +404,43 @@ def _setup(params, cfg, fleet):
     channel = Channel(cfg.channel, cfg.n_clients, seed=cfg.seed + 1)
     avail = make_availability(cfg.availability, cfg.n_clients, seed=cfg.seed)
     pool, sizes = _payload_pool(params, cfg, fleet)
+    # Byzantine layer: the attacker cohort ships POISONED TWINS of the pool
+    # (slot P+j twins slot j — see ``_pool_indices``); the gate, when the
+    # defense is on, vets payloads cohort-level at ingest.
+    atk = np.zeros(cfg.n_clients, dtype=bool)
+    if cfg.attack is not None and cfg.attack.n_attackers > 0:
+        atk[np.fromiter(attacker_ids(cfg.attack, cfg.n_clients),
+                        dtype=np.int64)] = True
+        pool = pool + [poison_blob(b, cfg.attack, client_id=j)
+                       for j, b in enumerate(pool)]
+        sizes = np.array([len(b) for b in pool], dtype=np.int64)
+    gate = (UpdateGate(cfg.defense, params)
+            if cfg.defense is not None and cfg.defense.enabled else None)
     bcast = broadcast_blob(params, cfg)
+    rule, trim_frac = resolve_rule(cfg)
     tier = (EdgeTier(cfg.hierarchy, cfg.fttq, cfg.n_clients,
-                     fused_encode=cfg.fused_encode)
+                     fused_encode=cfg.fused_encode,
+                     rule=rule, trim_frac=trim_frac)
             if cfg.hierarchy.enabled else None)
-    agg = Aggregator(chunk_c=cfg.agg_chunk_c) if tier is None else None
-    return rng, channel, avail, pool, sizes, bcast, tier, agg
+    agg = (Aggregator(chunk_c=cfg.agg_chunk_c, rule=rule, trim_frac=trim_frac)
+           if tier is None else None)
+    return rng, channel, avail, pool, sizes, bcast, tier, agg, atk, gate
+
+
+def _defense_extra(gate, tier, client_up_bytes, q_clients, q_bytes):
+    """The ``telemetry["defense"]`` section for a fleet run, with the
+    extended client-hop ledger: shipped == ingested + quarantined. For the
+    tier path the ingested side is the tier's own (independent) ingest
+    ledger, so the balance is a genuine cross-check."""
+    if gate is None:
+        return None
+    dt = gate.telemetry()
+    dt["quarantined_clients"] = q_clients
+    dt["quarantined_client_bytes"] = q_bytes
+    ingested = (int(tier.ingest_bytes.sum()) if tier is not None
+                else client_up_bytes - q_bytes)
+    dt["ledger_balanced"] = client_up_bytes == ingested + q_bytes
+    return {"defense": dt}
 
 
 def _telemetry(channel, tier, cfg, *, extra=None):
@@ -386,22 +467,24 @@ def _telemetry(channel, tier, cfg, *, extra=None):
 
 
 def _run_fleet_sync(params, cfg, fleet) -> FleetResult:
-    rng, channel, avail, pool, sizes, bcast, tier, agg = _setup(
+    rng, channel, avail, pool, sizes, bcast, tier, agg, atk, gate = _setup(
         params, cfg, fleet
     )
-    P = len(pool)
+    P = max(1, fleet.update_pool)     # honest pool size (twins live at P+j)
     deadline = (cfg.channel.deadline_s
                 if cfg.channel.deadline_s > 0 else float("inf"))
     n_sel = max(int(np.ceil(cfg.participation * cfg.n_clients)), 1)
     w_k = float(fleet.examples_per_client)
 
     up_bytes = down_bytes = 0
+    client_up_bytes = 0               # client-hop only (no edge→root bytes)
+    q_clients_total = q_bytes_total = 0
     parts_hist, dropped_hist, round_times = [], [], []
     mean = None
     t_now = 0.0
     for _ in range(cfg.rounds):
         ids, wait_s = _draw_or_wait(avail, t_now, n_sel, cfg.n_clients, rng)
-        pool_idx = ids % P
+        pool_idx = _pool_indices(ids, P, atk)
         down = channel.transfer_batch(
             ids, len(bcast), "down",
             share_nic=fleet.share_nic, compat=fleet.compat,
@@ -420,21 +503,26 @@ def _run_fleet_sync(params, cfg, fleet) -> FleetResult:
 
         down_bytes += len(bcast) * int(ids.size)
         up_bytes += int(sizes[sj].sum())
+        client_up_bytes += int(sizes[sj].sum())
         weights = np.full(surv.size, w_k)
-        _ingest_grouped(surv, sj, weights, pool, cfg, tier, agg,
-                        compat=fleet.compat)
-        if tier is not None:
-            mean, info = tier.fold()
-            up_bytes += info["edge_to_root_bytes"]
-        else:
-            mean = agg.finalize(reset=True)
+        q_upd, q_b = _ingest_grouped(surv, sj, weights, pool, cfg, tier, agg,
+                                     compat=fleet.compat, gate=gate)
+        q_clients_total += q_upd
+        q_bytes_total += q_b
+        if surv.size > q_upd:
+            if tier is not None:
+                mean, info = tier.fold()
+                up_bytes += info["edge_to_root_bytes"]
+            else:
+                mean = agg.finalize(reset=True)
+        # else: every survivor was quarantined — hold the model this round.
 
         last = float(total[ok].max())
         round_times.append(
             wait_s + (max(deadline, last) if n_dropped else last)
         )
         t_now += round_times[-1]
-        parts_hist.append(int(surv.size))
+        parts_hist.append(int(surv.size) - q_upd)
         dropped_hist.append(n_dropped)
 
     return FleetResult(
@@ -445,15 +533,19 @@ def _run_fleet_sync(params, cfg, fleet) -> FleetResult:
         upload_bytes=up_bytes,
         download_bytes=down_bytes,
         final_update=mean,
-        telemetry=_telemetry(channel, tier, cfg),
+        telemetry=_telemetry(
+            channel, tier, cfg,
+            extra=_defense_extra(gate, tier, client_up_bytes,
+                                 q_clients_total, q_bytes_total),
+        ),
     )
 
 
 def _run_fleet_async(params, cfg, fleet) -> FleetResult:
-    rng, channel, avail, pool, sizes, bcast, tier, agg = _setup(
+    rng, channel, avail, pool, sizes, bcast, tier, agg, atk, gate = _setup(
         params, cfg, fleet
     )
-    P = len(pool)
+    P = max(1, fleet.update_pool)     # honest pool size (twins live at P+j)
     n_conc = cfg.max_concurrency or max(
         int(np.ceil(cfg.participation * cfg.n_clients)), 1
     )
@@ -465,6 +557,8 @@ def _run_fleet_async(params, cfg, fleet) -> FleetResult:
 
     version = 0
     up_bytes = down_bytes = 0
+    client_up_bytes = 0
+    q_clients_total = q_bytes_total = 0
     dropped = 0
     dropped_bytes = 0
     staleness_hist: list[int] = []
@@ -473,7 +567,7 @@ def _run_fleet_async(params, cfg, fleet) -> FleetResult:
 
     def dispatch(ids: np.ndarray, t0: float) -> None:
         nonlocal down_bytes
-        pool_idx = ids % P
+        pool_idx = _pool_indices(ids, P, atk)
         down = channel.transfer_batch(ids, len(bcast), "down",
                                       share_nic=fleet.share_nic,
                                       compat=fleet.compat)
@@ -503,6 +597,7 @@ def _run_fleet_async(params, cfg, fleet) -> FleetResult:
         staleness = version - born
         staleness_hist.append(staleness)
         up_bytes += int(sizes[j])
+        client_up_bytes += int(sizes[j])
         if staleness > max_stale and cfg.staleness_policy == "drop":
             dropped += 1
             dropped_bytes += int(sizes[j])
@@ -518,17 +613,23 @@ def _run_fleet_async(params, cfg, fleet) -> FleetResult:
             buf_s.append(float(staleness))
 
         if len(buf_k) >= buffer_k:
-            _ingest_grouped(
+            q_upd, q_b = _ingest_grouped(
                 np.asarray(buf_k), np.asarray(buf_j), np.asarray(buf_w),
                 pool, cfg, tier, agg,
-                staleness=np.asarray(buf_s), compat=fleet.compat,
+                staleness=np.asarray(buf_s), compat=fleet.compat, gate=gate,
             )
-            if tier is not None:
-                mean, info = tier.fold()
-                up_bytes += info["edge_to_root_bytes"]
-            else:
-                mean = agg.finalize(reset=True)
-            parts_hist.append(len(buf_k))
+            q_clients_total += q_upd
+            q_bytes_total += q_b
+            if len(buf_k) > q_upd:
+                if tier is not None:
+                    mean, info = tier.fold()
+                    up_bytes += info["edge_to_root_bytes"]
+                else:
+                    mean = agg.finalize(reset=True)
+            # else: the whole buffer was quarantined — the fold still
+            # closes (version advances) so a poisoned fleet cannot stall
+            # the event loop; the model just holds.
+            parts_hist.append(len(buf_k) - q_upd)
             buf_k, buf_j, buf_w, buf_s = [], [], [], []
             version += 1
             fold_times.append(now - last_fold_t)
@@ -549,6 +650,12 @@ def _run_fleet_async(params, cfg, fleet) -> FleetResult:
         "dropped_updates": dropped,
         "dropped_update_bytes": dropped_bytes,
     }
+    # staleness drops never reach the gate, so the gated hop is the
+    # arrivals net of them: shipped == ingested + quarantined still holds.
+    defense = _defense_extra(gate, tier, client_up_bytes - dropped_bytes,
+                             q_clients_total, q_bytes_total)
+    if defense:
+        extra.update(defense)
     return FleetResult(
         rounds_run=version,
         participants_per_round=parts_hist,

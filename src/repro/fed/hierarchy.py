@@ -110,7 +110,8 @@ class EdgeTier:
 
     def __init__(self, cfg: HierarchyConfig, fttq: fttq_mod.FTTQConfig,
                  n_clients: int, *, fused_encode: bool = True,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, rule: str = "mean",
+                 trim_frac: float = 0.2):
         if cfg.n_edges < 1:
             raise ValueError(f"EdgeTier needs n_edges ≥ 1, got {cfg.n_edges}")
         self.cfg = cfg
@@ -118,19 +119,29 @@ class EdgeTier:
         self.n_clients = int(n_clients)
         self.fused_encode = fused_encode
         self.interpret = interpret
+        # Byzantine-robust rule, applied at BOTH tiers: edges reduce their
+        # region with it (a poisoned minority dies regionally), the root
+        # reduces the edge records with it too. "mean" = legacy bit-exact.
+        self.rule = rule
+        self.trim_frac = trim_frac
         # edge aggregators materialize lazily: a million-client fleet with
         # sparse participation only pays for the edges that see traffic.
         self._edges: dict[int, Aggregator] = {}
         self._edge_weight = np.zeros(cfg.n_edges, dtype=np.float64)
         self._edge_clients = np.zeros(cfg.n_edges, dtype=np.int64)
         self._edge_staleness = np.zeros(cfg.n_edges, dtype=np.float64)
-        self._root = Aggregator(chunk_c=cfg.root_chunk_c, interpret=interpret)
+        self._root = Aggregator(chunk_c=cfg.root_chunk_c, interpret=interpret,
+                                rule=rule, trim_frac=trim_frac)
         # cumulative ledger (never reset): bytes per tier, per edge.
         self.ingest_bytes = np.zeros(cfg.n_edges, dtype=np.int64)
         self.upstream_bytes = np.zeros(cfg.n_edges, dtype=np.int64)
         self.clients_seen = np.zeros(cfg.n_edges, dtype=np.int64)
         self.root_ingest_bytes = 0
         self.folds = 0
+        # quarantine ledger: client blobs the defense gate refused BEFORE
+        # they reached any edge — paid-for wire bytes, never ingested.
+        self.quarantined_updates = 0
+        self.quarantined_bytes = 0
 
     # -- ingest ------------------------------------------------------------
 
@@ -138,9 +149,17 @@ class EdgeTier:
         agg = self._edges.get(e)
         if agg is None:
             agg = Aggregator(chunk_c=self.cfg.edge_chunk_c,
-                             interpret=self.interpret)
+                             interpret=self.interpret,
+                             rule=self.rule, trim_frac=self.trim_frac)
             self._edges[e] = agg
         return agg
+
+    def note_quarantined(self, nbytes: int, updates: int = 1) -> None:
+        """Book gate-refused client bytes that would otherwise have fanned
+        into an edge; extends the tier ledger with the quarantine bucket
+        (shipped == ingested + quarantined on the client→edge hop)."""
+        self.quarantined_updates += int(updates)
+        self.quarantined_bytes += int(nbytes)
 
     def add(self, client_id: int, blob: bytes, weight: float,
             staleness: float = 0.0) -> None:
@@ -223,6 +242,9 @@ class EdgeTier:
         return {
             "n_edges": self.cfg.n_edges,
             "requantize_at_edge": self.cfg.requantize_at_edge,
+            "rule": self.rule,
+            "quarantined_updates": self.quarantined_updates,
+            "quarantined_bytes": self.quarantined_bytes,
             "client_to_edge_bytes": c2e,
             "edge_to_root_bytes": e2r,
             "root_ingest_bytes": self.root_ingest_bytes,

@@ -40,8 +40,18 @@ Fault tolerance (the paper's clients are flaky mobile/IoT devices):
   - crashed client processes are detected by exit code and removed from the
     expected set; unjoinable children escalate ``terminate()`` → ``kill()``;
   - every client ends the round with an outcome in
-    ``ok | timeout | torn | crashed | rejected``, and the update-byte ledger
-    balances: shipped == ingested + dropped (asserted in ``ledger()``).
+    ``ok | timeout | torn | crashed | rejected | quarantined``, and the
+    update-byte ledger balances:
+    shipped == ingested + dropped + quarantined (asserted in ``ledger()``).
+
+Byzantine robustness (PR 9): with ``defense=DefenseConfig(enabled=True)``
+every landed update passes the content gate (``fed.defense.UpdateGate``)
+before it is booked — structure vs the broadcast, finite/bounded scales,
+code-plane sanity. A refused payload gets outcome ``quarantined``: the
+client is acked with DONE (it must not retry), its frame bytes are booked
+in the quarantine ledger bucket, and it never reaches the aggregator. The
+``attack=AttackConfig(...)`` knob turns a seeded subset of the demo
+clients into Byzantine senders (``fed.attackers``) for smoke tests.
 
 Arrival handling feeds the same mix logic the simulators use:
 
@@ -120,6 +130,8 @@ from repro.comm.transport import (
 from repro.comm.wire import decode_update, encode_update
 from repro.core.compression import CodecSpec, compress_pytree
 from repro.fed.aggregator import Aggregator
+from repro.fed.attackers import AttackConfig, attacker_ids, poison_blob
+from repro.fed.defense import DefenseConfig, UpdateGate
 
 Pytree = Any
 
@@ -131,7 +143,7 @@ EXIT_RETRY_EXHAUSTED = 3    # outcome "torn": the link never let it finish
 EXIT_REJECTED = 4           # outcome "rejected": server refused the protocol
 EXIT_CRASH = 40             # outcome "crashed": injected mid-upload crash
 
-OUTCOMES = ("ok", "timeout", "torn", "crashed", "rejected")
+OUTCOMES = ("ok", "timeout", "torn", "crashed", "rejected", "quarantined")
 
 
 class QuorumNotMetError(RuntimeError):
@@ -209,7 +221,8 @@ class _Rejected(Exception):
 def _client_main(host: str, port: int, client_id: int, seed: int,
                  timeout_s: float, policy: RetryPolicy | None = None,
                  crash_after_frac: float | None = None,
-                 proto: int = PROTO_VERSION) -> None:
+                 proto: int = PROTO_VERSION,
+                 attack: AttackConfig | None = None) -> None:
     """Subprocess entry point: one client's whole (retrying) conversation.
 
     Reconnects with exponential backoff + seeded jitter on any transport
@@ -250,6 +263,10 @@ def _client_main(host: str, port: int, client_id: int, seed: int,
             elif reply.ftype == FT_BCAST:
                 start = decode_update(reply.payload)   # CRC re-verified here
                 blob = client_update_blob(start, client_id, seed)
+                if attack is not None:
+                    # a Byzantine demo client: poison the honest payload
+                    # client-side (still framed/CRC'd normally — wire-valid)
+                    blob = poison_blob(blob, attack, client_id)
                 state["frame"] = pack_frame(FT_UPDATE, blob, {
                     "client_id": int(client_id),
                     "weight": client_weight(client_id),
@@ -304,10 +321,11 @@ def _client_main_v1(host: str, port: int, client_id: int, seed: int,
 
 
 def _mix_arrivals(global_params: Pytree, arrivals, mode: str, *,
-                  chunk_c: int, buffer_k: int, eta: float) -> Pytree:
+                  chunk_c: int, buffer_k: int, eta: float,
+                  rule: str = "mean", trim_frac: float = 0.2) -> Pytree:
     """Fold (client_id, weight, blob) arrivals — ALREADY in the order they
     should be consumed — through the existing mix logic."""
-    agg = Aggregator(chunk_c=chunk_c)
+    agg = Aggregator(chunk_c=chunk_c, rule=rule, trim_frac=trim_frac)
     if mode == "sync":
         for _cid, weight, blob in arrivals:
             agg.add(blob, weight=weight)
@@ -332,12 +350,15 @@ def run_inprocess_reference(
     global_params: Pytree, n_clients: int, *, seed: int = 0,
     mode: str = "sync", chunk_c: int = 16, buffer_k: int = 4,
     eta: float = 0.5, order: list[int] | None = None,
+    rule: str = "mean", trim_frac: float = 0.2,
 ) -> Pytree:
     """The no-sockets reference: identical broadcast decode, identical
     per-client update derivation, identical mix — in ``order`` (default
     client_id order, which is what the socket sync barrier replays). Under
     a quorum commit pass the SURVIVING client ids: sorted for sync,
-    ``result.arrivals`` for buffered."""
+    ``result.arrivals`` for buffered. Under a defense round pass the
+    HONEST survivors (quarantined clients never reach the socket
+    aggregator either) and the same ``rule``."""
     blob = encode_update(global_params)
     start = decode_update(blob)                 # decode exactly like a client
     ids = list(range(n_clients)) if order is None else list(order)
@@ -346,7 +367,8 @@ def run_inprocess_reference(
         for cid in ids
     ]
     return _mix_arrivals(global_params, arrivals, mode,
-                         chunk_c=chunk_c, buffer_k=buffer_k, eta=eta)
+                         chunk_c=chunk_c, buffer_k=buffer_k, eta=eta,
+                         rule=rule, trim_frac=trim_frac)
 
 
 # --------------------------------------------------------------------------
@@ -378,6 +400,9 @@ class _RoundState:
         self.completed: list[tuple[int, float, bytes]] = []  # arrival order
         self.completed_ids: set[int] = set()
         self.rejected: dict[int, str] = {}
+        self.quarantined: dict[int, tuple[str, int]] = {}  # cid → (reason, B)
+        self.quarantined_update_bytes = 0
+        self.gate: UpdateGate | None = None   # set when defense is enabled
         self.closing = False
         self.up_bytes = 0
         self.down_bytes = 0
@@ -398,11 +423,22 @@ class _RoundState:
 
 def _book_completed(state: _RoundState, cid: int, weight: float,
                     payload: bytes, frame_bytes: int) -> bool:
-    """Record one landed update. True iff NEWLY booked (idempotent: a
-    duplicate or post-commit arrival books nothing and returns False)."""
+    """Record one landed update — through the content gate when defense is
+    on. True iff NEWLY booked, as completed OR quarantined (idempotent: a
+    duplicate or post-commit arrival books nothing and returns False). A
+    quarantined client is still acked with DONE — its upload is over; the
+    poison just never reaches the aggregate."""
     with state.cond:
-        if cid in state.completed_ids or state.closing:
+        if (cid in state.completed_ids or cid in state.quarantined
+                or state.closing):
             return False
+        if state.gate is not None:
+            verdict = state.gate.check(payload)
+            if not verdict.ok:
+                state.quarantined[cid] = (verdict.reason, frame_bytes)
+                state.quarantined_update_bytes += frame_bytes
+                state.cond.notify_all()
+                return True
         state.completed_ids.add(cid)
         state.completed.append((cid, weight, payload))
         state.payload_bytes += len(payload)
@@ -448,7 +484,21 @@ def _validate_update(frame: Frame, cid: int) -> float:
             f"client {cid}: expected UPDATE, got {frame.ftype}")
     if int(frame.meta.get("client_id", -1)) != cid:
         raise ProtocolError(f"client id changed mid-conversation for {cid}")
-    return float(frame.meta["weight"])
+    # a missing / non-numeric / non-finite / negative weight would crash the
+    # handler (KeyError) or poison the aggregate denominator — it is a
+    # malformed frame, and FrameError maps it onto the "rejected" outcome.
+    weight = frame.meta.get("weight")
+    try:
+        weight = float(weight)
+    except (TypeError, ValueError):
+        raise FrameError(
+            f"client {cid}: UPDATE weight meta missing or non-numeric: "
+            f"{frame.meta.get('weight')!r}") from None
+    if not math.isfinite(weight) or weight < 0:
+        raise FrameError(
+            f"client {cid}: UPDATE weight must be finite and >= 0, "
+            f"got {weight!r}")
+    return weight
 
 
 def _serve_v2(conn: socket.socket, hello: Frame, hello_dec: FrameDecoder,
@@ -464,7 +514,7 @@ def _serve_v2(conn: socket.socket, hello: Frame, hello_dec: FrameDecoder,
     with state.cond:
         if attempt > 0:
             state.retries += 1
-        if cid in state.completed_ids:
+        if cid in state.completed_ids or cid in state.quarantined:
             sess = None                       # already landed: just ack
         else:
             sess = state.sessions.get(cid)
@@ -673,11 +723,13 @@ class SocketRoundResult:
     shipped_update_bytes: int = 0   # every UPDATE-frame byte that arrived
     ingested_update_bytes: int = 0  # ... folded into the aggregate
     dropped_update_bytes: int = 0   # ... paid for but never folded
+    quarantined_update_bytes: int = 0  # ... refused by the content gate
     resumed_bytes: int = 0      # upload bytes SAVED by mid-frame resume
     retries: int = 0            # reconnect attempts observed (attempt > 0)
     escalations: dict = dataclasses.field(
         default_factory=lambda: {"terminated": 0, "killed": 0})
     chaos: dict | None = None   # ChaosProxy.stats when a fault_cfg ran
+    defense: dict | None = None  # UpdateGate.telemetry() when defense ran
 
     @property
     def framing_overhead_bytes(self) -> int:
@@ -690,11 +742,13 @@ class SocketRoundResult:
 
     def ledger(self) -> dict:
         """The round's byte/outcome ledger. The update-byte balance
-        invariant — shipped == ingested + dropped — is checked here; a
-        ``False`` means the server lost track of bytes it read."""
+        invariant — shipped == ingested + dropped + quarantined — is
+        checked here; a ``False`` means the server lost track of bytes it
+        read."""
         balance_ok = (self.shipped_update_bytes
                       == self.ingested_update_bytes
-                      + self.dropped_update_bytes)
+                      + self.dropped_update_bytes
+                      + self.quarantined_update_bytes)
         return {
             "mode": self.mode,
             "n_clients": self.n_clients,
@@ -711,7 +765,9 @@ class SocketRoundResult:
             "shipped_update_bytes": self.shipped_update_bytes,
             "ingested_update_bytes": self.ingested_update_bytes,
             "dropped_update_bytes": self.dropped_update_bytes,
+            "quarantined_update_bytes": self.quarantined_update_bytes,
             "balance_ok": balance_ok,
+            "defense": self.defense,
             "resumed_bytes": self.resumed_bytes,
             "retries": self.retries,
             "escalations": self.escalations,
@@ -722,11 +778,14 @@ class SocketRoundResult:
 
 
 def _final_outcomes(state: _RoundState, procs: dict[int, Any]) -> dict[int, str]:
-    """Map every client onto ok | timeout | torn | crashed | rejected."""
+    """Map every client onto
+    ok | timeout | torn | crashed | rejected | quarantined."""
     out: dict[int, str] = {}
     for cid, p in procs.items():
         if cid in state.completed_ids:
             out[cid] = "ok"
+        elif cid in state.quarantined:
+            out[cid] = "quarantined"
         elif cid in state.rejected:
             out[cid] = "rejected"
         elif p.exitcode == EXIT_REJECTED:
@@ -748,6 +807,7 @@ def run_socket_round(
     quorum_frac: float = 1.0, round_deadline_s: float = float("inf"),
     fault_cfg: FaultConfig | None = None, retry: RetryPolicy | None = None,
     legacy_clients: tuple = (), join_grace_s: float = 5.0,
+    defense: DefenseConfig | None = None, attack: AttackConfig | None = None,
 ) -> SocketRoundResult:
     """One federated round over real TCP with ``n_clients`` OS processes.
 
@@ -781,9 +841,17 @@ def run_socket_round(
     handlers: list[threading.Thread] = []
     threads: list[threading.Thread] = []
     proxy: ChaosProxy | None = None
-    agg = Aggregator(chunk_c=chunk_c)
+    agg = Aggregator(
+        chunk_c=chunk_c,
+        rule=defense.rule if defense is not None else "mean",
+        trim_frac=defense.trim_frac if defense is not None else 0.2,
+    )
     out_params = global_params
     folded = 0
+    if defense is not None and defense.enabled:
+        state.gate = UpdateGate(defense, global_params)
+    attackers = (attacker_ids(attack, n_clients) if attack is not None
+                 else frozenset())
     try:
         srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         srv.bind((host, 0))
@@ -810,7 +878,8 @@ def run_socket_round(
                 args=(host, client_port, cid, seed, timeout_s, retry,
                       fault_cfg.crash_after_frac if cid in crash_set else None,
                       PROTO_V1 if cid in legacy_clients
-                      else (99 if cid in bad_proto else PROTO_VERSION)),
+                      else (99 if cid in bad_proto else PROTO_VERSION),
+                      attack if cid in attackers else None),
                 daemon=True,
             )
             p.start()
@@ -839,7 +908,8 @@ def run_socket_round(
             # never arrive — shrink the expected set instead of waiting
             resolved = set()
             for cid, p in procs.items():
-                if cid in state.completed_ids or cid in state.rejected:
+                if (cid in state.completed_ids or cid in state.rejected
+                        or cid in state.quarantined):
                     resolved.add(cid)
                 elif p.exitcode is not None:
                     resolved.add(cid)     # crashed / exhausted / rejected
@@ -880,13 +950,21 @@ def run_socket_round(
             shipped = state.v1_update_bytes + state.superseded_bytes
             for cid, sess in state.sessions.items():
                 shipped += sess.dec.bytes_in
-                if cid not in state.completed_ids:
+                if cid in state.quarantined:
+                    # frame bytes are already in the quarantine bucket;
+                    # anything beyond the frame (resume overshoot) is waste
+                    extra = sess.dec.bytes_in - state.quarantined[cid][1]
+                    if extra > 0:
+                        state.dropped_update_bytes += extra
+                elif cid not in state.completed_ids:
                     state.dropped_update_bytes += sess.dec.bytes_in
                     agg.note_dropped(sess.dec.bytes_in)
                 elif sess.completed:
                     extra = sess.dec.bytes_in - sess.frame_bytes
                     if extra > 0:
                         state.dropped_update_bytes += extra
+            for _reason, nbytes in state.quarantined.values():
+                agg.note_quarantined(nbytes)
             arrivals_final = list(state.completed)
         if mode == "sync":
             for _cid, weight, blob in sorted(arrivals_final):
@@ -926,10 +1004,12 @@ def run_socket_round(
         shipped_update_bytes=shipped,
         ingested_update_bytes=state.ingested_update_bytes,
         dropped_update_bytes=state.dropped_update_bytes,
+        quarantined_update_bytes=state.quarantined_update_bytes,
         resumed_bytes=state.resumed_bytes,
         retries=state.retries,
         escalations=esc,
         chaos=dict(proxy.stats) if proxy is not None else None,
+        defense=(state.gate.telemetry() if state.gate is not None else None),
     )
 
 
@@ -982,6 +1062,18 @@ def main(argv=None) -> int:
                     help="also run the in-process reference (restricted to "
                          "the surviving client set) and require a "
                          "byte-identical aggregate")
+    ap.add_argument("--defense", action="store_true",
+                    help="enable the content quarantine gate")
+    ap.add_argument("--rule", default="mean",
+                    choices=("mean", "majority", "trimmed_mean", "median"),
+                    help="aggregation rule (with --defense)")
+    ap.add_argument("--attack", default=None,
+                    choices=("sign_flip", "scale_blowup", "gaussian",
+                             "nan_poison", "collude"),
+                    help="turn a seeded subset of clients Byzantine")
+    ap.add_argument("--attackers", type=int, default=2,
+                    help="attacker cohort size (with --attack)")
+    ap.add_argument("--attack-seed", type=int, default=11)
     args = ap.parse_args(argv)
 
     fault_cfg = None
@@ -991,6 +1083,16 @@ def main(argv=None) -> int:
                                   n_clients=args.clients)
         if quorum_frac is None:
             quorum_frac = 0.5
+    attack = None
+    if args.attack is not None:
+        attack = AttackConfig(kind=args.attack, n_attackers=args.attackers,
+                              seed=args.attack_seed)
+        if quorum_frac is None:
+            # quarantined attackers never count as landed updates
+            quorum_frac = max(0.1, (args.clients - args.attackers)
+                              / max(args.clients, 1))
+    defense = (DefenseConfig(enabled=True, rule=args.rule)
+               if args.defense else None)
     if quorum_frac is None:
         quorum_frac = 1.0
 
@@ -1000,6 +1102,7 @@ def main(argv=None) -> int:
         chunk_c=args.chunk_c, buffer_k=args.buffer_k, eta=args.eta,
         timeout_s=args.timeout_s, quorum_frac=quorum_frac,
         round_deadline_s=args.deadline_s, fault_cfg=fault_cfg,
+        defense=defense, attack=attack,
     )
     ledger = res.ledger()
     if args.check:
@@ -1008,7 +1111,7 @@ def main(argv=None) -> int:
         ref = run_inprocess_reference(
             params, args.clients, seed=args.seed, mode=args.mode,
             chunk_c=args.chunk_c, buffer_k=args.buffer_k, eta=args.eta,
-            order=order,
+            order=order, rule=args.rule if args.defense else "mean",
         )
         ledger["reference_sha256"] = params_hash(ref)
         ledger["byte_identical"] = (
@@ -1022,11 +1125,20 @@ def main(argv=None) -> int:
         ok = False
     if not ledger["balance_ok"]:
         print("FAIL: update-byte ledger does not balance "
-              "(shipped != ingested + dropped)", file=sys.stderr)
+              "(shipped != ingested + dropped + quarantined)",
+              file=sys.stderr)
         ok = False
     if args.chaos and ledger["n_survivors"] < res.quorum_n:
         print("FAIL: chaos round committed below quorum", file=sys.stderr)
         ok = False
+    if args.attack == "nan_poison" and args.defense:
+        # the poison smoke's teeth: every attacker must be quarantined
+        n_quar = sum(1 for v in ledger["outcomes"].values()
+                     if v == "quarantined")
+        if n_quar != min(args.attackers, args.clients):
+            print(f"FAIL: only {n_quar} of {args.attackers} nan_poison "
+                  "attackers were quarantined", file=sys.stderr)
+            ok = False
     return 0 if ok else 1
 
 

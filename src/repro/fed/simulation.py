@@ -49,11 +49,13 @@ from repro.core.tfedavg import (
 )
 from repro.data.federated import ClientDataset
 from repro.fed.aggregator import Aggregator
+from repro.fed.attackers import AttackConfig, attacker_ids, poison_blob
 from repro.fed.availability import (
     AvailabilityConfig,
     draw_participants,
     make_availability,
 )
+from repro.fed.defense import DefenseConfig, UpdateGate
 from repro.fed.hierarchy import EdgeTier, HierarchyConfig
 from repro.optim import Optimizer
 
@@ -115,6 +117,14 @@ class FedConfig:
     # (0 → lock the target to the initial K's observed latency).
     adaptive_buffer: bool = False
     target_mix_latency_s: float = 0.0
+    # --- Byzantine robustness ---------------------------------------------
+    # content defense (None / enabled=False → the legacy ingest path,
+    # bit-exact) and seeded attacker injection (None → all clients honest).
+    # With the gate on, every arrival is checked against the broadcast tree
+    # BEFORE it reaches the aggregator; failures become the third ledger
+    # outcome:  shipped == ingested + dropped + quarantined.
+    defense: DefenseConfig | None = None
+    attack: AttackConfig | None = None
 
 
 @dataclasses.dataclass
@@ -192,6 +202,24 @@ def _make_local_steps(apply_fn, optimizer: Optimizer, cfg: FedConfig):
 # --------------------------------------------------------------------------
 # Shared protocol pieces (used by both the sync and async servers).
 # --------------------------------------------------------------------------
+
+
+def resolve_rule(cfg: FedConfig) -> tuple[str, float]:
+    """The (aggregation rule, trim fraction) every server in this run uses.
+
+    Defense off (the default) pins "mean" — the legacy bit-exact weighted
+    average. The robust rules live on the fused ``fed.aggregator`` path;
+    the list-based reference loop only knows the mean, so they require
+    ``fused_aggregation=True``.
+    """
+    if cfg.defense is None or not cfg.defense.enabled:
+        return "mean", 0.2
+    if cfg.defense.rule != "mean" and not cfg.fused_aggregation:
+        raise ValueError(
+            f"robust rule {cfg.defense.rule!r} requires fused_aggregation=True "
+            "(the reference loop only computes the weighted mean)"
+        )
+    return cfg.defense.rule, cfg.defense.trim_frac
 
 
 def resolve_compression(cfg: FedConfig) -> CompressionSpec:
@@ -301,11 +329,20 @@ def run_federated_sync(
     round_times, dropped_hist = [], []
     n_sel = max(int(np.ceil(cfg.participation * len(clients))), 1)
     t_now = 0.0                # cumulative simulated time (availability clock)
+    rule, trim_frac = resolve_rule(cfg)
     # long-lived edge tier (when enabled): per-edge staging buffers, leaf
     # plans and the cumulative byte ledger persist across rounds.
     tier = (EdgeTier(cfg.hierarchy, cfg.fttq, len(clients),
-                     fused_encode=cfg.fused_encode)
+                     fused_encode=cfg.fused_encode,
+                     rule=rule, trim_frac=trim_frac)
             if cfg.hierarchy.enabled else None)
+    # Byzantine layer: seeded attacker cohort + the content gate. The gate
+    # lives across rounds so its cross-client scale history warms up.
+    attackers = (attacker_ids(cfg.attack, len(clients))
+                 if cfg.attack is not None else frozenset())
+    gate = (UpdateGate(cfg.defense, global_params)
+            if cfg.defense is not None and cfg.defense.enabled else None)
+    gated_bytes = 0            # survivor bytes presented to the gate
 
     for r in range(cfg.rounds):
         # ---- selection (from the clients ONLINE right now) --------------
@@ -348,6 +385,10 @@ def run_federated_sync(
             up_blob = train_client(
                 clients[k], start_params, cfg, optimizer, fp_step, qat_step, rng
             )
+            if k in attackers:
+                # decode → poison → re-encode: the frame stays wire-valid,
+                # only the content defense can catch it.
+                up_blob = poison_blob(up_blob, cfg.attack, k, round_idx=r)
             t_up = channel.transfer(k, len(up_blob), "up")
             arrivals.append((pt + t_up, k, up_blob))
 
@@ -374,8 +415,29 @@ def run_federated_sync(
         )
         t_now += round_times[-1]
 
+        # ---- ingest gate (content defense) ------------------------------
+        # Survivors cleared framing/CRC/deadline; the gate now vets their
+        # CONTENT. Quarantined uploads were shipped and paid for, so their
+        # bytes are booked as upload AND as quarantine — the third ledger
+        # outcome next to ingested and dropped.
+        if gate is not None:
+            accepted = []
+            for total, k, up_blob in survivors:
+                gated_bytes += len(up_blob)
+                if gate.check(up_blob).ok:
+                    accepted.append((total, k, up_blob))
+                else:
+                    up_bytes += len(up_blob)
+                    if tier is not None:
+                        tier.note_quarantined(len(up_blob))
+            survivors = accepted
+
         # ---- aggregation (server decodes the real upstream buffers) -----
-        if tier is not None:
+        if not survivors:
+            # every arrival was quarantined: hold the model this round
+            # (losing a round to a poisoned cohort beats folding it in).
+            pass
+        elif tier is not None:
             # hierarchical: survivors fan into their regional edges; each
             # edge ships one (optionally re-quantized) record to the root.
             # The edge→root hop is real wire traffic, booked as upload.
@@ -388,7 +450,8 @@ def run_federated_sync(
             # streaming fused fan-in: zero-copy record decode into stacked
             # packed buffers, one Pallas launch per chunk_c clients — the
             # per-client dense trees of the reference loop never exist.
-            agg = Aggregator(chunk_c=cfg.agg_chunk_c)
+            agg = Aggregator(chunk_c=cfg.agg_chunk_c, rule=rule,
+                             trim_frac=trim_frac)
             for total, k, up_blob in survivors:
                 up_bytes += len(up_blob)
                 agg.add(up_blob, weight=len(clients[k]))
@@ -421,6 +484,13 @@ def run_federated_sync(
         "goodput_fraction": summary.get("goodput_fraction", 1.0),
         "availability": cfg.availability.kind,
     }
+    if gate is not None:
+        telemetry["defense"] = gate.telemetry()
+        # extended ledger at the gate: every survivor byte presented is
+        # either ingested (passed) or quarantined — nothing leaks.
+        telemetry["defense"]["ledger_balanced"] = (
+            gated_bytes == gate.passed_bytes + gate.quarantined_bytes
+        )
     if tier is not None:
         telemetry["hierarchy"] = tier.telemetry()
     return FedResult(

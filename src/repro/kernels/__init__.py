@@ -14,10 +14,14 @@
   aggregate        — fused packed fan-in: Σ coeff_c·unpack(codes_c) over a
                      stacked (C, R, 128) wire-byte tensor in one pass (the
                      T-FedAvg server aggregation hot spot)
+  vote             — coordinate-wise ternary majority vote over the same
+                     stacked wire-byte layout: weighted −1/+1 vote masses
+                     by plane arithmetic, no dense unpack (the
+                     Byzantine-robust aggregation rule)
 
 ``ops`` holds the jit'd dispatching wrappers; ``ref`` the pure-jnp oracles.
 """
 
-from repro.kernels import aggregate, ops, quantize_pack, ref, repack
+from repro.kernels import aggregate, ops, quantize_pack, ref, repack, vote
 
-__all__ = ["aggregate", "ops", "quantize_pack", "ref", "repack"]
+__all__ = ["aggregate", "ops", "quantize_pack", "ref", "repack", "vote"]

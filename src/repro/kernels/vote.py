@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: coordinate-wise ternary majority vote over wire bytes.
+
+Byzantine-robust aggregation for 2-bit packed updates. Instead of the
+weighted mean (``kernels.aggregate``), each coordinate is decided by a
+weighted plurality over the client codes: +1 iff the +1 vote mass beats
+both the −1 and 0 masses, −1 symmetrically, else 0. A sign-flipping
+minority (< half the vote weight) therefore cannot move any coordinate —
+the classic coordinate-wise-median robustness, but exact and cheap in the
+ternary domain.
+
+The kernel reuses the ``aggregate.py`` staging contract — a stacked
+``(C, R, LANES)`` uint8 tensor of flat-packed codes plus a per-client fp32
+coefficient vector — and counts votes by plane arithmetic on the packed
+bytes (no dense unpack): per 2-bit plane, code 0 adds its coefficient to
+the −1 mass and code 2 to the +1 mass. It emits weighted COUNTS, not the
+final votes, so the server can accumulate partial counts across chunk
+flushes (C > chunk_c) and decide the plurality once at finalize with
+``majority_from_counts``. The zero mass needs no third output: it is
+``total_coeff − minus − plus`` (every slot holds exactly one code; code 3
+never appears in valid payloads — the ingest gate quarantines it).
+
+Coefficients here are the raw client WEIGHTS (scales are NOT folded in —
+a vote is scale-free); the caller derives one robust scale per leaf
+separately (weighted median of client scales).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.aggregate import BLOCK_ROWS, LANES
+
+
+def _vote_kernel(s_ref, p_ref, o_ref, *, n_c: int):
+    """One (block_rows, LANES) byte tile: loop the C axis in-register.
+
+    Accumulates two fp32 planes — weighted −1 and +1 vote masses — in a
+    single fori_loop so the trace stays one step long regardless of C.
+    """
+
+    def body(c, acc):
+        p = p_ref[pl.ds(c, 1)][0].astype(jnp.int32)      # (br, LANES) bytes
+        w = s_ref[c]
+        codes = [(p >> (2 * j)) & 0x3 for j in range(4)]
+        minus = jnp.stack(
+            [(q == 0).astype(jnp.float32) for q in codes], axis=1
+        ).reshape(acc.shape[1:])
+        plus = jnp.stack(
+            [(q == 2).astype(jnp.float32) for q in codes], axis=1
+        ).reshape(acc.shape[1:])
+        return acc + w * jnp.stack([minus, plus])
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, n_c, body, jnp.zeros(o_ref.shape, jnp.float32)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def packed_vote_counts(
+    stacked: jax.Array,
+    coeffs: jax.Array,
+    *,
+    block_rows: int = BLOCK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Weighted −1/+1 vote masses per coordinate, straight off wire bytes.
+
+    stacked: (C, R, LANES) uint8, R % block_rows == 0 — each row-major byte
+      stream is a client's flat-packed 2-bit codes (zero-pad the tail).
+    coeffs:  (C,) float32 — client vote weights (0 for padding clients;
+      note a zero-padding BYTE carries code 0 ×4, so padding clients must
+      be cancelled by coeff 0, and padded tail bytes of real clients land
+      in the sliced-off flat tail exactly as in ``packed_weighted_sum``).
+    Returns (2, 4·R·LANES) fp32 [minus_mass, plus_mass] in logical element
+    order; the caller slices [:, :n_elements].
+    """
+    c, r, lanes = stacked.shape
+    assert lanes == LANES, f"lane dim must be {LANES}, got {lanes}"
+    br = min(block_rows, r)
+    assert r % br == 0, f"rows {r} not a multiple of block_rows {br}"
+    out = pl.pallas_call(
+        functools.partial(_vote_kernel, n_c=c),
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((c, br, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, 4 * br, LANES), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, 4 * r, LANES), jnp.float32),
+        interpret=interpret,
+    )(coeffs.astype(jnp.float32), stacked)
+    # undo the bit-plane interleave per mass plane (same as aggregate.py).
+    return out.reshape(2, r, 4, LANES).transpose(0, 1, 3, 2).reshape(2, -1)
+
+
+def packed_vote_counts_ref(stacked, coeffs) -> np.ndarray:
+    """Pure-numpy oracle with identical flat-order semantics."""
+    stacked = np.asarray(stacked)
+    c = stacked.shape[0]
+    flat = stacked.reshape(c, -1)
+    shifts = np.arange(4, dtype=np.uint8) * 2
+    codes = ((flat[:, :, None] >> shifts) & 0x3).reshape(c, -1)
+    w = np.asarray(coeffs, np.float32)
+    minus = np.tensordot(w, (codes == 0).astype(np.float32), axes=1)
+    plus = np.tensordot(w, (codes == 2).astype(np.float32), axes=1)
+    return np.stack([minus, plus])
+
+
+def majority_from_counts(
+    counts: np.ndarray, total_coeff: float
+) -> np.ndarray:
+    """Decide the plurality winner per coordinate from accumulated masses.
+
+    counts: (2, n) [minus_mass, plus_mass]; the 0 mass is
+    ``total_coeff − minus − plus``. Strict plurality — ties (including the
+    empty total_coeff == 0 case) resolve to 0, the conservative "don't
+    move" outcome. Returns int8 votes in {−1, 0, +1}.
+    """
+    minus = np.asarray(counts[0], np.float32)
+    plus = np.asarray(counts[1], np.float32)
+    zero = np.float32(total_coeff) - minus - plus
+    votes = np.zeros(minus.shape, np.int8)
+    votes[(plus > minus) & (plus > zero)] = 1
+    votes[(minus > plus) & (minus > zero)] = -1
+    return votes

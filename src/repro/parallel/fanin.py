@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels.aggregate import BLOCK_ROWS, packed_weighted_sum
+from repro.kernels.vote import packed_vote_counts
 
 try:  # jax ≥ 0.5 exports it at top level
     _shard_map = jax.shard_map
@@ -64,6 +65,53 @@ def _build(c: int, rows: int, block_rows: int, interpret: bool,
         shard, mesh=mesh, in_specs=(P(axis), P(axis)), out_specs=P(),
         check_rep=False,
     ))
+
+
+@functools.lru_cache(maxsize=None)
+def _build_vote(c: int, rows: int, block_rows: int, interpret: bool,
+                mesh: Mesh | None, axis: str | None):
+    if mesh is not None:
+        n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    if mesh is None or n_shards == 1 or c % n_shards:
+        @jax.jit
+        def run(stacked, coeffs):
+            return packed_vote_counts(
+                stacked, coeffs, block_rows=block_rows, interpret=interpret
+            )
+        return run
+
+    def shard(stacked, coeffs):
+        part = packed_vote_counts(
+            stacked, coeffs, block_rows=block_rows, interpret=interpret
+        )
+        # vote masses are plain weighted sums over the client axis, so the
+        # same psum merge as the mean path applies.
+        return jax.lax.psum(part, axis)
+
+    return jax.jit(_shard_map(
+        shard, mesh=mesh, in_specs=(P(axis), P(axis)), out_specs=P(),
+        check_rep=False,
+    ))
+
+
+def fanin_vote_counts(
+    stacked,
+    coeffs,
+    *,
+    mesh: Mesh | None = None,
+    block_rows: int = BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Weighted −1/+1 vote masses per coordinate, C-sharded over ``mesh``.
+
+    Same staging contract as ``fanin_weighted_sum``; returns
+    (2, 4·R·LANES) fp32 [minus_mass, plus_mass], replicated.
+    """
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    c, rows, _ = stacked.shape
+    axis = _fanin_axis(mesh) if mesh is not None else None
+    fn = _build_vote(c, rows, block_rows, interp, mesh, axis)
+    return fn(jnp.asarray(stacked), jnp.asarray(coeffs, jnp.float32))
 
 
 def fanin_weighted_sum(

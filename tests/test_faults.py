@@ -1,10 +1,12 @@
 """Deterministic chaos layer: FaultSchedule reproducibility, the
 ChaosProxy's transparent / refuse / kill / throttle behaviors over real
-loopback sockets, and the RST abort discipline."""
+loopback sockets, the server→client pump in isolation, the Byzantine
+corrupt mode (re-CRC'd poisoned frames), and the RST abort discipline."""
 
 import socket
 import threading
 
+import numpy as np
 import pytest
 
 from repro.comm import (
@@ -20,6 +22,7 @@ from repro.comm import (
     send_frame,
 )
 from repro.comm.faults import DELAY, KILL, OK, REFUSE, abort_socket
+from repro.comm.wire import decode_update_leaves, encode_update
 
 BURSTY = dict(ge_p_good_bad=0.3, ge_p_bad_good=0.3, fault_good=0.05,
               fault_bad=0.8, p_kill=0.5, p_refuse=0.5, delay_s=0.001)
@@ -250,17 +253,24 @@ def test_proxy_kill_truncates_upload_mid_stream():
     cfg = FaultConfig(seed=4, chunk_bytes=256, ge_p_good_bad=0.9,
                       ge_p_bad_good=0.1, fault_bad=0.9, p_kill=0.9,
                       p_refuse=0.0, delay_s=0.0)
-    total = 4096
-    cid, off = _find_key(cfg, KILL, nbytes=total)
+    # the kill must land within the first 4096 bytes; the upload is larger
+    cid, off = _find_key(cfg, KILL, nbytes=4096)
     try:
         with ChaosProxy(addr, cfg) as proxy:
             h = _hello(cid)
+            # the body is a REAL frame: loopback can coalesce it with the
+            # HELLO into one recv, and _peek_hello feeds whole chunks to its
+            # decoder — raw garbage there would reset the connection before
+            # the schedule ever fires (a different, wrong failure).
+            body = pack_frame(FT_UPDATE, b"k" * 8000, {"client_id": cid})
+            sent = len(h) + len(body)
+            assert sent > off
             with pytest.raises((TransportError, OSError)):
                 with socket.create_connection(
                     ("127.0.0.1", proxy.port), timeout=10
                 ) as s:
                     s.sendall(h)
-                    s.sendall(b"k" * (total - len(h)))
+                    s.sendall(body)
                     s.shutdown(socket.SHUT_WR)
                     # drain until the RST surfaces client-side
                     while True:
@@ -272,7 +282,7 @@ def test_proxy_kill_truncates_upload_mid_stream():
                 threading.Event().wait(0.05)
             assert proxy.stats["killed"] >= 1
             assert received and received[0] <= off
-            assert received[0] < total
+            assert received[0] < sent
     finally:
         close()
 
@@ -351,3 +361,196 @@ def test_delay_action_is_counted_and_harmless():
             assert proxy.stats["delayed_chunks"] >= 1
     finally:
         close()
+
+
+# --------------------------------------------------------------------------
+# _pump_down in isolation: the server→client direction over socketpairs.
+# --------------------------------------------------------------------------
+
+
+def _idle_proxy():
+    """A proxy whose acceptor never fires — just a stats/_stop carrier for
+    driving the pumps directly over socketpairs."""
+    return ChaosProxy(("127.0.0.1", 1), FaultConfig(fault_good=0.0,
+                                                    fault_bad=0.0))
+
+
+def test_pump_down_forwards_bytes_and_half_close():
+    """Server bytes flow to the client verbatim (booked in bytes_down) and
+    the upstream's clean EOF is forwarded as a SHUT_WR half-close, not a
+    hard reset — the client can still finish reading buffered frames."""
+    up_pump, up_srv = socket.socketpair()
+    cn_pump, cn_cli = socket.socketpair()
+    with _idle_proxy() as proxy:
+        killed = threading.Event()
+        t = threading.Thread(target=proxy._pump_down,
+                             args=(up_pump, cn_pump, killed), daemon=True)
+        t.start()
+        body = b"s" * 5000
+        up_srv.sendall(body)
+        up_srv.shutdown(socket.SHUT_WR)
+        got = bytearray()
+        cn_cli.settimeout(10)
+        while True:
+            chunk = cn_cli.recv(1 << 16)
+            if not chunk:          # the forwarded half-close, a clean EOF
+                break
+            got += chunk
+        t.join(timeout=10)
+        assert not t.is_alive()
+        assert bytes(got) == body
+        assert proxy.stats["bytes_down"] == len(body)
+    for s in (up_pump, up_srv, cn_pump, cn_cli):
+        s.close()
+
+
+def test_pump_down_stops_on_killed_without_forwarding():
+    """A KILL elsewhere sets the event; the pump must exit at its next poll
+    and forward nothing more — the reset owns both directions."""
+    up_pump, up_srv = socket.socketpair()
+    cn_pump, cn_cli = socket.socketpair()
+    with _idle_proxy() as proxy:
+        killed = threading.Event()
+        killed.set()               # the kill landed before the pump started
+        up_srv.sendall(b"too late" * 64)
+        t = threading.Thread(target=proxy._pump_down,
+                             args=(up_pump, cn_pump, killed), daemon=True)
+        t.start()
+        t.join(timeout=10)
+        assert not t.is_alive()
+        assert proxy.stats["bytes_down"] == 0
+        cn_cli.setblocking(False)
+        with pytest.raises(BlockingIOError):
+            cn_cli.recv(1)         # nothing was forwarded client-side
+    for s in (up_pump, up_srv, cn_pump, cn_cli):
+        s.close()
+
+
+def test_pump_down_survives_already_dead_upstream():
+    """An upstream socket a KILL already closed raises on the very first
+    settimeout — the pump must return, never propagate."""
+    up_pump, up_srv = socket.socketpair()
+    cn_pump, cn_cli = socket.socketpair()
+    up_pump.close()                # simulates abort_socket racing the pump
+    with _idle_proxy() as proxy:
+        proxy._pump_down(up_pump, cn_pump, threading.Event())   # no raise
+        assert proxy.stats["bytes_down"] == 0
+    for s in (up_srv, cn_pump, cn_cli):
+        s.close()
+
+
+# --------------------------------------------------------------------------
+# Byzantine corrupt mode: poisoned but wire-valid frames.
+# --------------------------------------------------------------------------
+
+
+def _frame_sink():
+    """An upstream that decodes every frame off one connection and records
+    (ftype, payload, meta) — the server-eye view of proxied traffic."""
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(8)
+    srv.settimeout(0.1)
+    stop = threading.Event()
+    frames: list = []
+
+    def run():
+        while not stop.is_set():
+            try:
+                conn, _ = srv.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            conn.settimeout(10)
+            dec = FrameDecoder()
+            try:
+                while True:
+                    chunk = conn.recv(1 << 16)
+                    if not chunk:
+                        break
+                    for f in dec.feed(chunk):
+                        frames.append((f.ftype, f.payload, dict(f.meta)))
+            except (TransportError, OSError):
+                pass
+            finally:
+                conn.close()
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+
+    def close():
+        stop.set()
+        srv.close()
+        t.join(timeout=5)
+
+    return srv.getsockname(), frames, close
+
+
+def _send_update_via_proxy(proxy_port, cid, payload):
+    with socket.create_connection(("127.0.0.1", proxy_port), timeout=10) as s:
+        s.sendall(_hello(cid))
+        s.sendall(pack_frame(FT_UPDATE, payload,
+                             {"client_id": cid, "weight": 3.0}))
+        s.shutdown(socket.SHUT_WR)
+
+
+def _wait(frames, n, tries=200):
+    for _ in range(tries):
+        if len(frames) >= n:
+            return
+        threading.Event().wait(0.05)
+    raise AssertionError(f"sink saw {len(frames)} frames, wanted {n}")
+
+
+def test_corrupt_mode_poisons_update_but_stays_wire_valid():
+    """A corrupt_clients member's UPDATE is decoded in-path, sign-flipped,
+    and re-packed with a fresh CRC: the upstream parses a perfectly valid
+    frame whose CONTENT is the negation of what the client sent. The HELLO
+    and the frame meta ride through untouched."""
+    addr, frames, close = _frame_sink()
+    honest = np.arange(8, dtype=np.float32) + 1.0
+    payload = encode_update({"w": honest})
+    cfg = FaultConfig(fault_good=0.0, fault_bad=0.0,
+                      corrupt_clients=(3,), corrupt_kind="sign_flip",
+                      corrupt_seed=5)
+    try:
+        with ChaosProxy(addr, cfg) as proxy:
+            _send_update_via_proxy(proxy.port, 3, payload)
+            _wait(frames, 2)
+            assert proxy.stats["corrupted_frames"] == 1
+        hello_f, update_f = frames[0], frames[1]
+        assert hello_f[0] == FT_HELLO
+        assert hello_f[2]["client_id"] == 3      # attribution untouched
+        assert update_f[0] == FT_UPDATE
+        assert update_f[2]["weight"] == 3.0
+        assert update_f[1] != payload            # content was poisoned...
+        pairs = decode_update_leaves(update_f[1])   # ...but decodes cleanly
+        (path, leaf), = pairs
+        assert path.endswith("w")
+        np.testing.assert_array_equal(np.asarray(leaf), -honest)
+    finally:
+        close()
+
+
+def test_corrupt_mode_leaves_other_clients_byte_identical():
+    addr, frames, close = _frame_sink()
+    payload = encode_update({"w": np.ones(16, np.float32)})
+    cfg = FaultConfig(fault_good=0.0, fault_bad=0.0,
+                      corrupt_clients=(3,), corrupt_kind="sign_flip")
+    try:
+        with ChaosProxy(addr, cfg) as proxy:
+            _send_update_via_proxy(proxy.port, 7, payload)   # not in the set
+            _wait(frames, 2)
+            assert proxy.stats["corrupted_frames"] == 0
+        assert frames[1][0] == FT_UPDATE
+        assert frames[1][1] == payload           # byte-for-byte untouched
+    finally:
+        close()
+
+
+def test_corrupt_kind_validated_at_config_time():
+    with pytest.raises(ValueError, match="corrupt_kind"):
+        FaultConfig(corrupt_clients=(1,), corrupt_kind="frobnicate")
+    # no corrupt clients ⇒ the kind is never consulted
+    FaultConfig(corrupt_clients=(), corrupt_kind="frobnicate")

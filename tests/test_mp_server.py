@@ -140,6 +140,76 @@ def test_bad_args_rejected():
         run_socket_round(params, 1, quorum_frac=1.5)
 
 
+def test_validate_update_weight_meta_rejected():
+    """A missing / non-numeric / non-finite / negative weight meta is a
+    malformed frame: FrameError, which the handler maps onto the
+    "rejected" outcome — never a KeyError crash, never a poisoned
+    denominator."""
+    from repro.comm.transport import FT_UPDATE, Frame, FrameError
+    from repro.fed.mp_server import _validate_update
+
+    def update(meta):
+        meta = {"client_id": 3, **meta}
+        return Frame(ftype=FT_UPDATE, meta=meta, payload=b"x")
+
+    assert _validate_update(update({"weight": 12.5}), 3) == 12.5
+    assert _validate_update(update({"weight": 0}), 3) == 0.0  # empty shard ok
+    for bad in ({}, {"weight": None}, {"weight": "forty"},
+                {"weight": float("nan")}, {"weight": float("inf")},
+                {"weight": -1.0}):
+        with pytest.raises(FrameError, match="weight"):
+            _validate_update(update(bad), 3)
+
+
+def test_defended_round_quarantines_attackers_and_matches_honest_ref():
+    """The poison-smoke contract over real sockets: seeded nan_poison
+    attackers land, get outcome "quarantined", the extended ledger
+    balances, and the committed root aggregate is byte-identical to the
+    in-process reference over the HONEST survivors only."""
+    from repro.fed.attackers import AttackConfig, attacker_ids
+    from repro.fed.defense import DefenseConfig
+
+    n, n_atk = 5, 2
+    params = demo_params(seed=SEED + 2)
+    attack = AttackConfig(kind="nan_poison", n_attackers=n_atk, seed=SEED)
+    attackers = attacker_ids(attack, n)
+    res = run_socket_round(
+        params, n, seed=SEED + 2, mode="sync", timeout_s=TIMEOUT_S,
+        defense=DefenseConfig(enabled=True), attack=attack,
+        quorum_frac=(n - n_atk) / n,      # quarantined never count as landed
+    )
+    assert res.committed in ("full", "quorum")
+    assert {cid for cid, v in res.outcomes.items()
+            if v == "quarantined"} == set(attackers)
+    assert res.defense["quarantined_updates"] == n_atk
+    assert res.quarantined_update_bytes > 0
+    led = res.ledger()
+    assert led["balance_ok"]
+    assert (res.shipped_update_bytes
+            == res.ingested_update_bytes + res.dropped_update_bytes
+            + res.quarantined_update_bytes)
+    honest = sorted(set(range(n)) - set(attackers))
+    ref = run_inprocess_reference(params, n, seed=SEED + 2, mode="sync",
+                                  order=honest)
+    assert params_hash(res.params) == params_hash(ref)
+
+
+def test_defense_on_honest_socket_round_is_byte_identical():
+    """Defense on, no attackers: same root hash as the undefended round —
+    the gate inspects but never mutates."""
+    from repro.fed.defense import DefenseConfig
+
+    params = demo_params(seed=SEED + 3)
+    res = run_socket_round(params, 4, seed=SEED + 3, mode="sync",
+                           timeout_s=TIMEOUT_S,
+                           defense=DefenseConfig(enabled=True))
+    assert all(v == "ok" for v in res.outcomes.values())
+    assert res.defense["quarantined_updates"] == 0
+    assert res.ledger()["balance_ok"]
+    ref = run_inprocess_reference(params, 4, seed=SEED + 3, mode="sync")
+    assert params_hash(res.params) == params_hash(ref)
+
+
 def test_aggregate_value_is_weighted_mean():
     """Cross-check the in-process reference against a dense numpy weighted
     mean of the decoded client updates (loose tolerance: fused kernel sums

@@ -1,0 +1,577 @@
+"""Byzantine-robust ingest: the vote kernel vs its numpy oracle, robust
+aggregation rules (majority / trimmed_mean / median), the quarantine
+gate's reason taxonomy, the seeded attacker models, the extended ledger
+(shipped == ingested + dropped + quarantined), and the defense telemetry
+threaded through the simulation / async / fleet server paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.wire import (
+    decode_update_leaves, encode_update, tree_from_records,
+)
+from repro.core.ternary import TernaryTensor
+from repro.fed import FedConfig, FleetConfig, HierarchyConfig, run_fleet
+from repro.fed.aggregator import (
+    AGG_RULES, Aggregator, trimmed_mean, weighted_median,
+)
+from repro.fed.attackers import (
+    ATTACKS, AttackConfig, attacker_ids, poison_blob,
+)
+from repro.fed.defense import REASONS, DefenseConfig, UpdateGate
+from repro.fed.mp_server import client_update_blob, demo_params, params_hash
+from repro.fed.simulation import resolve_rule
+from repro.kernels.aggregate import LANES
+from repro.kernels.vote import (
+    majority_from_counts, packed_vote_counts, packed_vote_counts_ref,
+)
+
+SEED = 11
+
+
+def _valid_codes(rng, shape):
+    """Packed bytes whose four 2-bit fields are all valid codes {0,1,2}."""
+    codes = rng.integers(0, 3, size=shape + (4,), dtype=np.uint8)
+    return (codes[..., 0] | (codes[..., 1] << 2) | (codes[..., 2] << 4)
+            | (codes[..., 3] << 6))
+
+
+# --------------------------------------------------------------------------
+# Vote kernel vs numpy oracle.
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c,rows", [(1, 32), (3, 32), (8, 64), (16, 96)])
+def test_vote_kernel_matches_oracle(c, rows):
+    rng = np.random.default_rng(c * 100 + rows)
+    stacked = _valid_codes(rng, (c, rows, LANES))
+    coeffs = rng.uniform(0.5, 3.0, size=(c,)).astype(np.float32)
+    out = np.asarray(packed_vote_counts(
+        jnp.asarray(stacked), jnp.asarray(coeffs), interpret=True
+    ))
+    np.testing.assert_allclose(
+        out, packed_vote_counts_ref(stacked, coeffs), atol=1e-5
+    )
+
+
+def test_vote_zero_coeff_rows_contribute_nothing():
+    """Padding clients carry coeff 0 — even all-garbage bytes vanish."""
+    rng = np.random.default_rng(0)
+    stacked = _valid_codes(rng, (4, 32, LANES))
+    coeffs = np.array([1.5, 0.0, 0.0, 0.75], np.float32)
+    zeroed = stacked.copy()
+    zeroed[1:3] = 0xFF
+    a = np.asarray(packed_vote_counts(jnp.asarray(stacked),
+                                      jnp.asarray(coeffs), interpret=True))
+    b = np.asarray(packed_vote_counts(jnp.asarray(zeroed),
+                                      jnp.asarray(coeffs), interpret=True))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_majority_from_counts_strict_plurality():
+    #            -1 wins  +1 wins  tie±    zero wins  all-zero mass
+    counts = np.array([[3.0, 1.0, 2.0, 1.0, 0.0],
+                       [1.0, 3.0, 2.0, 1.0, 0.0]], np.float32)
+    votes = majority_from_counts(counts, total_coeff=5.0)
+    np.testing.assert_array_equal(votes, [-1, 1, 0, 0, 0])
+    # the degenerate empty aggregation: everything resolves to "don't move"
+    np.testing.assert_array_equal(
+        majority_from_counts(np.zeros((2, 4), np.float32), 0.0), np.zeros(4)
+    )
+
+
+# --------------------------------------------------------------------------
+# Robust rules end to end through the Aggregator.
+# --------------------------------------------------------------------------
+
+
+def test_majority_defeats_sign_flip_minority():
+    """f < C/2 sign-flippers (by vote weight) cannot move any coordinate:
+    the defended aggregate equals the honest-only majority EXACTLY."""
+    params = demo_params(seed=1)
+    honest = client_update_blob(params, 5, 3)
+    atk = AttackConfig(kind="sign_flip", n_attackers=4, seed=0)
+    flipped = poison_blob(honest, atk, client_id=0)
+    # chunk_c=4 with 9 adds: full chunks + a partial flush both engage
+    agg = Aggregator(chunk_c=4, rule="majority")
+    ref = Aggregator(chunk_c=4, rule="majority")
+    for _ in range(5):
+        agg.add(honest, weight=2.0)
+        ref.add(honest, weight=2.0)
+    for _ in range(4):
+        agg.add(flipped, weight=1.0)      # attacker mass 4 < honest mass 10
+    assert params_hash(agg.finalize()) == params_hash(ref.finalize())
+
+
+def test_majority_succumbs_to_flipping_majority():
+    """The flip side of the guarantee: with f > C/2 the vote moves — the
+    rule is a majority statistic, not magic."""
+    params = demo_params(seed=1)
+    honest = client_update_blob(params, 5, 3)
+    flipped = poison_blob(
+        honest, AttackConfig(kind="sign_flip", n_attackers=1), 0
+    )
+    agg = Aggregator(chunk_c=8, rule="majority")
+    ref = Aggregator(chunk_c=8, rule="majority")
+    agg.add(honest, weight=1.0)
+    ref.add(honest, weight=1.0)
+    for _ in range(3):
+        agg.add(flipped, weight=1.0)
+    assert params_hash(agg.finalize()) != params_hash(ref.finalize())
+
+
+def test_median_rule_ignores_scale_blowup_minority():
+    params = demo_params(seed=2)
+    honest = client_update_blob(params, 1, 7)
+    blown = poison_blob(
+        honest, AttackConfig(kind="scale_blowup", n_attackers=1), 0
+    )
+    agg = Aggregator(chunk_c=8, rule="median")
+    ref = Aggregator(chunk_c=8, rule="median")
+    for _ in range(4):
+        agg.add(honest, weight=1.0)
+        ref.add(honest, weight=1.0)
+    agg.add(blown, weight=1.0)
+    assert params_hash(agg.finalize()) == params_hash(ref.finalize())
+
+
+def test_weighted_median_and_trimmed_mean_primitives():
+    stack = np.array([[1.0, -5.0], [2.0, 0.0], [100.0, 5.0]], np.float32)
+    w = np.ones(3, np.float32)
+    np.testing.assert_array_equal(weighted_median(stack, w), [2.0, 0.0])
+    # one outlier trimmed per side: the middle row survives alone
+    np.testing.assert_allclose(
+        trimmed_mean(stack, w, trim_frac=0.34), [2.0, 0.0]
+    )
+    # weight mass moves the median: the heavy first row wins coordinate 0
+    np.testing.assert_array_equal(
+        weighted_median(stack, np.array([5.0, 1.0, 1.0], np.float32)),
+        [1.0, -5.0],
+    )
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError, match="rule"):
+        Aggregator(rule="geometric_median")
+    with pytest.raises(ValueError, match="trim_frac"):
+        Aggregator(trim_frac=0.5)
+    assert set(AGG_RULES) == {"mean", "majority", "trimmed_mean", "median"}
+    with pytest.raises(ValueError, match="fused_aggregation"):
+        resolve_rule(FedConfig(
+            fused_aggregation=False,
+            defense=DefenseConfig(enabled=True, rule="majority"),
+        ))
+    # defense off → the legacy mean regardless of the configured rule
+    assert resolve_rule(FedConfig())[0] == "mean"
+    assert resolve_rule(FedConfig(
+        defense=DefenseConfig(enabled=False, rule="median")
+    ))[0] == "mean"
+
+
+# --------------------------------------------------------------------------
+# The quarantine gate: every reason is reachable, honest traffic is not.
+# --------------------------------------------------------------------------
+
+
+def _gate(params, **kw):
+    kw.setdefault("enabled", True)
+    return UpdateGate(DefenseConfig(**kw), params)
+
+
+def test_gate_passes_honest_and_is_bit_exact_with_mean():
+    params = demo_params(seed=3)
+    blobs = [client_update_blob(params, cid, SEED) for cid in range(4)]
+    gate = _gate(params)
+    on, off = Aggregator(chunk_c=4), Aggregator(chunk_c=4)
+    for cid, b in enumerate(blobs):
+        assert gate.check(b).ok
+        on.add(b, weight=1.0 + cid)
+        off.add(b, weight=1.0 + cid)
+    # defense-on over honest clients never touches a byte: same aggregate
+    assert params_hash(on.finalize()) == params_hash(off.finalize())
+    t = gate.telemetry()
+    assert t["passed_updates"] == 4 and t["quarantined_updates"] == 0
+    assert t["passed_bytes"] == sum(len(b) for b in blobs)
+    assert t["reasons"] == {}
+
+
+def test_gate_reason_malformed():
+    gate = _gate(demo_params())
+    v = gate.check(b"\x00garbage that never framed")
+    assert not v.ok and v.reason == "malformed"
+    assert gate.reasons["malformed"] == 1
+
+
+def test_gate_reason_structure():
+    params = demo_params(seed=4)
+    gate = _gate(params)
+    # a perfectly valid update for a DIFFERENT model
+    alien = client_update_blob(demo_params(seed=4, d=32), 0, SEED)
+    v = gate.check(alien)
+    assert not v.ok and v.reason == "structure"
+
+
+def test_gate_nonfinite_checks_catch_every_nan_poison():
+    """nan_poison recall is 1.0 from the very first round — finiteness
+    needs no history. Which finiteness reason fires depends on whether a
+    poisoned raw-float leaf or a poisoned ternary scale is met first."""
+    params = demo_params(seed=5)
+    atk = AttackConfig(kind="nan_poison", n_attackers=3, seed=SEED)
+    gate = _gate(params)
+    for cid in range(3):
+        blob = poison_blob(client_update_blob(params, cid, SEED), atk, cid)
+        v = gate.check(blob)
+        assert not v.ok
+        assert v.reason in ("scale_nonfinite", "payload_nonfinite")
+    assert gate.quarantined_updates == 3
+
+
+def test_gate_reason_scale_nonfinite_on_pure_ternary_tree():
+    """With no raw-float leaves in the update, the ternary scale check is
+    the one that fires."""
+    params = demo_params(seed=5)
+    blob = client_update_blob(params, 0, SEED)
+    poisoned = []
+    for path, leaf in decode_update_leaves(blob, zero_copy=True):
+        if isinstance(leaf, TernaryTensor):
+            leaf = TernaryTensor(packed=np.asarray(leaf.packed),
+                                 w_q=np.full_like(np.asarray(leaf.w_q),
+                                                  np.inf),
+                                 shape=tuple(leaf.shape), dtype=leaf.dtype)
+        poisoned.append((path, leaf))
+    v = _gate(params).check(encode_update(tree_from_records(poisoned)))
+    assert not v.ok and v.reason == "scale_nonfinite"
+
+
+def test_gate_reason_scale_bound_needs_warm_history():
+    params = demo_params(seed=6)
+    honest = [client_update_blob(params, cid, SEED) for cid in range(3)]
+    blown = poison_blob(
+        honest[0], AttackConfig(kind="scale_blowup", n_attackers=1), 0
+    )
+    gate = _gate(params, min_history=2, scale_bound=10.0)
+    assert gate.check(blown).ok          # cold start: observe-only by design
+    for b in honest[1:]:
+        assert gate.check(b).ok
+    v = gate.check(blown)                # history warm: the bound is live
+    assert not v.ok and v.reason == "scale_bound"
+
+
+def test_gate_reason_code_plane():
+    params = demo_params(seed=7)
+    blob = client_update_blob(params, 0, SEED)
+    pairs = decode_update_leaves(blob, zero_copy=True)
+    poisoned = []
+    hit = False
+    for path, leaf in pairs:
+        if isinstance(leaf, TernaryTensor) and not hit:
+            packed = np.array(leaf.packed, dtype=np.uint8, copy=True)
+            packed.reshape(-1)[0] = 0xFF        # four reserved code-3 fields
+            leaf = TernaryTensor(packed=packed, w_q=np.asarray(leaf.w_q),
+                                 shape=tuple(leaf.shape), dtype=leaf.dtype)
+            hit = True
+        poisoned.append((path, leaf))
+    assert hit
+    v = _gate(params).check(encode_update(tree_from_records(poisoned)))
+    assert not v.ok and v.reason == "code_plane"
+
+
+def test_gate_reason_payload_nonfinite():
+    params = {"b": np.zeros(8, np.float32)}
+    gate = _gate(params)
+    assert gate.check(encode_update({"b": np.ones(8, np.float32)})).ok
+    bad = np.ones(8, np.float32)
+    bad[3] = np.nan
+    v = gate.check(encode_update({"b": bad}))
+    assert not v.ok and v.reason == "payload_nonfinite"
+    assert set(gate.reasons) <= set(REASONS)
+
+
+def test_defense_config_validation():
+    with pytest.raises(ValueError, match="rule"):
+        DefenseConfig(rule="krum")
+    with pytest.raises(ValueError, match="scale_bound"):
+        DefenseConfig(scale_bound=1.0)
+    with pytest.raises(ValueError, match="min_history"):
+        DefenseConfig(min_history=0)
+    with pytest.raises(ValueError, match="trim_frac"):
+        DefenseConfig(trim_frac=0.5)
+
+
+# --------------------------------------------------------------------------
+# Attacker models: seeded, wire-valid, reproducible.
+# --------------------------------------------------------------------------
+
+
+def test_attacker_blobs_stay_wire_valid():
+    params = demo_params(seed=8)
+    honest = client_update_blob(params, 0, SEED)
+    honest_paths = [p for p, _ in decode_update_leaves(honest)]
+    for kind in ATTACKS:
+        atk = AttackConfig(kind=kind, n_attackers=1, seed=SEED)
+        blob = poison_blob(honest, atk, client_id=0)
+        pairs = decode_update_leaves(blob)       # framing + CRC still hold
+        assert [p for p, _ in pairs] == honest_paths
+        assert blob != honest
+
+
+def test_sign_flip_is_an_involution():
+    """Flip twice ⇒ byte-identical to the honest encoding — the reserved
+    code never appears and the re-encode is deterministic."""
+    params = demo_params(seed=9)
+    honest = client_update_blob(params, 2, SEED)
+    atk = AttackConfig(kind="sign_flip", n_attackers=1, seed=SEED)
+    once = poison_blob(honest, atk, client_id=2)
+    assert once != honest
+    assert poison_blob(once, atk, client_id=2) == honest
+
+
+def test_collude_cohort_ships_identical_bytes():
+    params = demo_params(seed=9)
+    honest = client_update_blob(params, 0, SEED)
+    atk = AttackConfig(kind="collude", n_attackers=2, seed=SEED)
+    a = poison_blob(honest, atk, client_id=0, round_idx=1)
+    b = poison_blob(honest, atk, client_id=17, round_idx=1)
+    assert a == b                       # keyed on the round, not the client
+    # gaussian attackers are independent: same inputs, different clients
+    g = AttackConfig(kind="gaussian", n_attackers=2, seed=SEED)
+    assert poison_blob(honest, g, 0) != poison_blob(honest, g, 17)
+
+
+def test_attacker_ids_seeded_and_bounded():
+    cfg = AttackConfig(kind="sign_flip", n_attackers=5, seed=3)
+    ids = attacker_ids(cfg, 16)
+    assert ids == attacker_ids(cfg, 16)
+    assert len(ids) == 5 and all(0 <= i < 16 for i in ids)
+    assert len(attacker_ids(cfg, 3)) == 3          # clamped to the cohort
+    assert attacker_ids(AttackConfig(n_attackers=0), 16) == frozenset()
+
+
+def test_attack_config_validation():
+    with pytest.raises(ValueError, match="kind"):
+        AttackConfig(kind="rootkit")
+    with pytest.raises(ValueError, match="n_attackers"):
+        AttackConfig(n_attackers=-1)
+    with pytest.raises(ValueError, match="blowup"):
+        AttackConfig(blowup=1.0)
+
+
+# --------------------------------------------------------------------------
+# The extended ledger on one Aggregator (property: note_* interleaving
+# over bucket boundaries never perturbs the aggregate).
+# --------------------------------------------------------------------------
+
+
+def test_aggregator_ledger_interleaved_over_bucket_boundaries():
+    params = demo_params(seed=10)
+    blobs = [client_update_blob(params, cid, SEED) for cid in range(3)]
+    rng = np.random.default_rng(42)
+    agg = Aggregator(chunk_c=4)
+    ref = Aggregator(chunk_c=4)
+    dropped = quarantined = 0
+    dropped_b = quarantined_b = 0
+    adds = []
+    # 23 adds: crosses the partial buckets 1→2→4 and several full chunks,
+    # with drop/quarantine notes landing between partial adds
+    for step in range(40):
+        op = int(rng.integers(4))
+        blob = blobs[step % 3]
+        if op <= 1 and len(adds) < 23:
+            w = 1.0 + step % 5
+            agg.add(blob, weight=w)
+            adds.append((blob, w))
+        elif op == 2:
+            agg.note_dropped(len(blob))
+            dropped += 1
+            dropped_b += len(blob)
+        else:
+            agg.note_quarantined(len(blob))
+            quarantined += 1
+            quarantined_b += len(blob)
+        assert agg.dropped_updates == dropped
+        assert agg.dropped_bytes == dropped_b
+        assert agg.quarantined_updates == quarantined
+        assert agg.quarantined_bytes == quarantined_b
+    assert dropped and quarantined       # the interleave really happened
+    for blob, w in adds:
+        ref.add(blob, weight=w)
+    assert agg.n_clients == len(adds)
+    out = agg.finalize(reset=True)
+    assert params_hash(out) == params_hash(ref.finalize())
+    # reset clears the aggregation, NOT the run-level waste ledger
+    assert agg.n_clients == 0
+    assert agg.dropped_updates == dropped
+    assert agg.quarantined_updates == quarantined
+    agg.note_quarantined(100)
+    assert agg.quarantined_bytes == quarantined_b + 100
+    # shipped == ingested + dropped + quarantined, in bytes
+    shipped = sum(len(b) for b, _ in adds) + dropped_b + quarantined_b + 100
+    ingested = sum(len(b) for b, _ in adds)
+    assert shipped == ingested + agg.dropped_bytes + agg.quarantined_bytes
+
+
+# --------------------------------------------------------------------------
+# Server paths: the defense telemetry + extended ledger in fleet
+# sync/async/tier, then the training simulation paths (sync/async).
+# The socket path's ledger lives in test_mp_server.py.
+# --------------------------------------------------------------------------
+
+
+def _fleet_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "dense": {"w": rng.standard_normal((48, 16)).astype(np.float32),
+                  "b": np.zeros(16, np.float32)},
+    }
+
+
+def _fleet_cfg(**kw):
+    base = dict(n_clients=400, rounds=2, participation=0.2,
+                attack=AttackConfig(kind="nan_poison", n_attackers=120,
+                                    seed=5),
+                defense=DefenseConfig(enabled=True))
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def test_fleet_sync_quarantines_and_balances_ledger():
+    res = run_fleet(_fleet_params(), _fleet_cfg())
+    d = res.telemetry["defense"]
+    assert d["enabled"] and d["ledger_balanced"]
+    assert d["quarantined_updates"] > 0
+    assert sum(d["reasons"].values()) == d["quarantined_updates"]
+    assert set(d["reasons"]) <= {"scale_nonfinite", "payload_nonfinite"}
+    assert res.final_update is not None          # survivors still aggregate
+
+
+def test_fleet_tier_quarantines_and_balances_ledger():
+    res = run_fleet(_fleet_params(),
+                    _fleet_cfg(hierarchy=HierarchyConfig(n_edges=4)))
+    d = res.telemetry["defense"]
+    assert d["ledger_balanced"] and d["quarantined_updates"] > 0
+    hier = res.telemetry["hierarchy"]
+    assert hier["quarantined_updates"] > 0
+    assert hier["ledger_balanced"]
+
+
+def test_fleet_async_quarantines_and_balances_ledger():
+    res = run_fleet(_fleet_params(),
+                    _fleet_cfg(mode="async", rounds=3, buffer_k=8))
+    d = res.telemetry["defense"]
+    assert d["ledger_balanced"] and d["quarantined_updates"] > 0
+
+
+def test_fleet_defense_off_matches_legacy_bit_for_bit():
+    """attack=None + defense=None is the pre-defense fleet: same rounds,
+    same bytes, same final update as a config that never mentions them."""
+    legacy = run_fleet(_fleet_params(), FedConfig(
+        n_clients=400, rounds=2, participation=0.2))
+    off = run_fleet(_fleet_params(), FedConfig(
+        n_clients=400, rounds=2, participation=0.2,
+        defense=DefenseConfig(enabled=False)))
+    assert legacy.upload_bytes == off.upload_bytes
+    assert legacy.round_times == off.round_times
+    assert params_hash(legacy.final_update) == params_hash(off.final_update)
+    assert "defense" not in off.telemetry
+
+
+def test_fleet_majority_rule_survives_collude_minority():
+    res = run_fleet(_fleet_params(), _fleet_cfg(
+        attack=AttackConfig(kind="collude", n_attackers=100, seed=5),
+        defense=DefenseConfig(enabled=True, rule="majority"),
+    ), FleetConfig(compat=False))
+    d = res.telemetry["defense"]
+    # collude is gate-invisible (flips are plausible payloads) ...
+    assert d["quarantined_updates"] == 0 and d["ledger_balanced"]
+    # ... but the vote still produced a finite aggregate
+    leaves = jax.tree_util.tree_leaves(res.final_update)
+    assert all(np.isfinite(np.asarray(leaf)).all() for leaf in leaves)
+
+
+# --------------------------------------------------------------------------
+# The training simulation paths.
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sim_task():
+    from repro.data import partition_iid, synthetic_classification
+    from repro.models.paper_models import init_mlp_mnist, mlp_mnist
+
+    x, y, xt, yt = synthetic_classification(
+        jax.random.PRNGKey(0), 600, 10, 784, noise=3.0, n_test=100
+    )
+    clients = partition_iid(x, y, 4)
+    params = init_mlp_mnist(jax.random.PRNGKey(1))
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+
+    def eval_fn(p):
+        logits = mlp_mnist(p, xt_j)
+        acc = jnp.mean(jnp.argmax(logits, -1) == yt_j)
+        return float(acc), 0.0
+
+    return clients, params, eval_fn, mlp_mnist
+
+
+def _sim_cfg(**kw):
+    base = dict(algorithm="tfedavg", participation=1.0, local_epochs=1,
+                batch_size=64, rounds=2)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def test_sim_sync_quarantines_attackers_and_balances_ledger(sim_task):
+    from repro.fed import run_federated
+    from repro.optim import adam
+
+    clients, params, eval_fn, apply_fn = sim_task
+    cfg = _sim_cfg(attack=AttackConfig(kind="nan_poison", n_attackers=1,
+                                       seed=2),
+                   defense=DefenseConfig(enabled=True))
+    res = run_federated(apply_fn, params, clients, cfg, adam(1e-3),
+                        eval_fn, eval_every=2)
+    d = res.telemetry["defense"]
+    assert d["enabled"] and d["ledger_balanced"]
+    # one attacker per round, participation 1.0, lossless default channel:
+    # its upload arrives and is quarantined every round
+    assert d["quarantined_updates"] == cfg.rounds
+    assert d["passed_updates"] == cfg.rounds * (len(clients) - 1)
+    assert res.rounds_run == cfg.rounds
+
+
+def test_sim_sync_defense_on_honest_matches_defense_off(sim_task):
+    """The gate never mutates accepted payloads and draws no randomness:
+    an all-honest defended run replays the undefended run exactly."""
+    from repro.fed import run_federated
+    from repro.optim import adam
+
+    clients, params, eval_fn, apply_fn = sim_task
+    off = run_federated(apply_fn, params, clients, _sim_cfg(), adam(1e-3),
+                        eval_fn, eval_every=1)
+    on = run_federated(apply_fn, params, clients,
+                       _sim_cfg(defense=DefenseConfig(enabled=True)),
+                       adam(1e-3), eval_fn, eval_every=1)
+    assert on.accuracy == off.accuracy
+    assert on.upload_bytes == off.upload_bytes
+    assert on.round_times == off.round_times
+    d = on.telemetry["defense"]
+    assert d["quarantined_updates"] == 0 and d["ledger_balanced"]
+
+
+def test_sim_async_gates_before_staleness_and_balances_ledger(sim_task):
+    from repro.fed import run_federated
+    from repro.optim import adam
+
+    clients, params, eval_fn, apply_fn = sim_task
+    cfg = _sim_cfg(mode="async", rounds=3, buffer_k=2,
+                   attack=AttackConfig(kind="nan_poison", n_attackers=1,
+                                       seed=2),
+                   defense=DefenseConfig(enabled=True))
+    res = run_federated(apply_fn, params, clients, cfg, adam(1e-3),
+                        eval_fn, eval_every=3)
+    d = res.telemetry["defense"]
+    assert d["ledger_balanced"]
+    assert d["quarantined_updates"] > 0
+    assert res.rounds_run == 3
