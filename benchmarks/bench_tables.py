@@ -151,3 +151,24 @@ def sparsity_report():
     st = ternary_stats(params, FTTQ)
     return [("fttq_ternary_sparsity", 0.0, round(st["ternary_sparsity"], 4)),
             ("fttq_quantized_fraction", 0.0, round(st["quantized_fraction"], 4))]
+
+
+def readme_tables() -> str:
+    """The README's generated tables, rendered from the committed
+    ``benchmarks/baselines/BENCH_adaptive.json``. Delegates to the
+    ``check_docs`` renderers so regeneration and the lint-job drift gate
+    can never disagree; write them back into the marked README spans
+    with ``python benchmarks/check_docs.py --render``."""
+    import json
+
+    from benchmarks.check_docs import (
+        BASELINE, render_adaptive_table, render_codec_table,
+    )
+
+    record = json.loads(BASELINE.read_text())
+    return (render_codec_table(record) + "\n\n"
+            + render_adaptive_table(record))
+
+
+if __name__ == "__main__":
+    print(readme_tables())

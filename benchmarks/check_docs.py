@@ -1,0 +1,216 @@
+"""Docs drift gate (stdlib-only — runs in the lint CI job, no jax).
+
+Three checks, exit 1 on any failure:
+
+1. **Markdown links**: every relative link target in the repo-root
+   ``*.md`` files and ``docs/*.md`` must exist on disk (anchors stripped;
+   external ``scheme://`` links are not fetched).
+2. **README tables**: the codec and adaptive-compression tables in
+   ``README.md`` (between ``<!-- codec-table -->`` /
+   ``<!-- adaptive-table -->`` marker comments) must byte-match the
+   tables rendered from the committed
+   ``benchmarks/baselines/BENCH_adaptive.json`` — edit the bench, rerun
+   it, re-baseline, and regenerate (``python benchmarks/check_docs.py
+   --render``) rather than hand-editing numbers.
+   ``benchmarks/bench_tables.readme_tables()`` delegates to the same
+   renderers, so "regenerate the README tables" and "what the gate
+   expects" cannot diverge.
+3. **Wire spec**: ``docs/WIRE_FORMAT.md`` must quote the live format
+   constants (magic, header struct, version set), and the frozen
+   ``tests/data/wire_v1_update.bin`` capture must still parse as the v1
+   header the spec describes (magic/version/CRC/body length).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import struct
+import sys
+import zlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE = ROOT / "benchmarks" / "baselines" / "BENCH_adaptive.json"
+README = ROOT / "README.md"
+WIRE_SPEC = ROOT / "docs" / "WIRE_FORMAT.md"
+FIXTURE = ROOT / "tests" / "data" / "wire_v1_update.bin"
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+# --- table renderers (pure functions of the committed bench record) -------
+
+_CODEC_ORDER = ("none", "ternary", "fp16", "bf16", "topk", "topk16")
+_CODEC_META = {
+    "none": ("raw array", "FedAvg baseline (fp32 on the wire)"),
+    "ternary": ("`TernaryTensor`", "FTTQ 2-bit codes + trained scale"),
+    "fp16": ("`DowncastTensor`", "half downcast, upcasts on decode"),
+    "bf16": ("`DowncastTensor`", "bfloat16 downcast"),
+    "topk": ("`TopKTensor`", "top-5% by magnitude, varint-delta indices"),
+    "topk16": ("`TopKTensor`", "top-5% composed with fp16 values"),
+}
+
+
+def render_codec_table(record: dict) -> str:
+    """Codec bytes/param table from ``codec_bytes_per_param``."""
+    rows = record["codec_bytes_per_param"]
+    lines = [
+        "| codec | wire leaf | bytes/param | vs fp32 | notes |",
+        "|-------|-----------|------------:|--------:|-------|",
+    ]
+    for kind in _CODEC_ORDER:
+        if kind not in rows:
+            continue
+        leaf, note = _CODEC_META[kind]
+        r = rows[kind]
+        lines.append(
+            f"| `{kind}` | {leaf} | {r['bytes_per_param']:.4f} "
+            f"| {r['ratio_vs_fp32']:.2f}× | {note} |"
+        )
+    return "\n".join(lines)
+
+
+def render_adaptive_table(record: dict) -> str:
+    """Bytes-to-target table from the static/adaptive run summaries."""
+    lines = [
+        "| upstream policy | bytes to target | rounds | total upload B "
+        "| best accuracy |",
+        "|-----------------|----------------:|-------:|---------------:"
+        "|--------------:|",
+    ]
+    for label, key in (("static ternary", "static"),
+                       ("adaptive + error feedback", "adaptive")):
+        r = record[key]
+        lines.append(
+            f"| {label} | {r['bytes_to_target']:,} "
+            f"| {r['rounds_to_target'] + 1} | {r['total_upload_bytes']:,} "
+            f"| {r['best_accuracy']:.3f} |"
+        )
+    lines.append(
+        f"\nTarget accuracy {record['target_accuracy']} "
+        f"(0.95× the static run's best); adaptive reached it with "
+        f"**{record['bytes_ratio']:.2f}×** the static upstream bytes."
+    )
+    return "\n".join(lines)
+
+
+_TABLES = {
+    "codec-table": render_codec_table,
+    "adaptive-table": render_adaptive_table,
+}
+
+
+def _marked_span(text: str, name: str) -> tuple[int, int] | None:
+    begin, end = f"<!-- {name}:begin -->", f"<!-- {name}:end -->"
+    i = text.find(begin)
+    j = text.find(end)
+    if i < 0 or j < 0:
+        return None
+    return i + len(begin), j
+
+
+def check_tables(errors: list[str]) -> None:
+    record = json.loads(BASELINE.read_text())
+    text = README.read_text()
+    for name, render in _TABLES.items():
+        span = _marked_span(text, name)
+        if span is None:
+            errors.append(f"README.md: missing <!-- {name}:begin/end --> markers")
+            continue
+        got = text[span[0]:span[1]].strip()
+        want = render(record).strip()
+        if got != want:
+            errors.append(
+                f"README.md: {name} drifted from "
+                f"benchmarks/baselines/BENCH_adaptive.json — regenerate with "
+                f"`python benchmarks/check_docs.py --render`"
+            )
+
+
+def check_links(errors: list[str]) -> None:
+    md_files = sorted(ROOT.glob("*.md")) + sorted((ROOT / "docs").glob("*.md"))
+    for md in md_files:
+        for m in _LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if "://" in target or target.startswith(("#", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists() and not (ROOT / rel).exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+
+
+# constants the spec must quote verbatim (mirrors comm/wire + transport +
+# kernels/pack2bit — change the code, change the doc, or this fails).
+_SPEC_LITERALS = (
+    'b"TFW1"',          # wire magic
+    "<4sHHIIQ",         # 24-byte wire header struct
+    'b"TFT1"',          # transport frame magic
+    "<4sBBHQ",          # 16-byte transport frame header struct
+    "TOPK_DELTA",
+    "LEB128",
+)
+_WIRE_HEADER = struct.Struct("<4sHHIIQ")
+
+
+def check_wire_spec(errors: list[str]) -> None:
+    if not WIRE_SPEC.exists():
+        errors.append("docs/WIRE_FORMAT.md missing")
+        return
+    spec = WIRE_SPEC.read_text()
+    for lit in _SPEC_LITERALS:
+        if lit not in spec:
+            errors.append(f"docs/WIRE_FORMAT.md: does not mention {lit!r}")
+    blob = FIXTURE.read_bytes()
+    magic, version, flags, n_records, crc, body_len = _WIRE_HEADER.unpack_from(blob)
+    body = blob[_WIRE_HEADER.size:]
+    if magic != b"TFW1" or version != 1 or flags != 0:
+        errors.append(f"wire_v1_update.bin: header {magic!r} v{version} "
+                      f"flags={flags} does not match the spec'd v1 layout")
+    if len(body) != body_len or zlib.crc32(body) != crc:
+        errors.append("wire_v1_update.bin: body length / CRC32 do not match "
+                      "the header — frozen capture corrupted")
+    if f"{n_records} records" not in spec:
+        errors.append(
+            f"docs/WIRE_FORMAT.md: frozen-capture walkthrough does not state "
+            f"'{n_records} records' (fixture header says {n_records})"
+        )
+
+
+def render() -> None:
+    """Rewrite the marked README spans from the committed baseline."""
+    record = json.loads(BASELINE.read_text())
+    text = README.read_text()
+    for name, render_fn in _TABLES.items():
+        span = _marked_span(text, name)
+        if span is None:
+            raise SystemExit(f"README.md: missing {name} markers")
+        text = text[:span[0]] + "\n" + render_fn(record) + "\n" + text[span[1]:]
+    README.write_text(text)
+    print("README.md tables regenerated")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--render", action="store_true",
+                    help="rewrite the marked README tables, then exit")
+    args = ap.parse_args()
+    if args.render:
+        render()
+        return
+    errors: list[str] = []
+    check_links(errors)
+    check_tables(errors)
+    check_wire_spec(errors)
+    if errors:
+        print(f"[docs] FAIL — {len(errors)} problem(s):")
+        for e in errors:
+            print(f"  - {e}")
+        sys.exit(1)
+    print("[docs] OK — links, README tables, wire spec all in sync")
+
+
+if __name__ == "__main__":
+    main()

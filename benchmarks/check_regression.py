@@ -33,7 +33,7 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
 RECORDS = ("BENCH_aggregate.json", "BENCH_encode.json",
            "BENCH_hierarchy.json", "BENCH_serve.json", "BENCH_chaos.json",
-           "BENCH_robust.json")
+           "BENCH_robust.json", "BENCH_adaptive.json")
 THRESHOLD = 2.0
 # Sub-5ms timings are runner-speed lottery (a dev-machine baseline vs a CI
 # runner can legitimately differ >2x at the 100µs scale); the structural
@@ -65,6 +65,25 @@ def _timing_leaves(obj, prefix=""):
     return out
 
 
+def _adaptive_gate(record: dict) -> list[str]:
+    """ISSUE acceptance gate on ``BENCH_adaptive.json``: the adaptive
+    controller must reach the target accuracy at equal or fewer upstream
+    bytes than static ternary. Checked from the record (not just inside
+    the bench) so a silently-edited JSON cannot pass."""
+    try:
+        a = record["adaptive"]["bytes_to_target"]
+        s = record["static"]["bytes_to_target"]
+    except (KeyError, TypeError):
+        return ["BENCH_adaptive.json: bytes_to_target fields missing"]
+    print(f"[gate] BENCH_adaptive.json: adaptive {a} B <= static {s} B "
+          f"to target acc {record.get('target_accuracy')} "
+          f"({'ok' if a <= s else 'REGRESSION'})")
+    if a > s:
+        return [f"BENCH_adaptive.json: adaptive needed MORE upstream bytes "
+                f"to target accuracy ({a} > {s})"]
+    return []
+
+
 def check(threshold: float = THRESHOLD) -> int:
     failures = []
     compared = 0
@@ -77,8 +96,11 @@ def check(threshold: float = THRESHOLD) -> int:
         if not cur_path.exists():
             failures.append(f"{name}: record missing (bench did not run?)")
             continue
+        cur_record = json.loads(cur_path.read_text())
+        if name == "BENCH_adaptive.json":
+            failures.extend(_adaptive_gate(cur_record))
         base = _timing_leaves(json.loads(base_path.read_text()))
-        cur = _timing_leaves(json.loads(cur_path.read_text()))
+        cur = _timing_leaves(cur_record)
         for key, b in sorted(base.items()):
             if b < MIN_SECONDS:
                 continue

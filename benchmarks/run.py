@@ -21,9 +21,9 @@ from repro.launch.env import pin_runtime
 pin_runtime()
 
 from benchmarks import (  # noqa: E402
-    bench_aggregate, bench_chaos, bench_encode, bench_hierarchy,
-    bench_kernels, bench_robust, bench_serve, bench_tables, bench_wire,
-    roofline,
+    bench_adaptive, bench_aggregate, bench_chaos, bench_encode,
+    bench_hierarchy, bench_kernels, bench_robust, bench_serve, bench_tables,
+    bench_wire, roofline,
 )
 
 SECTIONS = {
@@ -36,6 +36,7 @@ SECTIONS = {
     "serve": bench_serve.serve_under_load,
     "chaos": bench_chaos.chaos_sweep,
     "robust": bench_robust.robust_grid,
+    "adaptive": bench_adaptive.adaptive_bytes_to_target,
     "kernel_peak": roofline.kernel_peak_table,
     "table2": bench_tables.table2_iid_accuracy,
     "table3": bench_tables.table3_noniid,

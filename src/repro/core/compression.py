@@ -355,11 +355,33 @@ class TopKCodec:
         return wire_leaf.densify()
 
 
+class TopKDowncastCodec(TopKCodec):
+    """Composed top-k → downcast: the sparsification of ``TopKCodec`` with
+    the surviving VALUES narrowed to fp16 on the wire (indices stay uint32
+    varint-gaps). Roughly halves the value bytes of plain top-k; with error
+    feedback the extra rounding error joins the residual stream, so the
+    composition stays unbiased in the long run. Same ``TopKTensor`` leaf /
+    TOPK_DELTA record — decoders cannot tell the two codecs apart.
+    """
+
+    name = "topk16"
+
+    def encode_leaf(self, leaf, spec):
+        t = super().encode_leaf(leaf, spec)
+        return TopKTensor(
+            indices=t.indices,
+            values=t.values.astype(jnp.float16),
+            shape=t.shape,
+            dtype=t.dtype,
+        )
+
+
 register_codec(NoneCodec())
 register_codec(TernaryCodec())
 register_codec(DowncastCodec("fp16", jnp.float16))
 register_codec(DowncastCodec("bf16", jnp.bfloat16))
 register_codec(TopKCodec())
+register_codec(TopKDowncastCodec())
 
 
 # --------------------------------------------------------------------------

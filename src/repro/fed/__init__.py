@@ -1,8 +1,12 @@
 """Federated learning runtime: the paper's round-based protocol (selection →
 configuration → reporting), FedAvg and T-FedAvg, over a real wire/transport
 model (``repro.comm``) with channel-emergent straggler mitigation — plus an
-event-driven buffered-asynchronous server (FedBuf-style). ``run_federated``
-is the unified entry point; ``cfg.mode`` picks "sync" or "async"."""
+event-driven buffered-asynchronous server (FedBuf-style), Byzantine
+defense, a hierarchical edge tier, the vectorized fleet simulator, and the
+adaptive compression controller (``fed.controller``). ``run_federated`` is
+the unified entry point; ``cfg.mode`` picks "sync" or "async". See
+``docs/ARCHITECTURE.md`` for the module map and per-server round
+lifecycle."""
 
 from repro.fed.aggregator import AGG_RULES, Aggregator
 from repro.fed.attackers import ATTACKS, AttackConfig, attacker_ids, poison_blob
@@ -15,6 +19,12 @@ from repro.fed.availability import (
     make_availability,
 )
 from repro.fed.async_server import run_federated_async
+from repro.fed.controller import (
+    CompressionController,
+    ControllerConfig,
+    FleetCohortController,
+    make_controller,
+)
 from repro.fed.defense import DefenseConfig, UpdateGate, Verdict
 from repro.fed.fleet import EventHeap, FleetConfig, FleetResult, run_fleet
 from repro.fed.mp_server import (
@@ -40,4 +50,6 @@ __all__ = [
     "SocketRoundResult", "run_socket_round", "run_inprocess_reference",
     "AGG_RULES", "ATTACKS", "AttackConfig", "attacker_ids", "poison_blob",
     "DefenseConfig", "UpdateGate", "Verdict",
+    "CompressionController", "ControllerConfig", "FleetCohortController",
+    "make_controller",
 ]

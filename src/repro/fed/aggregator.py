@@ -186,6 +186,11 @@ class Aggregator:
         self._plans: dict[str, _LeafPlan] = {}
         self._groups: dict[tuple[str, int], _Group] = {}
         self._fallback: dict[str, np.ndarray] = {}
+        # paths whose fallback accumulator received adds SINCE THE LAST
+        # reset — a long-lived aggregator keeps (zeroed) accumulators from
+        # past mixed-codec mixes, and finalize must not fold those into
+        # later pure-ternary mixes.
+        self._fallback_touched: set[str] = set()
         self._fallback_dtype: dict[str, Any] = {}
         self._buffers: dict[tuple[int, int], np.ndarray] = {}  # reusable
         self._pending = 0
@@ -286,6 +291,21 @@ class Aggregator:
 
     def _add_leaf(self, path: str, leaf, weight: float) -> None:
         plan = self._plans[path]
+        if plan.fused and not isinstance(leaf, TernaryTensor):
+            # mixed-codec round: this client shipped a different wire kind
+            # (top-k, downcast, raw) for a path planned fused off an earlier
+            # ternary client. The weighted MEAN is additive, so the leaf
+            # detours through the dense fallback accumulator and finalize
+            # sums the fused partial with it; the order-statistic rules have
+            # no such decomposition — refuse loudly rather than vote wrong.
+            if self.rule != "mean":
+                raise ValueError(
+                    f"leaf {path!r}: mixed wire kinds under rule "
+                    f"{self.rule!r} (only 'mean' aggregates mixed-codec "
+                    "rounds; pin one codec per round for robust rules)"
+                )
+            self._add_fallback(path, leaf, weight)
+            return
         if plan.fused:
             t: TernaryTensor = leaf
             if tuple(int(s) for s in t.shape) != plan.shape:
@@ -308,23 +328,27 @@ class Aggregator:
                 else:
                     g.coeffs.append(weight * float(scale[s if scale.size > 1 else 0]))
         else:
-            dense = np.asarray(decode_wire_leaf(leaf))
-            if path not in self._fallback_dtype:
-                # reference promotion: float leaves keep their dtype under a
-                # python-float weight, int leaves promote to float32.
-                self._fallback_dtype[path] = (
-                    dense.dtype if jnp.issubdtype(dense.dtype, jnp.floating)
-                    else np.dtype(np.float32)
-                )
-            if self.rule == "mean":
-                if path not in self._fallback:
-                    self._fallback[path] = np.zeros(dense.shape, np.float32)
-                self._fallback[path] += weight * dense.astype(np.float32)
-            else:
-                # robust order statistics need the whole per-client sample.
-                self._client_dense.setdefault(path, []).append(
-                    (weight, dense.astype(np.float32))
-                )
+            self._add_fallback(path, leaf, weight)
+
+    def _add_fallback(self, path: str, leaf, weight: float) -> None:
+        dense = np.asarray(decode_wire_leaf(leaf))
+        if path not in self._fallback_dtype:
+            # reference promotion: float leaves keep their dtype under a
+            # python-float weight, int leaves promote to float32.
+            self._fallback_dtype[path] = (
+                dense.dtype if jnp.issubdtype(dense.dtype, jnp.floating)
+                else np.dtype(np.float32)
+            )
+        if self.rule == "mean":
+            if path not in self._fallback:
+                self._fallback[path] = np.zeros(dense.shape, np.float32)
+            self._fallback[path] += weight * dense.astype(np.float32)
+            self._fallback_touched.add(path)
+        else:
+            # robust order statistics need the whole per-client sample.
+            self._client_dense.setdefault(path, []).append(
+                (weight, dense.astype(np.float32))
+            )
 
     # -- kernel launches ---------------------------------------------------
 
@@ -399,6 +423,7 @@ class Aggregator:
             g.scale_samples.clear()
         for acc in self._fallback.values():
             acc.fill(0.0)
+        self._fallback_touched.clear()
         for samples in self._client_dense.values():
             samples.clear()
         self._pending = 0
@@ -432,12 +457,20 @@ class Aggregator:
                 flat = parts[0] if len(parts) == 1 else np.concatenate(parts)
                 leaf = jnp.asarray(flat.reshape(plan.shape)).astype(plan.dtype)
             elif plan.fused:
-                parts = [
-                    self._groups[(path, s)].partial
-                    [: self._groups[(path, s)].n_elements]
-                    for s in range(plan.n_segments)
-                ]
+                parts = []
+                for s in range(plan.n_segments):
+                    g = self._groups[(path, s)]
+                    # a mixed-codec round may leave a fused group empty
+                    # (every client detoured to the fallback): zero partial.
+                    parts.append(
+                        g.partial[: g.n_elements] if g.partial is not None
+                        else jnp.zeros((g.n_elements,), jnp.float32)
+                    )
                 flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+                if path in self._fallback_touched:
+                    # mixed-codec detours accumulated Σ w·dense here; the
+                    # weighted mean is additive across the two routes.
+                    flat = flat + jnp.asarray(self._fallback[path].reshape(-1))
                 leaf = (flat * inv).reshape(plan.shape).astype(plan.dtype)
             elif self.rule == "mean":
                 acc = self._fallback[path] * np.float32(inv)

@@ -67,6 +67,7 @@ from repro.data.federated import ClientDataset
 from repro.fed.aggregator import Aggregator
 from repro.fed.attackers import attacker_ids, poison_blob
 from repro.fed.availability import draw_one, draw_participants, make_availability
+from repro.fed.controller import make_controller
 from repro.fed.defense import UpdateGate
 from repro.fed.fleet import EventHeap
 from repro.fed.hierarchy import EdgeTier
@@ -174,6 +175,14 @@ def run_federated_async(
                  if cfg.attack is not None else frozenset())
     gate = (UpdateGate(cfg.defense, global_params)
             if cfg.defense is not None and cfg.defense.enabled else None)
+    # adaptive compression controller (None → static codec path, bit-exact).
+    # Encodes are tagged with the model version they trained from.
+    ctrl = make_controller(cfg)
+    if ctrl is not None and rule != "mean":
+        raise ValueError(
+            "adaptive compression requires aggregation rule 'mean': "
+            "mixed-codec rounds have no robust-vote decomposition"
+        )
     arrived_bytes = 0             # client-hop bytes presented to the gate
     n_buffered = 0
     acc_hist, loss_hist = [], []
@@ -210,8 +219,11 @@ def run_federated_async(
         nonlocal down_bytes
         blob, start_params = current_broadcast()
         down_bytes += len(blob)
+        if ctrl is not None:
+            ctrl.note_round(version)
         up_blob = train_client(
-            clients[k], start_params, cfg, optimizer, fp_step, qat_step, rng
+            clients[k], start_params, cfg, optimizer, fp_step, qat_step,
+            rng, controller=ctrl, client_id=k,
         )
         if k in attackers:
             # poison at dispatch (wire-valid re-encode); colluding cohorts
@@ -225,6 +237,8 @@ def run_federated_async(
             k, len(up_blob), t0 + t_down + t_comp, "up",
             now_s=t0 if clock is None else clock,
         )
+        if ctrl is not None:
+            ctrl.observe_upload(k, len(up_blob), t_up)
         total = t_down + t_comp + t_up
         events.push(t0 + total, (k, up_blob, version))
 
@@ -353,6 +367,8 @@ def run_federated_async(
         "goodput_fraction": summary.get("goodput_fraction", 1.0),
         "availability": cfg.availability.kind,
     }
+    if ctrl is not None:
+        telemetry["controller"] = ctrl.telemetry()
     if gate is not None:
         telemetry["defense"] = gate.telemetry()
         # extended ledger on the client hop: every arrived byte either

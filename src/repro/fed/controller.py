@@ -1,0 +1,375 @@
+"""Per-client adaptive compression control with generic error feedback.
+
+Contract. The static codec registry (``core.compression``) fixes ONE
+upstream codec for every client on every round. This module turns that into
+a closed control loop: each round, each client's upload codec is chosen
+from two measured signals —
+
+  - **channel goodput** (bytes/s), observed from the same per-transfer
+    metering the ``comm.channel`` model logs (``TransferEvent``): a client
+    whose link runs well below the fleet is a straggler risk, so it ships
+    the cheapest rung;
+  - **update divergence** (relative L2 of the local update,
+    ‖θ_k − θ‖ / ‖θ‖): large early-training updates tolerate coarse codecs,
+    small late-training updates are mostly redundant and can be shipped
+    SPARSE, provided the dropped mass is not lost —
+
+and the loss each encode incurs is never discarded: the controller keeps a
+per-client **error-feedback residual tree** (Sattler et al.,
+arXiv:1903.02891), folds it back into the weights before the next encode
+(``corrected = θ_k + residual``), and stores the new residual
+``corrected − decode(encode(corrected))`` — generic over codecs via
+``core.compression.compress_pytree``. The codec ladder spans the registry:
+"fp16"/"bf16" downcast, the paper's "ternary", plain "topk"
+(TOPK_DELTA varint records), and the composed "topk16"
+(top-k → fp16 downcast of the survivors) — mixed-codec rounds need no wire
+change because every record already carries its kind byte.
+
+When the chosen rung is the paper's ternary codec on the T-FedAvg path,
+the error-feedback-corrected weights flow through the SAME
+``client_update_payload`` fused-encode pre-pass as the static path (trained
+w_q scales, one fused quantize→pack launch), so the controller composes
+with — rather than forks — the QAT wire path.
+
+Determinism. The controller holds no RNG: selections are a pure function
+of (config, observation history), and observations arrive in the servers'
+deterministic event order — two runs with the same seeds produce the same
+rung sequence, the same bytes, and the same final weights
+(``tests/test_controller.py``). With ``FedConfig.controller = None`` (the
+default) no controller object is ever constructed and every byte, RNG draw
+and call order of the pre-controller servers is reproduced exactly.
+
+Telemetry lands in ``FedResult.telemetry["controller"]``: per-round rung
+counts, per-round residual-L2 trajectory, and upstream bytes by codec kind.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.comm.wire import encode_update
+from repro.core import fttq as fttq_mod
+from repro.core.compression import (
+    CodecSpec,
+    available_codecs,
+    compress_pytree,
+    decompress_pytree,
+)
+from repro.core.tfedavg import client_update_payload
+
+Pytree = Any
+
+# Ladder rungs the controller may select, highest fidelity first. Every
+# rung is a registered codec kind for quantizable leaves; non-quantizable
+# leaves follow ``ControllerConfig.residual_codec``.
+LADDER = ("fp16", "bf16", "ternary", "topk", "topk16")
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Serializable controller knobs (``FedConfig.controller``).
+
+    Attributes:
+      enabled: master switch; False behaves exactly like ``controller=None``
+        (no controller is constructed — the legacy path, bit-exact).
+      error_feedback: keep per-client residual trees and fold them back
+        before each encode. Off → the controller still picks codecs but
+        every encode is memoryless.
+      warmup_encodes: each client's first N uploads ship the paper's
+        ternary codec regardless of signals — the EWMAs need observations
+        before the policy can trust them.
+      divergence_high: relative-L2 threshold. At or above it the update is
+        "informative" and ships ternary (or fidelity_rung if the link is
+        fast); below it the update is mostly redundant and ships the
+        aggressive sparse rung, with error feedback carrying the rest.
+      slow_factor: a client whose goodput EWMA falls below
+        ``slow_factor × fleet-mean goodput`` is a straggler risk and ships
+        ``aggressive_rung`` regardless of divergence (0 disables).
+      fast_factor: a client faster than ``fast_factor × fleet mean`` whose
+        update diverges strongly may spend bytes on the fidelity rung
+        (0 disables — ternary stays the high-divergence choice).
+      aggressive_rung / fidelity_rung: ladder rungs for the two extremes.
+      topk_fraction: kept fraction for the topk/topk16 rungs.
+      residual_codec: codec for non-quantizable leaves on every rung.
+      ewma: smoothing factor for the goodput/divergence EWMAs
+        (new = ewma·obs + (1−ewma)·old).
+    """
+
+    enabled: bool = True
+    error_feedback: bool = True
+    warmup_encodes: int = 1
+    divergence_high: float = 0.05
+    slow_factor: float = 0.5
+    fast_factor: float = 0.0
+    aggressive_rung: str = "topk16"
+    fidelity_rung: str = "fp16"
+    topk_fraction: float = 0.05
+    residual_codec: str = "none"
+    ewma: float = 0.5
+
+    def __post_init__(self):
+        for field in ("aggressive_rung", "fidelity_rung"):
+            rung = getattr(self, field)
+            if rung not in LADDER:
+                raise ValueError(f"{field} {rung!r} not in ladder {LADDER}")
+        if self.residual_codec not in available_codecs():
+            raise ValueError(
+                f"unknown residual_codec {self.residual_codec!r}"
+            )
+        if not 0.0 < self.ewma <= 1.0:
+            raise ValueError(f"ewma must be in (0, 1], got {self.ewma}")
+
+
+def tree_l2(tree: Pytree) -> float:
+    """Global L2 norm over every floating leaf of a pytree."""
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating):
+            total += float(np.vdot(arr.astype(np.float64),
+                                   arr.astype(np.float64)))
+    return math.sqrt(total)
+
+
+def _tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def _tree_add(a: Pytree, b: Pytree | None) -> Pytree:
+    if b is None:
+        return a
+    return jax.tree_util.tree_map(lambda x, r: x + r, a, b)
+
+
+class CompressionController:
+    """The per-client control loop; one instance per federated run.
+
+    Servers drive it through four hooks:
+      - ``note_round(r)``   — tag subsequent encodes with round/version r
+        (telemetry bucketing only; the policy itself is round-free).
+      - ``client_payload(k, params_k, wq_tree, start_params)`` — the
+        encode hook ``train_client`` calls in place of the static path:
+        selects the rung, applies error feedback, returns the wire blob.
+      - ``observe_upload(k, nbytes, seconds)`` — goodput metering, fed
+        from the channel's per-transfer timings.
+      - ``telemetry()``     — the ``FedResult.telemetry["controller"]``
+        payload.
+    """
+
+    def __init__(self, cfg: ControllerConfig, fed_cfg: Any):
+        self.cfg = cfg
+        self.fed = fed_cfg  # FedConfig (duck-typed: algorithm, fttq, ...)
+        self._residual: dict[int, Pytree] = {}
+        self._goodput: dict[int, float] = {}
+        self._divergence: dict[int, float] = {}
+        self._encodes: dict[int, int] = {}
+        self._round = 0
+        # telemetry: per-round rung counts / residual L2 sums / bytes.
+        self._rung_counts: dict[int, dict[str, int]] = {}
+        self._residual_l2: dict[int, float] = {}
+        self._bytes_by_kind: dict[str, int] = {}
+        self._specs: dict[str, CodecSpec] = {}
+
+    # -- policy ------------------------------------------------------------
+
+    def spec_for(self, rung: str) -> CodecSpec:
+        """The directional codec spec one ladder rung resolves to."""
+        spec = self._specs.get(rung)
+        if spec is None:
+            spec = CodecSpec(
+                kind=rung,
+                residual=self.cfg.residual_codec,
+                fttq=self.fed.fttq,
+                topk_fraction=self.cfg.topk_fraction,
+                fused_encode=self.fed.fused_encode,
+            )
+            self._specs[rung] = spec
+        return spec
+
+    def select(self, client_id: int) -> str:
+        """Pick the ladder rung for client ``client_id``'s next upload —
+        a pure function of the observation EWMAs (no RNG)."""
+        k = int(client_id)
+        if self._encodes.get(k, 0) < self.cfg.warmup_encodes:
+            return "ternary"
+        div = self._divergence.get(k, float("inf"))
+        gp = self._goodput.get(k)
+        if gp is not None and self.cfg.slow_factor > 0 and self._goodput:
+            fleet_mean = sum(self._goodput.values()) / len(self._goodput)
+            if gp < self.cfg.slow_factor * fleet_mean:
+                return self.cfg.aggressive_rung
+        if div >= self.cfg.divergence_high:
+            if (gp is not None and self.cfg.fast_factor > 0 and self._goodput):
+                fleet_mean = sum(self._goodput.values()) / len(self._goodput)
+                if gp > self.cfg.fast_factor * fleet_mean:
+                    return self.cfg.fidelity_rung
+            return "ternary"
+        return self.cfg.aggressive_rung
+
+    # -- observations ------------------------------------------------------
+
+    def note_round(self, round_idx: int) -> None:
+        self._round = int(round_idx)
+
+    def observe_upload(self, client_id: int, nbytes: int,
+                       seconds: float) -> None:
+        """Fold one measured upload (the channel's ``TransferEvent`` view:
+        payload bytes over wall seconds including retransmissions) into the
+        client's goodput EWMA."""
+        if seconds <= 0:
+            return
+        k, a = int(client_id), self.cfg.ewma
+        gp = float(nbytes) / float(seconds)
+        old = self._goodput.get(k)
+        self._goodput[k] = gp if old is None else a * gp + (1 - a) * old
+
+    def _observe_divergence(self, k: int, params_k: Pytree,
+                            start_params: Pytree) -> float:
+        base = tree_l2(start_params)
+        div = tree_l2(_tree_sub(params_k, start_params)) / (base + 1e-12)
+        a = self.cfg.ewma
+        old = self._divergence.get(k)
+        self._divergence[k] = div if old is None else a * div + (1 - a) * old
+        return div
+
+    # -- the encode hook ---------------------------------------------------
+
+    def client_payload(self, client_id: int, params_k: Pytree,
+                       wq_tree: Pytree | None,
+                       start_params: Pytree) -> bytes:
+        """Encode one client's upload under the selected rung, with error
+        feedback: corrected = θ_k + residual_k; residual_k ← corrected −
+        decode(wire). Returns the serialized wire blob."""
+        k = int(client_id)
+        self._observe_divergence(k, params_k, start_params)
+        rung = self.select(k)
+        spec = self.spec_for(rung)
+        res = self._residual.get(k) if self.cfg.error_feedback else None
+        if rung == "ternary" and wq_tree is not None:
+            # the paper's QAT wire path: error-feedback-corrected weights
+            # through the client_update_payload fused-encode pre-pass, so
+            # the trained w_q scales survive rung selection.
+            corrected = _tree_add(params_k, res)
+            payload = client_update_payload(
+                corrected, wq_tree, self.fed.fttq, fused=spec.fused_encode
+            )
+            payload, _ = compress_pytree(payload, spec)
+            new_res = (
+                _tree_sub(corrected, decompress_pytree(payload))
+                if self.cfg.error_feedback else None
+            )
+        else:
+            ef_spec = dataclasses.replace(
+                spec, error_feedback=self.cfg.error_feedback
+            )
+            payload, new_res = compress_pytree(params_k, ef_spec, residual=res)
+        if self.cfg.error_feedback:
+            self._residual[k] = new_res
+        self._encodes[k] = self._encodes.get(k, 0) + 1
+        blob = encode_update(payload)
+        r = self._round
+        counts = self._rung_counts.setdefault(r, {})
+        counts[rung] = counts.get(rung, 0) + 1
+        if self.cfg.error_feedback:
+            self._residual_l2[r] = (
+                self._residual_l2.get(r, 0.0) + tree_l2(new_res)
+            )
+        self._bytes_by_kind[rung] = (
+            self._bytes_by_kind.get(rung, 0) + len(blob)
+        )
+        return blob
+
+    # -- reporting ---------------------------------------------------------
+
+    def residual_l2(self, client_id: int) -> float:
+        res = self._residual.get(int(client_id))
+        return 0.0 if res is None else tree_l2(res)
+
+    def telemetry(self) -> dict:
+        rounds = sorted(self._rung_counts)
+        return {
+            "enabled": True,
+            "error_feedback": self.cfg.error_feedback,
+            "rounds": rounds,
+            "rung_counts_per_round": [self._rung_counts[r] for r in rounds],
+            # Σ over that round's encodes of ‖residual‖₂ — the trajectory
+            # should stay bounded when error feedback is healthy.
+            "residual_l2_per_round": [
+                self._residual_l2.get(r, 0.0) for r in rounds
+            ],
+            "bytes_by_kind": dict(sorted(self._bytes_by_kind.items())),
+            "clients_seen": len(self._encodes),
+        }
+
+
+def make_controller(fed_cfg: Any) -> CompressionController | None:
+    """Controller for one run, or None when the config leaves it off —
+    the None path constructs NOTHING, so pre-controller runs stay
+    bit-exact."""
+    ctrl_cfg = getattr(fed_cfg, "controller", None)
+    if ctrl_cfg is None or not ctrl_cfg.enabled:
+        return None
+    return CompressionController(ctrl_cfg, fed_cfg)
+
+
+# --------------------------------------------------------------------------
+# Cohort-level policy for the vectorized fleet path.
+# --------------------------------------------------------------------------
+
+
+class FleetCohortController:
+    """The fleet approximation of the per-client loop (``fed/fleet.py``).
+
+    Fleet rounds stub out local SGD (payloads come from a pre-encoded
+    pool), so there is no per-client divergence signal and no per-client
+    residual state — the policy runs COHORT-LEVEL on the one signal the
+    fleet does measure: upload goodput. Payload pools are pre-encoded once
+    per rung; each round ships every cohort from the selected rung's pool.
+
+    Policy: warmup rounds ship ternary; afterwards, a round whose measured
+    mean upload goodput EWMA falls below ``slow_factor ×`` the first
+    observed goodput ships ``aggressive_rung``, else ternary. Deterministic
+    (no RNG): the trajectory is a pure function of the channel draws.
+    """
+
+    def __init__(self, cfg: ControllerConfig):
+        self.cfg = cfg
+        self._ewma: float | None = None
+        self._baseline: float | None = None
+        self._rounds = 0
+        self.rung_per_round: list[str] = []
+
+    def observe_round(self, nbytes: int, seconds: float) -> None:
+        """Fold one round's aggregate upload (Σ bytes, Σ seconds)."""
+        if seconds <= 0:
+            return
+        gp = float(nbytes) / float(seconds)
+        a = self.cfg.ewma
+        self._ewma = gp if self._ewma is None else a * gp + (1 - a) * self._ewma
+        if self._baseline is None:
+            self._baseline = gp
+
+    def select(self) -> str:
+        self._rounds += 1
+        if self._rounds <= self.cfg.warmup_encodes or self._ewma is None:
+            rung = "ternary"
+        elif (self.cfg.slow_factor > 0 and self._baseline is not None
+              and self._ewma < self.cfg.slow_factor * self._baseline):
+            rung = self.cfg.aggressive_rung
+        else:
+            rung = "ternary"
+        self.rung_per_round.append(rung)
+        return rung
+
+    def telemetry(self) -> dict:
+        return {
+            "enabled": True,
+            "cohort_policy": True,
+            "rung_per_round": list(self.rung_per_round),
+            "goodput_ewma": self._ewma,
+        }

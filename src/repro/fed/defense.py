@@ -32,6 +32,13 @@ the median toward itself), which also means a colluding cohort arriving
 before ``min_history`` honest scales can seed the history — the bound is a
 rate-limiter for gross outliers, not a consensus mechanism; subtle poisons
 are the majority-vote rule's job (``kernels.vote``).
+
+Determinism: the gate holds no RNG — verdicts and the running scale
+history are pure functions of the blob sequence presented, so identical
+seeds (hence identical client payload streams) give identical quarantine
+sets, ledger counts, and telemetry on every run. ``DefenseConfig = None``
+or ``enabled=False`` constructs no gate and reproduces the ungated ingest
+path bit-exactly.
 """
 
 from __future__ import annotations

@@ -40,6 +40,14 @@ What gets vectorized, and what each approximation means:
 Memory stays flat in the client count: the fleet state is a handful of
 float64/int64 arrays (links, masks, times) plus the chunk-bounded
 aggregator staging buffers — no per-client Python objects anywhere.
+
+Determinism: all draws (availability, links, participation, pool
+assignment, attacker ids) come from ``np.random.default_rng`` streams
+keyed on ``FedConfig.seed``, and the cohort controller
+(``fed.controller.FleetCohortController``) is RNG-free — a fleet round
+is reproducible byte-for-byte under a fixed seed, and every optional
+subsystem (hierarchy, defense, attack, controller) reproduces the
+pre-subsystem byte stream exactly when off.
 """
 
 from __future__ import annotations
@@ -52,11 +60,13 @@ import numpy as np
 
 from repro.comm import Channel
 from repro.core import fttq as fttq_mod
+from repro.core.compression import CodecSpec, compress_pytree
 from repro.core.tfedavg import client_update_payload
 from repro.comm.wire import encode_update
 from repro.fed.aggregator import Aggregator
 from repro.fed.attackers import attacker_ids, poison_blob
 from repro.fed.availability import draw_participants, make_availability
+from repro.fed.controller import FleetCohortController
 from repro.fed.defense import UpdateGate
 from repro.fed.hierarchy import EdgeTier, edges_of
 from repro.fed.simulation import FedConfig, broadcast_blob, resolve_rule
@@ -250,14 +260,18 @@ class FleetResult:
 
 
 def _payload_pool(
-    params: Pytree, cfg: FedConfig, fleet: FleetConfig
+    params: Pytree, cfg: FedConfig, fleet: FleetConfig,
+    spec: CodecSpec | None = None,
 ) -> tuple[list[bytes], np.ndarray]:
     """``update_pool`` distinct client payloads, pre-encoded once.
 
     Each is the template perturbed by seeded noise, pushed through the
     REAL upstream encode path (FTTQ quantize → fused pack → wire), so
     fleet bytes and aggregation exercise the same kernels and codecs as
-    the per-client servers — only local SGD is stubbed out.
+    the per-client servers — only local SGD is stubbed out. A non-ternary
+    ``spec`` (a controller ladder rung) encodes the same perturbed trees
+    through that codec instead — the rng stream is identical per call, so
+    slot j of every rung's pool encodes the same underlying update.
     """
     rng = np.random.default_rng(cfg.seed + 17)
     leaves, treedef = jax.tree_util.tree_flatten(params)
@@ -269,7 +283,9 @@ def _payload_pool(
             for leaf in leaves
         ]
         tree = jax.tree_util.tree_unflatten(treedef, perturbed)
-        if cfg.algorithm == "tfedavg":
+        if spec is not None and spec.kind != "ternary":
+            tree, _ = compress_pytree(tree, spec)
+        elif cfg.algorithm == "tfedavg":
             wq = fttq_mod.init_wq_tree(tree, cfg.fttq)
             tree = client_update_payload(tree, wq, cfg.fttq,
                                          fused=cfg.fused_encode)
@@ -404,6 +420,22 @@ def _setup(params, cfg, fleet):
     channel = Channel(cfg.channel, cfg.n_clients, seed=cfg.seed + 1)
     avail = make_availability(cfg.availability, cfg.n_clients, seed=cfg.seed)
     pool, sizes = _payload_pool(params, cfg, fleet)
+    # cohort-level adaptive compression (``fed/controller.py``): payload
+    # pools are pre-encoded once per ladder rung; each round ships from the
+    # rung the goodput policy selects. Off (the default) → single pool,
+    # bit-exact with pre-controller fleets.
+    fctrl = None
+    pools: dict[str, tuple[list, np.ndarray]] = {}
+    if cfg.controller is not None and cfg.controller.enabled:
+        fctrl = FleetCohortController(cfg.controller)
+        agg_rung = cfg.controller.aggressive_rung
+        agg_spec = CodecSpec(
+            kind=agg_rung, residual=cfg.controller.residual_codec,
+            fttq=cfg.fttq, topk_fraction=cfg.controller.topk_fraction,
+            fused_encode=cfg.fused_encode,
+        )
+        pools["ternary"] = (pool, sizes)
+        pools[agg_rung] = _payload_pool(params, cfg, fleet, spec=agg_spec)
     # Byzantine layer: the attacker cohort ships POISONED TWINS of the pool
     # (slot P+j twins slot j — see ``_pool_indices``); the gate, when the
     # defense is on, vets payloads cohort-level at ingest.
@@ -414,17 +446,29 @@ def _setup(params, cfg, fleet):
         pool = pool + [poison_blob(b, cfg.attack, client_id=j)
                        for j, b in enumerate(pool)]
         sizes = np.array([len(b) for b in pool], dtype=np.int64)
+        for rung, (rp, _rs) in list(pools.items()):
+            twinned = rp + [poison_blob(b, cfg.attack, client_id=j)
+                            for j, b in enumerate(rp)]
+            pools[rung] = (
+                twinned, np.array([len(b) for b in twinned], dtype=np.int64)
+            )
     gate = (UpdateGate(cfg.defense, params)
             if cfg.defense is not None and cfg.defense.enabled else None)
     bcast = broadcast_blob(params, cfg)
     rule, trim_frac = resolve_rule(cfg)
+    if fctrl is not None and rule != "mean":
+        raise ValueError(
+            "adaptive compression requires aggregation rule 'mean': "
+            "mixed-codec rounds have no robust-vote decomposition"
+        )
     tier = (EdgeTier(cfg.hierarchy, cfg.fttq, cfg.n_clients,
                      fused_encode=cfg.fused_encode,
                      rule=rule, trim_frac=trim_frac)
             if cfg.hierarchy.enabled else None)
     agg = (Aggregator(chunk_c=cfg.agg_chunk_c, rule=rule, trim_frac=trim_frac)
            if tier is None else None)
-    return rng, channel, avail, pool, sizes, bcast, tier, agg, atk, gate
+    return (rng, channel, avail, pool, sizes, bcast, tier, agg, atk, gate,
+            fctrl, pools)
 
 
 def _defense_extra(gate, tier, client_up_bytes, q_clients, q_bytes):
@@ -467,9 +511,8 @@ def _telemetry(channel, tier, cfg, *, extra=None):
 
 
 def _run_fleet_sync(params, cfg, fleet) -> FleetResult:
-    rng, channel, avail, pool, sizes, bcast, tier, agg, atk, gate = _setup(
-        params, cfg, fleet
-    )
+    (rng, channel, avail, pool, sizes, bcast, tier, agg, atk, gate,
+     fctrl, pools) = _setup(params, cfg, fleet)
     P = max(1, fleet.update_pool)     # honest pool size (twins live at P+j)
     deadline = (cfg.channel.deadline_s
                 if cfg.channel.deadline_s > 0 else float("inf"))
@@ -483,6 +526,9 @@ def _run_fleet_sync(params, cfg, fleet) -> FleetResult:
     mean = None
     t_now = 0.0
     for _ in range(cfg.rounds):
+        if fctrl is not None:
+            # cohort policy: the whole round ships from one rung's pool.
+            pool, sizes = pools[fctrl.select()]
         ids, wait_s = _draw_or_wait(avail, t_now, n_sel, cfg.n_clients, rng)
         pool_idx = _pool_indices(ids, P, atk)
         down = channel.transfer_batch(
@@ -494,6 +540,8 @@ def _run_fleet_sync(params, cfg, fleet) -> FleetResult:
         )
         up = channel.transfer_batch(ids, sizes[pool_idx], "up",
                                     compat=fleet.compat)
+        if fctrl is not None:
+            fctrl.observe_round(int(sizes[pool_idx].sum()), float(up.sum()))
         total = down + comp + up
         ok = total <= deadline
         if not ok.any():          # never lose a round: keep the fastest
@@ -525,6 +573,10 @@ def _run_fleet_sync(params, cfg, fleet) -> FleetResult:
         parts_hist.append(int(surv.size) - q_upd)
         dropped_hist.append(n_dropped)
 
+    extra = _defense_extra(gate, tier, client_up_bytes,
+                           q_clients_total, q_bytes_total) or {}
+    if fctrl is not None:
+        extra["controller"] = fctrl.telemetry()
     return FleetResult(
         rounds_run=cfg.rounds,
         participants_per_round=parts_hist,
@@ -533,18 +585,24 @@ def _run_fleet_sync(params, cfg, fleet) -> FleetResult:
         upload_bytes=up_bytes,
         download_bytes=down_bytes,
         final_update=mean,
-        telemetry=_telemetry(
-            channel, tier, cfg,
-            extra=_defense_extra(gate, tier, client_up_bytes,
-                                 q_clients_total, q_bytes_total),
-        ),
+        telemetry=_telemetry(channel, tier, cfg, extra=extra),
     )
 
 
 def _run_fleet_async(params, cfg, fleet) -> FleetResult:
-    rng, channel, avail, pool, sizes, bcast, tier, agg, atk, gate = _setup(
-        params, cfg, fleet
-    )
+    (rng, channel, avail, pool, sizes, bcast, tier, agg, atk, gate,
+     fctrl, pools) = _setup(params, cfg, fleet)
+    if fctrl is not None:
+        # arrivals outlive rung switches, so the rung pools concatenate
+        # into ONE indexable pool: an event's payload index stays valid no
+        # matter which rung later dispatches select.
+        rung_offset: dict[str, int] = {}
+        combined: list[bytes] = []
+        for rung, (rp, _rs) in pools.items():
+            rung_offset[rung] = len(combined)
+            combined = combined + rp
+        pool = combined
+        sizes = np.array([len(b) for b in pool], dtype=np.int64)
     P = max(1, fleet.update_pool)     # honest pool size (twins live at P+j)
     n_conc = cfg.max_concurrency or max(
         int(np.ceil(cfg.participation * cfg.n_clients)), 1
@@ -568,6 +626,10 @@ def _run_fleet_async(params, cfg, fleet) -> FleetResult:
     def dispatch(ids: np.ndarray, t0: float) -> None:
         nonlocal down_bytes
         pool_idx = _pool_indices(ids, P, atk)
+        if fctrl is not None:
+            # cohort policy at dispatch time: this batch ships from the
+            # selected rung's slice of the combined pool.
+            pool_idx = pool_idx + rung_offset[fctrl.select()]
         down = channel.transfer_batch(ids, len(bcast), "down",
                                       share_nic=fleet.share_nic,
                                       compat=fleet.compat)
@@ -576,6 +638,8 @@ def _run_fleet_async(params, cfg, fleet) -> FleetResult:
         )
         up = channel.transfer_batch(ids, sizes[pool_idx], "up",
                                     compat=fleet.compat)
+        if fctrl is not None:
+            fctrl.observe_round(int(sizes[pool_idx].sum()), float(up.sum()))
         down_bytes += len(bcast) * int(ids.size)
         heap.push_many(
             t0 + down + comp + up,
@@ -656,6 +720,8 @@ def _run_fleet_async(params, cfg, fleet) -> FleetResult:
                              q_clients_total, q_bytes_total)
     if defense:
         extra.update(defense)
+    if fctrl is not None:
+        extra["controller"] = fctrl.telemetry()
     return FleetResult(
         rounds_run=version,
         participants_per_round=parts_hist,

@@ -33,6 +33,12 @@ telemetry consumers).
 Weights compose exactly: an edge's upstream record carries weight
 W_e = Σ_{k∈e} w_k, so the root mean Σ_e W_e·mean_e / Σ_e W_e equals the
 flat mean Σ_k w_k·θ_k / Σ_k w_k whenever the edge hop is lossless.
+
+Determinism: client→edge placement is a pure hash of the client id
+(``edge_of``), folds hold no RNG, and every requantize uses the fixed
+server Δ — so a seeded run with the tier on is reproducible end to end,
+and ``HierarchyConfig(n_edges=0)`` (the default, flat topology)
+reproduces pre-hierarchy runs bit-exactly.
 """
 
 from __future__ import annotations

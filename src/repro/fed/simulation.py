@@ -55,6 +55,11 @@ from repro.fed.availability import (
     draw_participants,
     make_availability,
 )
+from repro.fed.controller import (
+    CompressionController,
+    ControllerConfig,
+    make_controller,
+)
 from repro.fed.defense import DefenseConfig, UpdateGate
 from repro.fed.hierarchy import EdgeTier, HierarchyConfig
 from repro.optim import Optimizer
@@ -125,6 +130,13 @@ class FedConfig:
     # outcome:  shipped == ingested + dropped + quarantined.
     defense: DefenseConfig | None = None
     attack: AttackConfig | None = None
+    # --- adaptive compression controller ----------------------------------
+    # None / enabled=False → the static upstream codec path, bit-exact with
+    # pre-controller runs. Enabled → fed/controller.py selects each
+    # client's upload codec per round from measured goodput + update
+    # divergence, with per-client error-feedback residual state; telemetry
+    # lands in FedResult.telemetry["controller"].
+    controller: "ControllerConfig | None" = None
 
 
 @dataclasses.dataclass
@@ -271,19 +283,29 @@ def train_client(
     fp_step,
     qat_step,
     rng: np.random.Generator,
+    *,
+    controller: CompressionController | None = None,
+    client_id: int = -1,
 ) -> bytes:
     """One client's round: train locally from the decoded broadcast
     (``receive_broadcast``), serialize the upstream payload through the
     upstream codec spec (QAT ternary weights pass through untouched; the
-    residual codec compresses the raw bias/norm leaves)."""
+    residual codec compresses the raw bias/norm leaves). With an adaptive
+    ``controller``, the encode instead goes through its per-client rung
+    selection + error feedback (``controller.client_payload``); training
+    itself is identical either way."""
     params_k = start_params
     opt_state = optimizer.init(params_k)
+    wq = None
     if cfg.algorithm == "tfedavg":
         wq = fttq_mod.init_wq_tree(params_k, cfg.fttq)
         for xb, yb in client.batches(cfg.batch_size, rng, cfg.local_epochs):
             params_k, wq, opt_state, _ = qat_step(
                 params_k, wq, opt_state, jnp.asarray(xb), jnp.asarray(yb)
             )
+        if controller is not None:
+            return controller.client_payload(client_id, params_k, wq,
+                                             start_params)
         # gate on the RESOLVED upstream spec (not cfg.fused_encode directly)
         # so an explicit cfg.compression's fused_encode flag is honored on
         # this path exactly as broadcast_blob honors the downstream one.
@@ -296,6 +318,9 @@ def train_client(
             params_k, opt_state, _ = fp_step(
                 params_k, opt_state, jnp.asarray(xb), jnp.asarray(yb)
             )
+        if controller is not None:
+            return controller.client_payload(client_id, params_k, None,
+                                             start_params)
         payload = params_k
     payload, _ = compress_pytree(payload, resolve_compression(cfg).upstream)
     return encode_update(payload)
@@ -343,8 +368,19 @@ def run_federated_sync(
     gate = (UpdateGate(cfg.defense, global_params)
             if cfg.defense is not None and cfg.defense.enabled else None)
     gated_bytes = 0            # survivor bytes presented to the gate
+    # adaptive compression controller (None → static codec path, bit-exact).
+    ctrl = make_controller(cfg)
+    if ctrl is not None and rule != "mean":
+        raise ValueError(
+            "adaptive compression requires aggregation rule 'mean': "
+            "mixed-codec rounds have no robust-vote decomposition"
+        )
+    up_bytes_per_round = []
 
     for r in range(cfg.rounds):
+        if ctrl is not None:
+            ctrl.note_round(r)
+        round_up0 = up_bytes
         # ---- selection (from the clients ONLINE right now) --------------
         wait_s = 0.0
         selected = draw_participants(avail, t_now, n_sel, len(clients), rng)
@@ -383,13 +419,18 @@ def run_federated_sync(
             if pt > deadline and arrivals:
                 continue            # decidably late; round already safe
             up_blob = train_client(
-                clients[k], start_params, cfg, optimizer, fp_step, qat_step, rng
+                clients[k], start_params, cfg, optimizer, fp_step, qat_step,
+                rng, controller=ctrl, client_id=k,
             )
             if k in attackers:
                 # decode → poison → re-encode: the frame stays wire-valid,
                 # only the content defense can catch it.
                 up_blob = poison_blob(up_blob, cfg.attack, k, round_idx=r)
             t_up = channel.transfer(k, len(up_blob), "up")
+            if ctrl is not None:
+                # the same metered view Channel.log records (TransferEvent):
+                # payload bytes over seconds including retransmissions.
+                ctrl.observe_upload(k, len(up_blob), t_up)
             arrivals.append((pt + t_up, k, up_blob))
 
         # ---- straggler mitigation: emergent from the channel ------------
@@ -467,6 +508,8 @@ def run_federated_sync(
                 ))
             global_params = server_aggregate(updates)
 
+        up_bytes_per_round.append(up_bytes - round_up0)
+
         if (r + 1) % eval_every == 0 or r == cfg.rounds - 1:
             acc, ls = eval_fn(global_params)
             acc_hist.append(float(acc))
@@ -483,7 +526,12 @@ def run_federated_sync(
         "retries": summary.get("retries", 0),
         "goodput_fraction": summary.get("goodput_fraction", 1.0),
         "availability": cfg.availability.kind,
+        # upstream wire bytes booked per round (client hop + any edge→root
+        # hop) — the bytes-to-target-accuracy benches integrate this.
+        "upload_bytes_per_round": up_bytes_per_round,
     }
+    if ctrl is not None:
+        telemetry["controller"] = ctrl.telemetry()
     if gate is not None:
         telemetry["defense"] = gate.telemetry()
         # extended ledger at the gate: every survivor byte presented is

@@ -1,0 +1,318 @@
+"""Adaptive compression controller: error-feedback residual round trip,
+controller-off bit-exactness vs the pre-controller servers, determinism
+under fixed seeds, and mixed-codec rounds through the Aggregator's dense
+fallback (mean exactness + the robust-rule refusal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import decode_update, encode_update
+from repro.core import CodecSpec, compress_pytree, decompress_pytree
+from repro.fed import (
+    Aggregator,
+    ControllerConfig,
+    DefenseConfig,
+    FedConfig,
+    FleetConfig,
+    run_federated,
+    run_fleet,
+)
+from repro.fed.controller import LADDER, CompressionController, make_controller
+
+
+def _tree(seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "layer": {
+            "w": jax.random.normal(k1, (48, 24)),
+            "bias": jax.random.normal(k2, (24,)) * 0.1,
+        },
+        "norm_scale": jnp.arange(8.0) / 8.0,
+    }
+
+
+def _l2(tree):
+    return sum(
+        float(jnp.sum(jnp.asarray(x, jnp.float32) ** 2))
+        for x in jax.tree_util.tree_leaves(tree)
+    ) ** 0.5
+
+
+@pytest.fixture(scope="module")
+def fed_task():
+    from repro.data import partition_iid, synthetic_classification
+    from repro.models.paper_models import init_mlp_mnist, mlp_mnist
+
+    x, y, xt, yt = synthetic_classification(
+        jax.random.PRNGKey(0), 600, 10, 784, noise=3.0, n_test=100
+    )
+    clients = partition_iid(x, y, 4)
+    params = init_mlp_mnist(jax.random.PRNGKey(1))
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+
+    def eval_fn(p):
+        logits = mlp_mnist(p, xt_j)
+        return float(jnp.mean(jnp.argmax(logits, -1) == yt_j)), 0.0
+
+    return clients, params, mlp_mnist, eval_fn
+
+
+def _run(fed_task, ctrl, *, mode="sync", rounds=3, seed=3, **kw):
+    from repro.optim import adam
+
+    clients, params, apply_fn, eval_fn = fed_task
+    cfg = FedConfig(algorithm="tfedavg", mode=mode, participation=1.0,
+                    local_epochs=1, batch_size=32, rounds=rounds, seed=seed,
+                    controller=ctrl, **kw)
+    return run_federated(apply_fn, params, clients, cfg, adam(1e-3),
+                         eval_fn, eval_every=rounds)
+
+
+# --------------------------------------------------------------------------
+# Error-feedback residual round trip.
+# --------------------------------------------------------------------------
+
+
+def test_error_feedback_residual_roundtrip():
+    """The STC telescoping property: encoding the SAME tree repeatedly with
+    the residual folded back makes the running mean of the decodes converge
+    to the true tree (Σ decode_t = n·tree − residual_n), so the mean beats
+    any one-shot lossy encode — and the carried residual stays bounded
+    rather than accumulating."""
+    tree = _tree(2)
+    ef_spec = CodecSpec(kind="topk", topk_fraction=0.1, error_feedback=True)
+
+    acc = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    res = None
+    n = 6
+    for _ in range(n):
+        wire, res = compress_pytree(tree, ef_spec, residual=res)
+        acc = jax.tree_util.tree_map(
+            lambda a, d: a + d, acc, decompress_pytree(wire)
+        )
+    mean = jax.tree_util.tree_map(lambda a: a / n, acc)
+
+    def rel_err(got):
+        return _l2(jax.tree_util.tree_map(
+            lambda a, b: a - b, got, tree)) / _l2(tree)
+
+    one_shot, no_res = compress_pytree(
+        tree, CodecSpec(kind="topk", topk_fraction=0.1)
+    )
+    assert no_res is None
+    assert rel_err(mean) < rel_err(decompress_pytree(one_shot))
+    # feedback drains: a dropped coordinate waits at most ~1/topk_fraction
+    # encodes before its accumulated residual makes the top-k cut, so the
+    # residual plateaus near ‖tree‖/fraction instead of growing without
+    # bound — keep encoding and check it stays under that ceiling.
+    for _ in range(2 * n):
+        _, res = compress_pytree(tree, ef_spec, residual=res)
+    assert _l2(res) < _l2(tree) / ef_spec.topk_fraction
+
+
+def test_error_feedback_off_matches_legacy_bytes():
+    """EF-off (the default spec) returns no residual and its serialized
+    wire bytes are deterministic call to call."""
+    tree = _tree(5)
+    spec = CodecSpec(kind="topk16", topk_fraction=0.2)
+    wire_a, res_a = compress_pytree(tree, spec)
+    wire_b, res_b = compress_pytree(tree, spec)
+    assert res_a is None and res_b is None
+    assert encode_update(wire_a) == encode_update(wire_b)
+
+
+def test_residual_tree_shapes_match_input():
+    """EF residual trees stay structure-aligned with the input so they can
+    be carried round to round (zeros for losslessly-shipped leaves)."""
+    tree = _tree(7)
+    _, res = compress_pytree(
+        tree, CodecSpec(kind="ternary", error_feedback=True)
+    )
+    for got, want in zip(jax.tree_util.tree_leaves(res),
+                         jax.tree_util.tree_leaves(tree)):
+        assert np.shape(got) == np.shape(want)
+    # the raw-shipped norm_scale leaf round-trips exactly: zero residual
+    assert float(jnp.max(jnp.abs(res["norm_scale"]))) == 0.0
+
+
+# --------------------------------------------------------------------------
+# Controller-off bit-exactness + determinism.
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_controller_off_bitexact(fed_task, mode):
+    """controller=None (default) and ControllerConfig(enabled=False) both
+    reproduce the pre-controller servers exactly — same bytes, same
+    accuracy trajectory, and no controller telemetry key."""
+    r_none = _run(fed_task, None, mode=mode)
+    r_off = _run(fed_task, ControllerConfig(enabled=False), mode=mode)
+    assert r_none.upload_bytes == r_off.upload_bytes
+    assert r_none.download_bytes == r_off.download_bytes
+    assert r_none.accuracy == r_off.accuracy
+    assert "controller" not in r_none.telemetry
+    assert "controller" not in r_off.telemetry
+    assert make_controller(FedConfig(controller=None)) is None
+    assert make_controller(FedConfig(
+        controller=ControllerConfig(enabled=False))) is None
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_controller_deterministic_under_fixed_seed(fed_task, mode):
+    ctrl = ControllerConfig(warmup_encodes=1, divergence_high=1e9)
+    a = _run(fed_task, ctrl, mode=mode)
+    b = _run(fed_task, ctrl, mode=mode)
+    assert a.upload_bytes == b.upload_bytes
+    assert a.accuracy == b.accuracy
+    assert a.telemetry["controller"] == b.telemetry["controller"]
+    # divergence_high=1e9 forces the aggressive rung after warmup, so the
+    # adaptive run must ship fewer upstream bytes than static ternary
+    static = _run(fed_task, None, mode=mode)
+    assert a.upload_bytes < static.upload_bytes
+    counts = a.telemetry["controller"]["rung_counts_per_round"]
+    assert any("topk16" in c for c in counts)
+    assert any("ternary" in c for c in counts)  # the warmup encodes
+
+
+def test_controller_policy_is_pure_function_of_observations():
+    """Same observation sequence → same rung sequence; no RNG anywhere."""
+    fed = FedConfig(controller=ControllerConfig(
+        warmup_encodes=1, divergence_high=0.05, slow_factor=0.5))
+
+    def drive():
+        c = CompressionController(fed.controller, fed)
+        rungs = []
+        for r in range(5):
+            c.note_round(r)
+            c.observe_upload(0, 10_000, 1.0)     # slow client
+            c.observe_upload(1, 10_000, 0.01)    # fast client
+            rungs.append((c.select(0), c.select(1)))
+            for k in (0, 1):
+                c._encodes[k] = c._encodes.get(k, 0) + 1
+        return rungs
+
+    first = drive()
+    assert first == drive()
+    assert first[0] == ("ternary", "ternary")          # warmup
+    assert first[-1] == ("topk16", "ternary")          # slow link → sparse
+    for pair in first:
+        assert all(rung in LADDER for rung in pair)
+
+
+def test_fleet_controller_deterministic_and_off_bitexact():
+    from repro.models.paper_models import init_mlp_mnist
+
+    params = init_mlp_mnist(jax.random.PRNGKey(1))
+    base = dict(algorithm="tfedavg", mode="sync", n_clients=64,
+                participation=0.25, rounds=4, seed=0)
+    off = run_fleet(params, FedConfig(**base), FleetConfig(update_pool=2))
+    ctrl_cfg = FedConfig(**base, controller=ControllerConfig(
+        warmup_encodes=1, slow_factor=10.0))
+    on1 = run_fleet(params, ctrl_cfg, FleetConfig(update_pool=2))
+    on2 = run_fleet(params, ctrl_cfg, FleetConfig(update_pool=2))
+    assert on1.upload_bytes == on2.upload_bytes
+    assert on1.telemetry["controller"] == on2.telemetry["controller"]
+    rungs = on1.telemetry["controller"]["rung_per_round"]
+    assert rungs[0] == "ternary"                       # warmup round
+    assert "topk16" in rungs                           # slow_factor=10 fires
+    assert on1.upload_bytes < off.upload_bytes
+    # controller disabled → byte-identical to the legacy fleet path
+    off2 = run_fleet(
+        params,
+        FedConfig(**base, controller=ControllerConfig(enabled=False)),
+        FleetConfig(update_pool=2),
+    )
+    assert off.upload_bytes == off2.upload_bytes
+    assert "controller" not in off2.telemetry
+
+
+# --------------------------------------------------------------------------
+# Mixed-codec rounds through the Aggregator.
+# --------------------------------------------------------------------------
+
+
+def _client_blob(tree, kind):
+    wire, _ = compress_pytree(tree, CodecSpec(kind=kind, topk_fraction=0.25))
+    return encode_update(wire)
+
+
+def _dense(blob):
+    return decompress_pytree(decode_update(blob))
+
+
+def test_mixed_codec_round_mean_matches_dense_reference():
+    """One ternary + one topk16 client on the same leaf paths: the fused
+    path's fallback detour must equal the dense weighted mean."""
+    trees = [
+        {"w": jax.random.normal(jax.random.PRNGKey(i), (16, 8)),
+         "bias": jax.random.normal(jax.random.PRNGKey(10 + i), (8,))}
+        for i in range(2)
+    ]
+    blobs = [_client_blob(trees[0], "ternary"),
+             _client_blob(trees[1], "topk16")]
+    weights = [1.0, 3.0]
+
+    agg = Aggregator(chunk_c=4, rule="mean")
+    for blob, w in zip(blobs, weights):
+        agg.add(blob, weight=w)
+    out = agg.finalize()
+
+    dense = [_dense(b) for b in blobs]
+    tot = sum(weights)
+    ref = jax.tree_util.tree_map(
+        lambda a, b: (weights[0] * a + weights[1] * b) / tot, *dense)
+    for key in ("w", "bias"):
+        np.testing.assert_allclose(np.asarray(out[key]),
+                                   np.asarray(ref[key]), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_mixed_codec_reset_keeps_pure_ternary_rounds_exact():
+    """A reused Aggregator that saw a mixed round must produce bit-identical
+    output for a later pure-ternary round (reset clears the fallback-touched
+    state; stale zeroed accumulators never re-enter the sum)."""
+    trees = [
+        {"w": jax.random.normal(jax.random.PRNGKey(i), (16, 8))}
+        for i in range(2)
+    ]
+    t_blobs = [_client_blob(t, "ternary") for t in trees]
+
+    fresh = Aggregator(chunk_c=4, rule="mean")
+    for b in t_blobs:
+        fresh.add(b, weight=1.0)
+    want = fresh.finalize()
+
+    reused = Aggregator(chunk_c=4, rule="mean")
+    reused.add(t_blobs[0], weight=1.0)
+    reused.add(_client_blob(trees[1], "fp16"), weight=1.0)
+    reused.finalize(reset=True)
+    for b in t_blobs:
+        reused.add(b, weight=1.0)
+    got = reused.finalize()
+    assert np.asarray(want["w"]).tobytes() == np.asarray(got["w"]).tobytes()
+
+
+def test_mixed_codec_robust_rules_refuse():
+    agg = Aggregator(chunk_c=4, rule="majority")
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 8))}
+    agg.add(_client_blob(tree, "ternary"), weight=1.0)
+    with pytest.raises(ValueError, match="mixed wire kinds"):
+        agg.add(_client_blob(tree, "fp16"), weight=1.0)
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_controller_requires_mean_rule(fed_task, mode):
+    with pytest.raises(ValueError, match="adaptive compression requires"):
+        _run(fed_task, ControllerConfig(), mode=mode,
+             defense=DefenseConfig(enabled=True, rule="majority"))
+
+
+def test_controller_config_validation():
+    with pytest.raises(ValueError, match="ladder"):
+        ControllerConfig(aggressive_rung="gzip")
+    with pytest.raises(ValueError, match="ewma"):
+        ControllerConfig(ewma=1.5)
+    with pytest.raises(ValueError, match="residual_codec"):
+        ControllerConfig(residual_codec="nope")
